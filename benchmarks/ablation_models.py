@@ -1,0 +1,50 @@
+"""Ablation over the learning model (paper §III rationale):
+chained DTs (paper) vs independent DTs vs regression baseline vs the
+beyond-paper chained random forest -- evaluated on held-out grid-search
+logs by exact-argmin hit-rate and realized makespan ratio."""
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+from repro.core.estimator import BlockSizeEstimator
+from repro.core.gridsearch import grid_search, grid_stats
+from repro.data.datasets import gaussian_blobs
+
+from benchmarks.common import ENV64, build_training_log, csv_row
+
+HELD_OUT = [(3072, 40, "kmeans"), (1536, 80, "rf"), (768, 160, "kmeans"),
+            (6144, 20, "rf")]
+
+
+def run(verbose: bool = True):
+    log = build_training_log(verbose=verbose)
+    # pre-compute held-out grids once (they are real executions)
+    grids = {}
+    for i, (n, m, algo) in enumerate(HELD_OUT):
+        X, y = gaussian_blobs(n, m, seed=900 + i)
+        _, grid = grid_search(X, y, algo, ENV64, mult=1)
+        grids[(n, m, algo)] = grid
+    out = {}
+    for model in ("tree", "forest", "independent", "regression"):
+        est = BlockSizeEstimator(model).fit(log)
+        hits, ratios = [], []
+        for (n, m, algo), grid in grids.items():
+            st = grid_stats(grid)
+            pr, pc = est.predict_partitions(n, m, algo, ENV64.features())
+            t = grid.get((pr, pc), float("inf"))
+            if math.isinf(t):
+                t = st["worst"]
+            hits.append((pr, pc) == st["best_part"])
+            ratios.append(st["avg"] / t)
+        out[model] = {"hit_rate": float(np.mean(hits)),
+                      "ratio_avg": float(np.mean(ratios))}
+        csv_row(f"ablation/{model}", 0.0,
+                f"hit_rate={out[model]['hit_rate']:.2f};"
+                f"ratio_avg={out[model]['ratio_avg']:.2f}")
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,81 @@
+"""Kernel-level benchmarks: (a) Pallas interpret-mode correctness-at-scale
+timing vs the jnp reference (CPU-indicative only), (b) the kernel tile
+autotuner evaluated against exhaustive search over the v5e tile cost model
+(makespan-style ratios, the paper's protocol at BlockSpec granularity)."""
+from __future__ import annotations
+
+import math
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.kerneltune import (KernelTuner, build_training_log,
+                                   grid_search_matmul, matmul_tile_time)
+from repro.kernels import ops
+from repro.kernels.ref import flash_attention_ref, matmul_ref
+
+from benchmarks.common import csv_row
+
+
+def _time(fn, *args, reps=3):
+    fn(*args).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    out.block_until_ready()
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def kernels(verbose=True):
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.normal(size=(256, 256)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(256, 256)), jnp.float32)
+    us_ref = _time(lambda x, y: matmul_ref(x, y), a, b)
+    csv_row("kernel/matmul_ref_256", us_ref, "jnp_oracle")
+    us_pal = _time(lambda x, y: ops.matmul(x, y, block_m=128, block_n=128,
+                                           block_k=128), a, b)
+    csv_row("kernel/matmul_pallas_interp_256", us_pal,
+            "interpret_mode;correctness_path")
+    q = jnp.asarray(rng.normal(size=(1, 256, 4, 64)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 256, 4, 64)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(1, 256, 4, 64)), jnp.float32)
+    us_far = _time(lambda q, k, v: flash_attention_ref(q, k, v), q, k, v)
+    csv_row("kernel/flash_ref_256", us_far, "jnp_oracle")
+    us_fap = _time(lambda q, k, v: ops.flash_attention(
+        q, k, v, block_q=64, block_k=64), q, k, v)
+    csv_row("kernel/flash_pallas_interp_256", us_fap,
+            "interpret_mode;correctness_path")
+
+
+def tuner(verbose=True):
+    log = build_training_log(n_shapes=40)
+    tun = KernelTuner().fit(log)
+    rng = np.random.default_rng(1)
+    ratios, hits = [], []
+    for _ in range(12):                       # held-out shapes
+        m = int(2 ** rng.integers(7, 14))
+        k = int(2 ** rng.integers(7, 13))
+        n = int(2 ** rng.integers(7, 14))
+        _, grid = grid_search_matmul(m, k, n)
+        finite = {kk: v for kk, v in grid.items() if math.isfinite(v)}
+        best_key = min(finite, key=finite.get)
+        bm, bn = tun.predict(m, k, n)
+        t = grid.get((bm, bn), max(finite.values()))
+        if math.isinf(t):
+            t = max(finite.values())
+        ratios.append(t / finite[best_key])
+        hits.append((bm, bn) == best_key)
+    csv_row("kernel/tile_tuner", 0.0,
+            f"t_over_best={float(np.mean(ratios)):.3f};"
+            f"hit_rate={float(np.mean(hits)):.2f}")
+
+
+def run(verbose=True):
+    kernels(verbose)
+    tuner(verbose)
+
+
+if __name__ == "__main__":
+    run()

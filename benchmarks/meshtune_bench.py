@@ -1,0 +1,58 @@
+"""Beyond-paper benchmark: the chained-DT cascade predicting (dp, mb) mesh
+factorizations for the assigned LM cells, evaluated leave-one-arch-out with
+makespan ratios against the modeled grid (the paper's Table III protocol at
+the TPU layer)."""
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+from repro.configs import ARCH_IDS, SHAPES, get_config
+from repro.core.log import ExecutionLog
+from repro.core.meshtune import MeshTuner, grid_search_cell, tune_all
+
+from benchmarks.common import csv_row
+
+
+def run(chips: int = 256, verbose: bool = True):
+    rows = []
+    for held in ARCH_IDS:
+        train_archs = [a for a in ARCH_IDS if a != held]
+        log, _ = tune_all(train_archs, chips=chips)
+        tuner = MeshTuner(chips).fit(log)
+        cfg = get_config(held)
+        for sn in ("train_4k", "prefill_32k", "decode_32k"):
+            if sn in cfg.skip_shapes:
+                continue
+            _, grid = grid_search_cell(cfg, SHAPES[sn], chips=chips)
+            finite = {k: v for k, v in grid.items() if math.isfinite(v)}
+            if not finite:
+                continue
+            best = min(finite.values())
+            worst = max(finite.values())
+            avg = float(np.mean(list(finite.values())))
+            dp, tp, mb = tuner.predict(cfg, SHAPES[sn])
+            t = grid.get((dp, mb), float("inf"))
+            if math.isinf(t):
+                t = worst
+            rows.append({"arch": held, "shape": sn, "pred": (dp, tp, mb),
+                         "t": t, "best": best, "avg": avg, "worst": worst,
+                         "ratio_best": t / best, "ratio_avg": avg / t,
+                         "ratio_worst": worst / t})
+    r_best = float(np.mean([r["ratio_best"] for r in rows]))
+    r_avg = float(np.mean([r["ratio_avg"] for r in rows]))
+    r_worst = float(np.mean([r["ratio_worst"] for r in rows]))
+    csv_row("meshtune/loo_avg", 0.0,
+            f"t_over_best={r_best:.2f};ratio_avg={r_avg:.2f};"
+            f"ratio_worst={r_worst:.2f};cells={len(rows)}")
+    if verbose:
+        for r in rows:
+            print(f"  meshtune {r['arch']:20s} {r['shape']:12s} "
+                  f"pred=dp{r['pred'][0]}/tp{r['pred'][1]}/mb{r['pred'][2]} "
+                  f"t/best={r['ratio_best']:.2f}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

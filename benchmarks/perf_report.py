@@ -1,0 +1,63 @@
+"""Format artifacts/perf/*.json (hillclimb variants) into the §Perf
+markdown table, and diff the optimized sweep against the preserved
+baseline sweep (artifacts/dryrun_baseline) for the framework-wide
+iteration log."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+ART = Path(__file__).resolve().parent.parent / "artifacts"
+
+
+def perf_tables():
+    out = []
+    for p in sorted((ART / "perf").glob("*.json")):
+        rows = json.loads(p.read_text())
+        out.append(f"\n### {p.stem}\n")
+        out.append("| variant | mesh | mb | step ms | dominant | MFU | "
+                   "coll MiB (xla,1-body) | mem GiB | fits |")
+        out.append("|---|---|---|---|---|---|---|---|---|")
+        for r in rows:
+            ro, x = r["roofline"], r["xla"]
+            mem = x["mem_tpu_est_gib"] or x["mem_device_gib"]
+            out.append(
+                f"| {r['variant']} | {r['mesh']} | {r['microbatches']} | "
+                f"{ro['step_s']*1e3:.1f} | {ro['dominant'][:-2]} | "
+                f"{ro['mfu']*100:.1f}% | "
+                f"{x['coll_bytes_bodyonce']/2**20:.0f} | {mem:.1f} | "
+                f"{'Y' if ro['fits'] else 'N'} |")
+    return "\n".join(out)
+
+
+def sweep_diff():
+    base, opt = {}, {}
+    for d, store in ((ART / "dryrun_baseline", base), (ART / "dryrun", opt)):
+        for p in d.glob("*.json"):
+            r = json.loads(p.read_text())
+            mem = r.get("mem_device_tpu_est_bytes") or r.get(
+                "mem_device_bytes", 0)
+            store[(r["arch"], r["shape"], r["mesh"])] = mem / 2**30
+    out = ["| cell | baseline GiB (tpu-est) | optimized GiB | delta |",
+           "|---|---|---|---|"]
+    for key in sorted(base):
+        if key not in opt:
+            continue
+        b, o = base[key], opt[key]
+        if abs(b - o) < 0.5:
+            continue
+        out.append(f"| {key[0]} × {key[1]} × {key[2]} | {b:.1f} | {o:.1f} | "
+                   f"{o-b:+.1f} |")
+    return "\n".join(out)
+
+
+def main():
+    report = ["## §Perf variant tables (generated)\n", perf_tables(),
+              "\n\n## Sweep memory: baseline vs optimized (generated)\n",
+              sweep_diff()]
+    (ART / "perf_report.md").write_text("\n".join(report))
+    print("\n".join(report))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,116 @@
+"""§Roofline: combine the dry-run artifacts (XLA memory analysis,
+raw cost_analysis, parsed collective bytes) with the validated analytic
+model into the per-cell three-term roofline table.
+
+Writes artifacts/roofline.csv + artifacts/roofline.md and prints the
+summary.  Run `python -m repro.launch.dryrun --all --both-meshes` first.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from repro.configs import SHAPES, get_config
+from repro.core.roofline import V5E, cell_roofline
+
+ART = Path(__file__).resolve().parent.parent / "artifacts"
+
+MESHES = {"pod16x16": {"data": 16, "model": 16},
+          "pods2x16x16": {"pod": 2, "data": 16, "model": 16}}
+
+
+def load_dryrun(outdir=ART / "dryrun"):
+    recs = {}
+    for p in sorted(Path(outdir).glob("*.json")):
+        r = json.loads(p.read_text())
+        recs[(r["arch"], r["shape"], r["mesh"])] = r
+    return recs
+
+
+def build_table(mesh_name: str = "pod16x16"):
+    recs = load_dryrun()
+    rows = []
+    for (arch, shape_name, mesh), rec in sorted(recs.items()):
+        if mesh != mesh_name:
+            continue
+        cfg = get_config(arch)
+        shape = SHAPES[shape_name]
+        mb = rec.get("microbatches") or None
+        r = cell_roofline(cfg, shape, MESHES[mesh_name],
+                          microbatches=mb if mb else None)
+        coll = rec.get("collectives", {})
+        coll_bytes_xla = sum(v["bytes"] for v in coll.values())
+        mem = rec.get("mem_device_tpu_est_bytes") \
+            or rec.get("mem_device_bytes", 0)
+        rows.append({
+            "arch": arch, "shape": shape_name, "mesh": mesh_name,
+            "compute_s": r["compute_s"], "memory_s": r["memory_s"],
+            "collective_s": r["collective_s"], "dominant": r["dominant"],
+            "step_s": r["step_s"], "mfu": r["mfu"],
+            "model_flops": r["model_flops"],
+            "flops_total": r["flops_total"],
+            "useful_ratio": r["useful_ratio"],
+            "xla_flops_bodyonce": rec["flops"],
+            "xla_coll_bytes_bodyonce": coll_bytes_xla,
+            "mem_device_gib": mem / 2**30,
+            "compile_s": rec["compile_s"],
+        })
+    return rows
+
+
+def what_moves_it(row) -> str:
+    d = row["dominant"]
+    if d == "compute_s":
+        return ("compute-bound: larger per-chip tiles / higher MXU "
+                "utilization or more chips")
+    if d == "memory_s":
+        return ("HBM-bound: cut weight/cache refetch (fuse, quantize cache, "
+                "larger microbatches amortize weight reads)")
+    return ("ICI-bound: reshard (smaller tp / larger dp), overlap "
+            "collectives with compute, or compress gradients")
+
+
+def write_outputs(rows, path_csv=ART / "roofline.csv",
+                  path_md=ART / "roofline.md"):
+    cols = ["arch", "shape", "mesh", "compute_s", "memory_s", "collective_s",
+            "dominant", "step_s", "mfu", "useful_ratio", "mem_device_gib",
+            "compile_s"]
+    with open(path_csv, "w") as f:
+        f.write(",".join(cols) + "\n")
+        for r in rows:
+            f.write(",".join(f"{r[c]:.6g}" if isinstance(r[c], float)
+                             else str(r[c]) for c in cols) + "\n")
+    with open(path_md, "w") as f:
+        f.write("| arch | shape | compute s | memory s | collective s | "
+                "dominant | MFU | useful | mem GiB |\n|" + "---|" * 9 + "\n")
+        for r in rows:
+            f.write(f"| {r['arch']} | {r['shape']} | {r['compute_s']:.4g} | "
+                    f"{r['memory_s']:.4g} | {r['collective_s']:.4g} | "
+                    f"{r['dominant'][:-2]} | {r['mfu']*100:.1f}% | "
+                    f"{r['useful_ratio']:.2f} | "
+                    f"{r['mem_device_gib']:.2f} |\n")
+    return path_csv
+
+
+def run(verbose: bool = True):
+    all_rows = []
+    for mesh_name in MESHES:
+        rows = build_table(mesh_name)
+        all_rows.extend(rows)
+    if not all_rows:
+        print("roofline/SKIP,0.0,no dry-run artifacts (run dryrun --all)")
+        return []
+    write_outputs(all_rows)
+    for r in all_rows:
+        if r["mesh"] != "pod16x16":
+            continue
+        print(f"roofline/{r['arch']}/{r['shape']},"
+              f"{r['step_s']*1e6:.1f},"
+              f"dom={r['dominant'][:-2]};mfu={r['mfu']*100:.1f}%;"
+              f"useful={r['useful_ratio']:.2f};"
+              f"mem={r['mem_device_gib']:.1f}GiB")
+    return all_rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,54 @@
+"""Benchmark harness -- one module per paper table/figure plus the
+beyond-paper tuners and the roofline report.
+
+Prints ``name,us_per_call,derived`` CSV rows (harness convention).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+SUITES = ("table2", "table3", "table4", "table6", "ablation", "meshtune",
+          "kernel", "roofline")
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", nargs="*", default=None,
+                    choices=SUITES, help="subset of suites")
+    ap.add_argument("--quiet", action="store_true")
+    args = ap.parse_args(argv)
+    todo = args.only or SUITES
+    verbose = not args.quiet
+
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    if "table2" in todo:
+        from benchmarks import table2_realworld
+        table2_realworld.run(verbose=verbose)
+    if "table3" in todo:
+        from benchmarks import table3_synthetic
+        table3_synthetic.run(verbose=verbose)
+    if "table4" in todo:
+        from benchmarks import table4_shapes
+        table4_shapes.run(verbose=verbose)
+    if "table6" in todo:
+        from benchmarks import table6_multinode
+        table6_multinode.run(verbose=verbose)
+    if "ablation" in todo:
+        from benchmarks import ablation_models
+        ablation_models.run(verbose=verbose)
+    if "meshtune" in todo:
+        from benchmarks import meshtune_bench
+        meshtune_bench.run(verbose=verbose)
+    if "kernel" in todo:
+        from benchmarks import kernel_bench
+        kernel_bench.run(verbose=verbose)
+    if "roofline" in todo:
+        from benchmarks import roofline
+        roofline.run(verbose=verbose)
+    print(f"# benchmarks done in {time.time()-t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

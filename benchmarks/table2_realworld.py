@@ -1,0 +1,37 @@
+"""Paper Table II / Fig. 3: K-means on HEPMASS-like and RF on MNIST-like
+datasets, single-node 64-core environment, row-only partitioning grid
+(both real sets are row-dominant so the model predicts p_c = 1, as in the
+paper)."""
+from __future__ import annotations
+
+import time
+
+from repro.core.estimator import BlockSizeEstimator
+from repro.data.datasets import hepmass_like, mnist_like
+
+from benchmarks.common import ENV64, build_training_log, csv_row, eval_on
+
+
+def run(scale: float = 0.004, verbose: bool = True):
+    log = build_training_log(verbose=verbose)
+    est = BlockSizeEstimator("tree").fit(log)
+    rows = []
+    cases = [("kmeans", "HEPMASS-like") + hepmass_like(scale),
+             ("rf", "MNIST-like") + mnist_like(scale * 10)]
+    for algo, name, X, y in cases:
+        t0 = time.time()
+        r = eval_on(est, X, y, algo, ENV64, mult=4, row_only=True)
+        r.update({"algo": algo, "dataset": name, "rows": X.shape[0],
+                  "cols": X.shape[1], "wall_s": time.time() - t0})
+        rows.append(r)
+        csv_row(f"table2/{algo}_{name}", r["t_star"] * 1e6,
+                f"ratio_avg={r['ratio_avg']:.2f};"
+                f"ratio_worst={r['ratio_worst']:.2f};"
+                f"red_avg={r['red_avg']*100:.1f}%;"
+                f"red_worst={r['red_worst']*100:.1f}%;"
+                f"pred=({r['p_r']};{r['p_c']});best={r['best_part']}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

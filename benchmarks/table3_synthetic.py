@@ -1,0 +1,41 @@
+"""Paper Table III: average makespan ratio / reduction over a set of
+synthetic test datasets (isotropic + anisotropic blobs with noise and
+redundant features), K-means and RF, full (p_r, p_c) grids."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.estimator import BlockSizeEstimator
+from repro.data.datasets import gaussian_blobs
+
+from benchmarks.common import ENV64, build_training_log, csv_row, eval_on
+
+TEST_SETS = [
+    (3072, 48, False), (1536, 96, True), (6144, 24, False), (768, 384, True),
+]
+
+
+def run(verbose: bool = True):
+    log = build_training_log(verbose=verbose)
+    est = BlockSizeEstimator("tree").fit(log)
+    rows = []
+    for i, (n, m, aniso) in enumerate(TEST_SETS):
+        X, y = gaussian_blobs(n, m, anisotropic=aniso, seed=500 + i)
+        for algo in ("kmeans", "rf"):
+            r = eval_on(est, X, y, algo, ENV64, mult=1)
+            r.update({"algo": algo, "rows": n, "cols": m})
+            rows.append(r)
+    avg = {k: float(np.mean([r[k] for r in rows]))
+           for k in ("ratio_best", "ratio_avg", "ratio_worst",
+                     "red_best", "red_avg", "red_worst")}
+    csv_row("table3/avg", float(np.mean([r["t_star"] for r in rows])) * 1e6,
+            f"ratio_best={avg['ratio_best']:.2f};"
+            f"ratio_avg={avg['ratio_avg']:.2f};"
+            f"ratio_worst={avg['ratio_worst']:.2f};"
+            f"red_avg={avg['red_avg']*100:.1f}%;"
+            f"red_worst={avg['red_worst']*100:.1f}%")
+    return rows, avg
+
+
+if __name__ == "__main__":
+    run()

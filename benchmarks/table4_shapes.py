@@ -1,0 +1,38 @@
+"""Paper Table IV / Figs. 4-5: row-imbalanced, column-imbalanced and
+balanced synthetic datasets, K-means and RF, full hybrid grids."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.estimator import BlockSizeEstimator
+from repro.data.datasets import shape_cases
+
+from benchmarks.common import ENV64, build_training_log, csv_row, eval_on
+
+
+def run(scale: float = 0.008, verbose: bool = True):
+    log = build_training_log(verbose=verbose)
+    est = BlockSizeEstimator("tree").fit(log)
+    cases = shape_cases(scale)
+    rows = []
+    for case, (X, y) in cases.items():
+        for algo in ("kmeans", "rf"):
+            r = eval_on(est, X, y, algo, ENV64, mult=1)
+            r.update({"algo": algo, "case": case,
+                      "rows": X.shape[0], "cols": X.shape[1]})
+            rows.append(r)
+            csv_row(f"table4/{algo}_{case}", r["t_star"] * 1e6,
+                    f"ratio_avg={r['ratio_avg']:.2f};"
+                    f"ratio_worst={r['ratio_worst']:.2f};"
+                    f"pred=({r['p_r']};{r['p_c']});best={r['best_part']}")
+    by_algo = {}
+    for algo in ("kmeans", "rf"):
+        sel = [r for r in rows if r["algo"] == algo]
+        by_algo[algo] = {k: float(np.mean([r[k] for r in sel]))
+                         for k in ("ratio_best", "ratio_avg", "ratio_worst",
+                                   "red_best", "red_avg", "red_worst")}
+    return rows, by_algo
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,61 @@
+"""Paper Table VI / Fig. 6: PCA on trajectory-like datasets in the
+multi-node (MareNostrum-4-style) environment; model prediction vs the
+domain-expert manual partitioning (the paper's expert chose e.g. (6,21),
+(14,36): non-power-of-two, heuristic splits)."""
+from __future__ import annotations
+
+import math
+
+from repro.core.estimator import BlockSizeEstimator
+from repro.core.gridsearch import grid_search, grid_stats, run_cell
+from repro.data.datasets import trajectory_like
+
+from benchmarks.common import ENV_MN, build_training_log, csv_row
+
+# scaled Traj_{medium,large,xlarge}: (rows, cols, expert p_r, expert p_c)
+CASES = [
+    ("traj_medium", 600, 208, 6, 21),
+    ("traj_large", 1000, 596, 14, 36),
+    ("traj_xlarge", 1000, 948, 14, 48),
+]
+
+
+def run(verbose: bool = True):
+    specs = [(n, m, a) for (n, m, a) in
+             [(512, 64, "pca"), (1024, 128, "pca"), (768, 256, "pca"),
+              (2048, 96, "pca"), (512, 512, "pca"), (1024, 384, "pca")]]
+    log = build_training_log(ENV_MN, tag="mn16", specs=specs,
+                             verbose=verbose)
+    est = BlockSizeEstimator("tree").fit(log)
+    rows = []
+    for name, n, m, epr, epc in CASES:
+        X = trajectory_like(n, m, seed=hash(name) % 1000)
+        pr, pc = est.predict_partitions(n, m, "pca", ENV_MN.features())
+        t_pred, _ = run_cell(X, None, "pca", ENV_MN, pr, pc)
+        # expert partitioning (trial-and-error heuristic, as in the paper)
+        t_exp, _ = run_cell(X, None, "pca", ENV_MN, min(epr, n), min(epc, m))
+        ratio = t_exp / t_pred if math.isfinite(t_pred) else float("inf")
+        red = (t_exp - t_pred) / t_exp if math.isfinite(t_exp) else 0.0
+        rows.append({"dataset": name, "pred": (pr, pc),
+                     "expert": (epr, epc), "t_pred": t_pred, "t_exp": t_exp,
+                     "ratio": ratio, "red": red})
+        csv_row(f"table6/{name}", t_pred * 1e6,
+                f"pred=({pr};{pc});expert=({epr};{epc});"
+                f"ratio_vs_expert={ratio:.2f};red={red*100:.1f}%")
+    # the paper also reports pred vs full-grid best/avg/worst on traj_medium
+    name, n, m, _, _ = CASES[0]
+    X = trajectory_like(n, m, seed=hash(name) % 1000)
+    _, grid = grid_search(X, None, "pca", ENV_MN, mult=1)
+    st = grid_stats(grid)
+    pr, pc = est.predict_partitions(n, m, "pca", ENV_MN.features())
+    t_star = grid.get((pr, pc), st["worst"])
+    csv_row("table6/traj_medium_fullgrid", t_star * 1e6,
+            f"ratio_avg={st['avg']/t_star:.2f};"
+            f"ratio_worst={st['worst']/t_star:.2f};"
+            f"red_avg={(st['avg']-t_star)/st['avg']*100:.1f}%;"
+            f"red_worst={(st['worst']-t_star)/st['worst']*100:.1f}%")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

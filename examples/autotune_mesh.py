@@ -1,0 +1,37 @@
+"""Beyond-paper: the same chained-DT methodology choosing TPU mesh
+factorizations.  The 'dataset' is an (architecture x input shape) cell, the
+'block size' is (data-parallel degree, microbatch count), and the execution
+log is a roofline-modeled grid over a 256-chip v5e pod (infeasible = inf).
+
+Run:  PYTHONPATH=src python examples/autotune_mesh.py
+"""
+import math
+
+from repro.configs import ARCH_IDS, SHAPES, get_config
+from repro.core.meshtune import MeshTuner, grid_search_cell, tune_all
+
+
+def main():
+    held_out = "gemma3-27b"
+    train_archs = [a for a in ARCH_IDS if a != held_out]
+    print(f"== building modeled execution log over {len(train_archs)} "
+          "architectures ==")
+    log, _ = tune_all(train_archs, chips=256)
+    tuner = MeshTuner(256).fit(log)
+
+    cfg = get_config(held_out)
+    for shape_name in ("train_4k", "prefill_32k", "decode_32k"):
+        shape = SHAPES[shape_name]
+        dp, tp, mb = tuner.predict(cfg, shape)
+        _, grid = grid_search_cell(cfg, shape, chips=256)
+        finite = {k: v for k, v in grid.items() if math.isfinite(v)}
+        best_key = min(finite, key=finite.get)
+        t = grid.get((dp, mb), float("inf"))
+        print(f"{held_out} x {shape_name}: predicted dp={dp} tp={tp} mb={mb}"
+              f" -> {t*1e3:.1f} ms/step | grid best {best_key} "
+              f"{finite[best_key]*1e3:.1f} ms | worst "
+              f"{max(finite.values())*1e3:.1f} ms")
+
+
+if __name__ == "__main__":
+    main()

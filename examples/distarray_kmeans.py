@@ -1,0 +1,37 @@
+"""dislib-style usage: blocked distributed array + data-parallel K-means,
+showing how the SAME computation costs differently under different
+(p_r, p_c) partitionings -- the premise of the paper.
+
+Run:  PYTHONPATH=src python examples/distarray_kmeans.py
+"""
+import numpy as np
+
+from repro.algorithms import kmeans
+from repro.data.datasets import gaussian_blobs
+from repro.data.distarray import DistArray
+from repro.data.executor import Environment, TaskExecutor
+
+
+def main():
+    X, y = gaussian_blobs(4096, 64, n_classes=4, seed=0)
+    env = Environment(name="node16", n_workers=16, dispatch_overhead_s=3e-4)
+
+    print("partitioning   tasks   modeled makespan   inertia")
+    centers0 = None
+    for p_r, p_c in [(1, 1), (4, 1), (16, 2), (64, 4), (256, 8)]:
+        ex = TaskExecutor(env)
+        d = DistArray.from_array(X, p_r, p_c)
+        model = kmeans.fit(ex, d, k=4, iters=5, seed=7)
+        if centers0 is None:
+            centers0 = model["centers"]
+        # result is partitioning-invariant; only the cost changes
+        drift = float(np.abs(model["centers"] - centers0).max())
+        print(f"  ({p_r:3d},{p_c:2d})   {ex.n_tasks:5d}   "
+              f"{ex.sim_time:10.3f}s       {model['inertia']:10.1f}  "
+              f"(drift {drift:.1e})")
+    print("\nsmall partitionings waste parallelism; large ones drown in "
+          "dispatch overhead -- the tuner's job is the sweet spot.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""Quickstart: the paper's methodology end to end in one minute.
+
+1. generate an execution log by grid-searching block sizes on real timed
+   runs of K-means / RF over a blocked distributed array;
+2. train the chained DT_r -> DT_c block-size estimator on the log;
+3. predict the partitioning for a new dataset and compare the realized
+   makespan against best / average / worst of the full grid.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import math
+
+from repro.core.estimator import BlockSizeEstimator
+from repro.core.gridsearch import grid_search, grid_stats
+from repro.core.log import ExecutionLog
+from repro.data.datasets import gaussian_blobs
+from repro.data.executor import Environment
+
+
+def main():
+    # the execution environment `e`: a 64-core node with a per-task memory
+    # budget (tasks over budget fail and score infinity, like the paper)
+    env = Environment(name="node64", n_workers=64, mem_limit_mb=512.0,
+                      dispatch_overhead_s=2e-4, ram_gb=256)
+
+    # -- 1. build the execution log L over a few <dataset, algorithm> pairs
+    print("== grid-searching training configurations (real timed runs) ==")
+    log = ExecutionLog()
+    for seed, (n, m) in enumerate([(2048, 64), (4096, 32), (1024, 128)]):
+        X, y = gaussian_blobs(n, m, seed=seed)
+        for algo in ("kmeans", "rf"):
+            log, grid = grid_search(X, y, algo, env, mult=1, log=log)
+            st = grid_stats(grid)
+            print(f"  {algo:7s} {n}x{m}: best={st['best']:.3f}s at "
+                  f"{st['best_part']}, worst={st['worst']:.3f}s")
+
+    # -- 2. train the chained decision-tree cascade (DT_r -> DT_c)
+    est = BlockSizeEstimator("tree").fit(log)
+
+    # -- 3. predict for an unseen dataset and evaluate
+    X, y = gaussian_blobs(3072, 48, seed=99)
+    p_r, p_c = est.predict_partitions(*X.shape, "kmeans", env.features())
+    r, c = est.predict_block_size(*X.shape, "kmeans", env.features())
+    print(f"\npredicted partitioning for 3072x48 K-means: "
+          f"(p_r, p_c)=({p_r},{p_c})  block size=({r},{c})")
+
+    _, grid = grid_search(X, y, "kmeans", env, mult=1)
+    st = grid_stats(grid)
+    t_star = grid[(p_r, p_c)]
+    print(f"realized: {t_star:.3f}s | grid best {st['best']:.3f}s at "
+          f"{st['best_part']} | avg {st['avg']:.3f}s | "
+          f"worst {st['worst']:.3f}s")
+    print(f"makespan ratio vs avg  = {st['avg']/t_star:.2f} "
+          f"(reduction {(st['avg']-t_star)/st['avg']*100:.1f}%)")
+    print(f"makespan ratio vs worst= {st['worst']/t_star:.2f} "
+          f"(reduction {(st['worst']-t_star)/st['worst']*100:.1f}%)")
+    assert math.isfinite(t_star)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,20 @@
+"""Batched serving example (deliverable b): prefill a batch of prompts,
+then decode with per-layer KV caches (ring caches for SWA layers, MLA
+latent caches, SSM states -- pick any assigned architecture).
+
+    PYTHONPATH=src python examples/serve_lm.py --arch hymba-1.5b
+    PYTHONPATH=src python examples/serve_lm.py --arch mamba2-370m
+"""
+import sys
+
+from repro.launch.serve import main as serve_main
+
+
+def main():
+    argv = sys.argv[1:] or ["--arch", "yi-6b"]
+    serve_main([*argv, "--batch", "8", "--prompt-len", "48",
+                "--gen-len", "24"])
+
+
+if __name__ == "__main__":
+    main()

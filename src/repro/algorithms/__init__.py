@@ -1,0 +1,19 @@
+"""Registry of data-parallel workloads (the paper's algorithms `a`)."""
+from repro.algorithms import gmm, kmeans, pca, rf, svm
+
+ALGORITHMS = {
+    "kmeans": kmeans,
+    "pca": pca,
+    "gmm": gmm,
+    "csvm": svm,
+    "rf": rf,
+}
+
+SUPERVISED = {"csvm", "rf"}
+
+
+def run(name: str, executor, X, y=None, **kw):
+    mod = ALGORITHMS[name]
+    if name in SUPERVISED:
+        return mod.fit(executor, X, y, **kw)
+    return mod.fit(executor, X, **kw)

@@ -1,0 +1,90 @@
+"""Data-parallel diagonal-covariance Gaussian Mixture Model (EM) -- dislib
+workload.  E-step log-densities accumulate per column block and reduce;
+M-step weighted sufficient statistics reduce over row blocks.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.data.distarray import DistArray
+from repro.data.executor import TaskExecutor
+
+_EPS = 1e-6
+
+
+def _partial_logpdf(xb, mu_b, var_b):
+    """[rows, k] sum over this column block of -0.5*((x-mu)^2/var + log var)."""
+    diff = xb[:, None, :] - mu_b[None, :, :]
+    return -0.5 * np.sum(diff * diff / var_b[None] + np.log(var_b[None]),
+                         axis=2)
+
+
+def _add(a, b):
+    return a + b
+
+
+def _resp(ll, log_pi):
+    z = ll + log_pi[None, :]
+    z -= z.max(axis=1, keepdims=True)
+    r = np.exp(z)
+    r /= r.sum(axis=1, keepdims=True)
+    return r
+
+
+def _mstats(xb, r):
+    return r.T @ xb, r.T @ (xb * xb), r.sum(axis=0)
+
+
+def _merge3(a, b):
+    return a[0] + b[0], a[1] + b[1], a[2] + b[2]
+
+
+def fit(ex: TaskExecutor, X: DistArray, *, k: int = 4, iters: int = 5,
+        seed: int = 0):
+    from repro.algorithms.kmeans import _gather_rows
+    rng = np.random.default_rng(seed)
+    n, m = X.shape
+    mu = _gather_rows(X, rng.choice(n, size=k, replace=n < k))
+    var = np.ones((k, m))
+    pi = np.full(k, 1.0 / k)
+    ce = X.col_edges
+
+    ll_total = -np.inf
+    for _ in range(iters):
+        mu_b = [mu[:, ce[j]:ce[j + 1]] for j in range(X.p_c)]
+        var_b = [var[:, ce[j]:ce[j + 1]] for j in range(X.p_c)]
+        items = [(X.blocks[i][j], mu_b[j], var_b[j])
+                 for i in range(X.p_r) for j in range(X.p_c)]
+        parts = ex.map(lambda xb, mb, vb: _partial_logpdf(xb, mb, vb), items,
+                       name="gmm_logpdf", unpack=True)
+        resp = []
+        for i in range(X.p_r):
+            row = parts[i * X.p_c:(i + 1) * X.p_c]
+            ll = row[0] if len(row) == 1 else ex.reduce(_add, row,
+                                                        name="gmm_red")
+            resp.append(ex.map(lambda L, lp=np.log(pi): _resp(L, lp), [ll],
+                               name="gmm_resp")[0])
+        items = [(X.blocks[i][j], resp[i])
+                 for i in range(X.p_r) for j in range(X.p_c)]
+        stats = ex.map(lambda xb, r: _mstats(xb, r), items, name="gmm_mstats",
+                       unpack=True)
+        nk = None
+        mu_new = np.zeros_like(mu)
+        ex2 = np.zeros_like(var)
+        for j in range(X.p_c):
+            col = [stats[i * X.p_c + j] for i in range(X.p_r)]
+            sx, sxx, cnt = col[0] if len(col) == 1 else ex.reduce(
+                _merge3, col, name="gmm_sred")
+            mu_new[:, ce[j]:ce[j + 1]] = sx / np.maximum(cnt[:, None], _EPS)
+            ex2[:, ce[j]:ce[j + 1]] = sxx / np.maximum(cnt[:, None], _EPS)
+            nk = cnt
+        mu = mu_new
+        var = np.maximum(ex2 - mu * mu, _EPS)
+        pi = np.maximum(nk / n, _EPS)
+        pi /= pi.sum()
+    return {"mu": mu, "var": var, "pi": pi}
+
+
+def predict(model, X: np.ndarray) -> np.ndarray:
+    ll = _partial_logpdf(X, model["mu"], model["var"])
+    return np.argmax(ll + np.log(model["pi"])[None, :], axis=1)

@@ -1,0 +1,111 @@
+"""Data-parallel K-means (Lloyd) over a DistArray -- dislib workload #1.
+
+Every phase is a set of per-block tasks: partial squared distances per
+(row-block, col-block), a tree-reduce over column blocks, per-row-block
+assignment, then per-block center partial sums reduced over row blocks.
+Both p_r and p_c change the task graph, which is exactly why the paper
+tunes them.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.data.distarray import DistArray
+from repro.data.executor import TaskExecutor
+
+
+def _partial_dist(xb: np.ndarray, cb: np.ndarray) -> np.ndarray:
+    """[rows, k] partial ||x - c||^2 restricted to this column block."""
+    x2 = np.sum(xb * xb, axis=1, keepdims=True)
+    c2 = np.sum(cb * cb, axis=1)[None, :]
+    return x2 - 2.0 * xb @ cb.T + c2
+
+
+def _add(a, b):
+    return a + b
+
+
+def _assign(d: np.ndarray):
+    lab = np.argmin(d, axis=1)
+    return lab, float(np.sum(d[np.arange(len(d)), lab]))
+
+
+def _center_partial(xb: np.ndarray, lab: np.ndarray, k: int):
+    sums = np.zeros((k, xb.shape[1]))
+    np.add.at(sums, lab, xb)
+    counts = np.bincount(lab, minlength=k).astype(np.float64)
+    return sums, counts
+
+
+def _merge_cp(a, b):
+    return a[0] + b[0], a[1] + b[1]
+
+
+def _gather_rows(X: DistArray, idx: np.ndarray) -> np.ndarray:
+    """Fetch rows by *global* index (partitioning-independent)."""
+    out = np.empty((len(idx), X.shape[1]))
+    for o, gi in enumerate(idx):
+        i = int(np.searchsorted(X.row_edges, gi, side="right") - 1)
+        local = gi - X.row_edges[i]
+        out[o] = np.concatenate([X.blocks[i][j][local]
+                                 for j in range(X.p_c)])
+    return out
+
+
+def _kmeanspp(sample: np.ndarray, k: int, rng) -> np.ndarray:
+    """k-means++ seeding on a row sample (master-side)."""
+    centers = [sample[rng.integers(len(sample))]]
+    for _ in range(k - 1):
+        d2 = np.min([np.sum((sample - c) ** 2, axis=1) for c in centers],
+                    axis=0)
+        p = d2 / max(d2.sum(), 1e-12)
+        centers.append(sample[rng.choice(len(sample), p=p)])
+    return np.stack(centers)
+
+
+def fit(ex: TaskExecutor, X: DistArray, *, k: int = 8, iters: int = 5,
+        seed: int = 0):
+    rng = np.random.default_rng(seed)
+    n, m = X.shape
+    # init: k-means++ over a globally-indexed row sample, so the fit is
+    # exactly invariant to (p_r, p_c) -- partitioning may change cost,
+    # never results
+    samp_idx = rng.choice(n, size=min(n, max(32 * k, 256)), replace=False)
+    centers = _kmeanspp(_gather_rows(X, np.sort(samp_idx)), k, rng)
+    ce = X.col_edges
+
+    inertia = np.inf
+    for _ in range(iters):
+        cblocks = [centers[:, ce[j]:ce[j + 1]] for j in range(X.p_c)]
+        # phase 1: partial distances for every (i, j) block
+        items = [(X.blocks[i][j], cblocks[j])
+                 for i in range(X.p_r) for j in range(X.p_c)]
+        partials = ex.map(_partial_dist, items, name="kmeans_dist",
+                          unpack=True)
+        # reduce over column blocks per row block
+        labels, inertia = [], 0.0
+        for i in range(X.p_r):
+            row = partials[i * X.p_c:(i + 1) * X.p_c]
+            d = row[0] if len(row) == 1 else ex.reduce(_add, row,
+                                                       name="kmeans_red")
+            lab, obj = ex.map(_assign, [d], name="kmeans_assign")[0]
+            labels.append(lab)
+            inertia += obj
+        # phase 2: new centers
+        items = [(X.blocks[i][j], labels[i], k)
+                 for i in range(X.p_r) for j in range(X.p_c)]
+        cps = ex.map(lambda xb, lab, kk: _center_partial(xb, lab, kk), items,
+                     name="kmeans_cp", unpack=True)
+        new_cols = []
+        for j in range(X.p_c):
+            col = [cps[i * X.p_c + j] for i in range(X.p_r)]
+            s, c = col[0] if len(col) == 1 else ex.reduce(
+                _merge_cp, col, name="kmeans_cred")
+            new_cols.append(s / np.maximum(c, 1.0)[:, None])
+        centers = np.concatenate(new_cols, axis=1)
+    return {"centers": centers, "inertia": inertia, "labels": labels}
+
+
+def predict(model, X: np.ndarray) -> np.ndarray:
+    d = _partial_dist(X, model["centers"])
+    return np.argmin(d, axis=1)

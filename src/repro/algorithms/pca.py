@@ -1,0 +1,75 @@
+"""Data-parallel PCA over a DistArray -- the paper's MareNostrum-4 workload.
+
+Column means and the Gram/covariance matrix are assembled from per-block
+tasks: one task per (row-block, col-block-pair), tree-reduced over row
+blocks; the final (m x m) eigendecomposition runs as a master task (as in
+dislib, whose PCA gathers the covariance).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.data.distarray import DistArray
+from repro.data.executor import TaskExecutor
+
+
+def _col_sum(xb):
+    return np.sum(xb, axis=0)
+
+
+def _add(a, b):
+    return a + b
+
+
+def _gram_pair(xa, xb, mu_a, mu_b):
+    return (xa - mu_a).T @ (xb - mu_b)
+
+
+def _eigh_top(cov, n_components):
+    w, v = np.linalg.eigh(cov)
+    order = np.argsort(w)[::-1][:n_components]
+    return w[order], v[:, order]
+
+
+def fit(ex: TaskExecutor, X: DistArray, *, n_components: int = 8):
+    n, m = X.shape
+    # ---- column means ------------------------------------------------------
+    sums = ex.map(_col_sum, [X.blocks[i][j] for i in range(X.p_r)
+                             for j in range(X.p_c)], name="pca_colsum")
+    mu = []
+    for j in range(X.p_c):
+        col = [sums[i * X.p_c + j] for i in range(X.p_r)]
+        s = col[0] if len(col) == 1 else ex.reduce(_add, col, name="pca_mred")
+        mu.append(s / n)
+
+    # ---- blocked covariance -----------------------------------------------
+    items, where = [], []
+    for i in range(X.p_r):
+        for j1 in range(X.p_c):
+            for j2 in range(j1, X.p_c):
+                items.append((X.blocks[i][j1], X.blocks[i][j2],
+                              mu[j1][None, :], mu[j2][None, :]))
+                where.append((i, j1, j2))
+    grams = ex.map(lambda a, b, ma, mb: _gram_pair(a, b, ma, mb), items,
+                   name="pca_gram", unpack=True)
+
+    pair_sum: dict = {}
+    for (i, j1, j2), g in zip(where, grams):
+        pair_sum.setdefault((j1, j2), []).append(g)
+    ce = X.col_edges
+    cov = np.zeros((m, m))
+    for (j1, j2), parts in pair_sum.items():
+        g = parts[0] if len(parts) == 1 else ex.reduce(_add, parts,
+                                                       name="pca_gred")
+        cov[ce[j1]:ce[j1 + 1], ce[j2]:ce[j2 + 1]] = g
+        if j1 != j2:
+            cov[ce[j2]:ce[j2 + 1], ce[j1]:ce[j1 + 1]] = g.T
+    cov /= max(n - 1, 1)
+
+    # ---- master eigendecomposition ----------------------------------------
+    w, v = ex.master(_eigh_top, cov, n_components, name="pca_eigh")
+    return {"mean": np.concatenate(mu), "variance": w, "components": v}
+
+
+def transform(model, X: np.ndarray) -> np.ndarray:
+    return (X - model["mean"][None, :]) @ model["components"]

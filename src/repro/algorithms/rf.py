@@ -1,0 +1,54 @@
+"""Distributed Random Forest -- dislib workload #2.
+
+Trees distribute over row blocks (each block trains its share of the
+ensemble on local rows with feature subsampling); prediction is a
+vote-merge.  The base learner is this repo's own CART
+(repro.core.trees.DecisionTreeClassifier), so the paper's model and the
+paper's workload share one tree implementation.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.trees import DecisionTreeClassifier
+from repro.data.distarray import DistArray
+from repro.data.executor import TaskExecutor
+
+
+def _train_block(xb, yb, n_trees, classes, max_depth, seed):
+    rng = np.random.default_rng(seed)
+    trees = []
+    n = len(xb)
+    mf = max(1, int(np.sqrt(xb.shape[1])))
+    for _ in range(n_trees):
+        rows = rng.integers(0, n, n)
+        t = DecisionTreeClassifier(max_depth=max_depth, max_features=mf,
+                                   random_state=int(rng.integers(1 << 31)))
+        t.classes_ = classes
+        t.n_classes_ = len(classes)
+        yy = np.searchsorted(classes, yb[rows])
+        from repro.core.trees import _BaseTree
+        _BaseTree.fit(t, xb[rows], yy)
+        trees.append(t)
+    return trees
+
+
+def fit(ex: TaskExecutor, X: DistArray, y: np.ndarray, *, n_trees: int = 16,
+        max_depth: int = 8, seed: int = 0):
+    y = np.asarray(y)
+    classes = np.unique(y)
+    rows = X.row_stitched(ex)
+    yb = X.split_rows(y)
+    per_block = max(1, int(np.ceil(n_trees / X.p_r)))
+    items = [(rows[i], yb[i], per_block, classes, max_depth, seed + i)
+             for i in range(X.p_r)]
+    tree_lists = ex.map(
+        lambda xb, yy, nt, cl, md, sd: _train_block(xb, yy, nt, cl, md, sd),
+        items, name="rf_fit", unpack=True)
+    trees = [t for lst in tree_lists for t in lst]
+    return {"trees": trees, "classes": classes}
+
+
+def predict(model, X: np.ndarray) -> np.ndarray:
+    proba = np.mean([t.predict_proba(X) for t in model["trees"]], axis=0)
+    return model["classes"][np.argmax(proba, axis=1)]

@@ -1,0 +1,58 @@
+"""Cascade SVM (CSVM) -- dislib's SVM: per-row-block linear SVMs whose
+support vectors merge pairwise up a cascade, retraining at each level.
+The inner solver is Pegasos-style hinge subgradient descent (numpy).
+Column-partitioned inputs pay an explicit per-row-block "stitch" task first
+(the cost the paper's tuner sees when p_c is too large for a row-oriented
+algorithm).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.data.distarray import DistArray
+from repro.data.executor import TaskExecutor
+
+
+def _pegasos(xy, *, lam=1e-3, iters=60, cap=256, seed=0):
+    x, y = xy
+    rng = np.random.default_rng(seed)
+    n, m = x.shape
+    w = np.zeros(m)
+    b = 0.0
+    bs = min(256, n)
+    for t in range(1, iters + 1):
+        idx = rng.integers(0, n, bs)
+        margin = y[idx] * (x[idx] @ w + b)
+        viol = margin < 1.0
+        eta = 1.0 / (lam * t)
+        gw = lam * w - (y[idx][viol, None] * x[idx][viol]).sum(0) / bs
+        gb = -np.sum(y[idx][viol]) / bs
+        w -= eta * gw
+        b -= eta * gb
+    # support vectors = margin violators (capped)
+    margin = y * (x @ w + b)
+    sv = np.argsort(margin)[:cap]
+    return w, b, (x[sv], y[sv])
+
+
+def _merge_train(a, b):
+    (wa, ba, (xa, ya)), (wb, bb, (xb, yb)) = a, b
+    x = np.concatenate([xa, xb])
+    y = np.concatenate([ya, yb])
+    return _pegasos((x, y), seed=1)
+
+
+def fit(ex: TaskExecutor, X: DistArray, y: np.ndarray, *, lam: float = 1e-3):
+    rows = X.row_stitched(ex)
+    yb = X.split_rows(np.where(np.asarray(y) > 0, 1.0, -1.0))
+    level0 = ex.map(lambda xb, yy: _pegasos((xb, yy), lam=lam),
+                    list(zip(rows, yb)), name="csvm_fit", unpack=True)
+    if len(level0) == 1:
+        w, b, _ = level0[0]
+    else:
+        w, b, _ = ex.reduce(_merge_train, level0, name="csvm_cascade")
+    return {"w": w, "b": b}
+
+
+def predict(model, X: np.ndarray) -> np.ndarray:
+    return (X @ model["w"] + model["b"] >= 0).astype(int)

@@ -1,0 +1,53 @@
+"""Architecture registry: ``get_config(arch_id)`` / ``reduced_config(arch_id)``.
+
+Arch ids match the assignment exactly (e.g. ``mixtral-8x7b``).
+"""
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import (  # noqa: F401 (re-exports)
+    MLAConfig,
+    ModelConfig,
+    MoEConfig,
+    SHAPES,
+    SMOKE_SHAPE,
+    ShapeConfig,
+    SSMConfig,
+    reduce_config,
+)
+
+_MODULES = {
+    "mixtral-8x7b": "repro.configs.mixtral_8x7b",
+    "deepseek-v3-671b": "repro.configs.deepseek_v3_671b",
+    "yi-6b": "repro.configs.yi_6b",
+    "h2o-danube-3-4b": "repro.configs.h2o_danube3_4b",
+    "deepseek-7b": "repro.configs.deepseek_7b",
+    "gemma3-27b": "repro.configs.gemma3_27b",
+    "phi-3-vision-4.2b": "repro.configs.phi3_vision_4b",
+    "musicgen-large": "repro.configs.musicgen_large",
+    "mamba2-370m": "repro.configs.mamba2_370m",
+    "hymba-1.5b": "repro.configs.hymba_1p5b",
+}
+
+ARCH_IDS = tuple(_MODULES)
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    if arch_id not in _MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {sorted(_MODULES)}")
+    return importlib.import_module(_MODULES[arch_id]).get_config()
+
+
+def reduced_config(arch_id: str) -> ModelConfig:
+    return reduce_config(get_config(arch_id))
+
+
+def cells(include_skipped: bool = False):
+    """Yield every (arch_id, shape_name) dry-run cell in assignment order."""
+    for arch_id in ARCH_IDS:
+        cfg = get_config(arch_id)
+        for shape_name in SHAPES:
+            if not include_skipped and shape_name in cfg.skip_shapes:
+                continue
+            yield arch_id, shape_name

@@ -1,0 +1,81 @@
+"""Chained multi-output classifier: DT_r -> DT_c (paper §III-C, Fig. 2).
+
+The first tree predicts the row-partition class p_r*; the second tree is
+trained on the features *concatenated with the row target* and predicts the
+column-partition class p_c*.  Rows come first in the chain "since
+partitioning along the rows is generally more relevant" (paper).  At
+inference the second tree consumes DT_r's prediction.
+
+``base_factory`` defaults to the paper's decision tree; passing
+``RandomForestClassifier`` gives the beyond-paper ensemble variant
+benchmarked in benchmarks/ablation_models.py.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.trees import DecisionTreeClassifier
+
+
+class ChainedClassifier:
+    def __init__(self, base_factory=None):
+        self.base_factory = base_factory or (
+            lambda: DecisionTreeClassifier(max_depth=10))
+        self.model_r = None
+        self.model_c = None
+
+    def fit(self, X, y_r, y_c):
+        X = np.asarray(X, np.float64)
+        self.model_r = self.base_factory().fit(X, y_r)
+        Xc = np.column_stack([X, np.asarray(y_r, np.float64)])
+        self.model_c = self.base_factory().fit(Xc, y_c)
+        return self
+
+    def predict(self, X):
+        X = np.asarray(X, np.float64)
+        pr = self.model_r.predict(X)
+        Xc = np.column_stack([X, pr.astype(np.float64)])
+        pc = self.model_c.predict(Xc)
+        return np.stack([pr, pc], axis=1)
+
+
+class IndependentClassifier:
+    """Ablation: two unchained trees (ignores target dependence)."""
+
+    def __init__(self, base_factory=None):
+        self.base_factory = base_factory or (
+            lambda: DecisionTreeClassifier(max_depth=10))
+
+    def fit(self, X, y_r, y_c):
+        self.model_r = self.base_factory().fit(X, y_r)
+        self.model_c = self.base_factory().fit(X, y_c)
+        return self
+
+    def predict(self, X):
+        return np.stack([self.model_r.predict(X),
+                         self.model_c.predict(X)], axis=1)
+
+
+class RegressionBaseline:
+    """The regression formulation the paper argues against (§III):
+    predicts block *sizes* directly; outputs are unconstrained and get
+    snapped to the nearest feasible power-of-s partition count."""
+
+    def __init__(self, base_factory=None, s: int = 2):
+        from repro.core.trees import DecisionTreeRegressor
+        self.base_factory = base_factory or (
+            lambda: DecisionTreeRegressor(max_depth=10))
+        self.s = s
+
+    def fit(self, X, y_r, y_c):
+        # regress on the raw partition counts (not class indices)
+        self.model_r = self.base_factory().fit(X, self.s ** np.asarray(y_r))
+        self.model_c = self.base_factory().fit(X, self.s ** np.asarray(y_c))
+        return self
+
+    def predict(self, X):
+        def snap(v):
+            v = np.maximum(np.asarray(v, np.float64), 1.0)
+            return np.rint(np.log(v) / np.log(self.s)).astype(int)
+        return np.stack([snap(self.model_r.predict(X)),
+                         snap(self.model_c.predict(X))], axis=1)

@@ -1,0 +1,66 @@
+"""BlockSizeEstimator -- the paper's contribution, end to end (§III).
+
+fit():   execution log -> group by <d,a,e> -> argmin labels -> chained
+         DT_r -> DT_c classifier over power-of-s partition classes.
+predict(): (dataset, algorithm, environment) -> (p_r*, p_c*) and the block
+         size S = (n/p_r*, m/p_c*).
+
+The estimator is model-agnostic (`model="tree"|"forest"|"independent"|
+"regression"`): "tree" is the paper-faithful cascade of two decision trees;
+the others are the ablations/upgrades benchmarked in
+benchmarks/ablation_models.py.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.chained import (
+    ChainedClassifier,
+    IndependentClassifier,
+    RegressionBaseline,
+)
+from repro.core.features import dataset_features, featurize, vectorize
+from repro.core.log import ExecutionLog
+from repro.core.trees import DecisionTreeClassifier, RandomForestClassifier
+
+_MODELS = {
+    "tree": lambda: ChainedClassifier(
+        lambda: DecisionTreeClassifier(max_depth=10)),
+    "forest": lambda: ChainedClassifier(
+        lambda: RandomForestClassifier(n_estimators=30, max_depth=10)),
+    "independent": lambda: IndependentClassifier(
+        lambda: DecisionTreeClassifier(max_depth=10)),
+    "regression": lambda: RegressionBaseline(),
+}
+
+
+class BlockSizeEstimator:
+    def __init__(self, model: str = "tree", s: int = 2):
+        self.model_name = model
+        self.s = s
+        self.model = _MODELS[model]()
+        self.feature_order = None
+
+    def fit(self, log: ExecutionLog):
+        feats, yr, yc = log.training_set()
+        if not feats:
+            raise ValueError("log has no finite-time groups")
+        X, self.feature_order = vectorize(feats)
+        self.model.fit(X, yr, yc)
+        return self
+
+    # ------------------------------------------------------------- predict
+    def predict_partitions(self, n_rows: int, n_cols: int, algo: str,
+                           env_features: dict) -> tuple:
+        f = featurize(dataset_features(n_rows, n_cols), algo, env_features)
+        X, _ = vectorize([f], self.feature_order)
+        er, ec = self.model.predict(X)[0]
+        p_r = int(self.s ** max(int(er), 0))
+        p_c = int(self.s ** max(int(ec), 0))
+        return min(p_r, n_rows), min(p_c, n_cols)
+
+    def predict_block_size(self, n_rows: int, n_cols: int, algo: str,
+                           env_features: dict) -> tuple:
+        """(r*, c*) = (n/p_r*, m/p_c*) -- the paper's §III-C output."""
+        p_r, p_c = self.predict_partitions(n_rows, n_cols, algo, env_features)
+        return int(np.ceil(n_rows / p_r)), int(np.ceil(n_cols / p_c))

@@ -1,0 +1,82 @@
+"""Grid-search training-data generation (paper §III-B).
+
+For a triple <d, a, e> builds the k x k grid G with
+(p_r, p_c) = (s^i, s^j), runs the real workload at every cell on the task
+executor, and records the measured (modeled-makespan) time -- failures
+(per-task memory budget exceeded) score infinity.  The annotated argmin
+becomes one training sample.
+"""
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+from repro.algorithms import run as run_algo
+from repro.core.features import dataset_features
+from repro.core.log import ExecutionLog, ExecutionRecord
+from repro.data.distarray import DistArray
+from repro.data.executor import Environment, TaskExecutor, TaskMemoryError
+
+
+def grid_powers(n_cores: int, s: int = 2, mult: int = 4,
+                min_power: int = 0) -> list[int]:
+    """Partition counts s^i up to mult x n_cores (paper uses 4x)."""
+    k = int(math.log(max(n_cores * mult, s), s))
+    return [s ** i for i in range(min_power, k + 1)]
+
+
+def run_cell(X: np.ndarray, y, algo: str, env: Environment, p_r: int, p_c: int,
+             *, algo_kw=None, repeats: int = 1) -> tuple[float, dict]:
+    """One grid cell: real execution, modeled makespan; inf on OOM."""
+    n, m = X.shape
+    if p_r > n or p_c > m:
+        return float("inf"), {"reason": "degenerate"}
+    best = float("inf")
+    info = {}
+    for rep in range(repeats):
+        ex = TaskExecutor(env)
+        Xd = DistArray.from_array(X, p_r, p_c)
+        try:
+            run_algo(algo, ex, Xd, y)
+        except TaskMemoryError as e:
+            return float("inf"), {"reason": str(e)}
+        best = min(best, ex.sim_time)
+        info = {"tasks": ex.n_tasks, "real_s": ex.real_time}
+    return best, info
+
+
+def grid_search(X: np.ndarray, y, algo: str, env: Environment, *, s: int = 2,
+                mult: int = 4, repeats: int = 1, log: ExecutionLog | None = None,
+                row_only: bool = False, verbose: bool = False):
+    """Sweep the (p_r, p_c) grid; returns (log, grid dict)."""
+    log = log or ExecutionLog()
+    d = dataset_features(*X.shape)
+    e = env.features()
+    ps = grid_powers(env.n_workers, s=s, mult=mult)
+    col_ps = [1] if row_only else ps
+    grid = {}
+    for p_r in ps:
+        for p_c in col_ps:
+            t, info = run_cell(X, y, algo, env, p_r, p_c, repeats=repeats)
+            grid[(p_r, p_c)] = t
+            log.add(ExecutionRecord(d, algo, e, p_r, p_c, t, info))
+            if verbose:
+                print(f"  grid {algo} ({p_r},{p_c}): "
+                      f"{t if math.isfinite(t) else 'OOM':>8} s", flush=True)
+    return log, grid
+
+
+def grid_stats(grid: dict) -> dict:
+    """best/average/worst over finite cells (paper's comparison points)."""
+    finite = {k: v for k, v in grid.items() if math.isfinite(v)}
+    if not finite:
+        return {}
+    best_key = min(finite, key=finite.get)
+    worst_key = max(finite, key=finite.get)
+    return {
+        "best": finite[best_key], "best_part": best_key,
+        "worst": finite[worst_key], "worst_part": worst_key,
+        "avg": float(np.mean(list(finite.values()))),
+        "n_finite": len(finite), "n_oom": len(grid) - len(finite),
+    }

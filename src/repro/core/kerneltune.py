@@ -1,0 +1,107 @@
+"""Beyond-paper: block-size estimation for Pallas kernel tiles.
+
+The kernel-level instance of the paper's problem: choose (block_m, block_n,
+block_k) / (block_q, block_k) -- the BlockSpec "block size" -- for a given
+problem shape.  The execution-time oracle is a TPU v5e cost model over the
+tile choice (MXU-aligned tiles, VMEM working-set fit with OOM -> inf,
+HBM-refetch traffic vs tile size, grid-launch overhead); the estimator is
+the same chained DT cascade predicting two tile exponents.
+
+tests/test_kerneltune.py checks the predictions against exhaustive search
+on the cost model; benchmarks/kernel_bench.py reports makespan-style ratios.
+"""
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+from repro.core.chained import ChainedClassifier
+from repro.core.log import ExecutionLog, ExecutionRecord
+from repro.core.roofline import V5E, Hardware
+from repro.core.trees import DecisionTreeClassifier
+from repro.kernels.matmul_blocked import vmem_bytes as mm_vmem
+
+VMEM_BUDGET = 16 * 2**20          # ~16 MiB usable VMEM per core (v5e)
+MXU = 128                         # systolic array edge
+
+
+def matmul_tile_time(m: int, k: int, n: int, bm: int, bn: int, bk: int,
+                     *, hw: Hardware = V5E, dtype_bytes: int = 2) -> float:
+    """Modeled kernel time: max(MXU compute, HBM traffic) + launch overhead.
+
+    Tiling determines refetch: A is re-read n/bn times, B m/bm times --
+    the classic blocking trade-off the paper's "block size" controls.
+    """
+    if bm > m or bn > n or bk > k:
+        return float("inf")
+    if mm_vmem(bm, bn, bk, dtype_bytes) > VMEM_BUDGET:
+        return float("inf")                      # VMEM OOM == paper's inf
+    gm, gn, gk = math.ceil(m / bm), math.ceil(n / bn), math.ceil(k / bk)
+    flops = 2.0 * (gm * bm) * (gn * bn) * (gk * bk)   # padded compute
+    # MXU efficiency: partial tiles and sub-128 dims waste systolic slots
+    eff = min(bm, MXU) / MXU * min(bn, MXU) / MXU
+    eff = min(1.0, eff) if (bm % MXU == 0 and bn % MXU == 0) else 0.6 * eff
+    compute = flops / (hw.peak_flops * max(eff, 1e-3))
+    traffic = (gn * m * k + gm * k * n) * dtype_bytes \
+        + m * n * dtype_bytes                      # A refetched gn x, B gm x
+    memory = traffic / hw.hbm_bw
+    launch = gm * gn * gk * 1e-6                   # per-grid-step overhead
+    return max(compute, memory) + launch
+
+
+def shape_features(m: int, k: int, n: int) -> dict:
+    return {"rows": float(m), "cols": float(n), "inner": float(k),
+            "log_rows": math.log2(m), "log_cols": math.log2(n),
+            "log_inner": math.log2(k), "size_mb": m * k * 2 / 2**20}
+
+
+def grid_search_matmul(m: int, k: int, n: int,
+                       log: ExecutionLog | None = None):
+    """Sweep power-of-2 tiles; record modeled times (inf on VMEM OOM)."""
+    log = log or ExecutionLog()
+    grid = {}
+    d = shape_features(m, k, n)
+    for bm in (64, 128, 256, 512):
+        for bn in (64, 128, 256, 512):
+            bk = min(512, max(128, k))            # bk folded: fixed heuristic
+            t = matmul_tile_time(m, k, n, bm, bn, min(bk, k))
+            grid[(bm, bn)] = t
+            log.add(ExecutionRecord(d, "matmul_tile", {"vmem_mb": 16},
+                                    bm, bn, t))
+    return log, grid
+
+
+class KernelTuner:
+    """Chained DT over tile exponents (block_m -> block_n)."""
+
+    def __init__(self):
+        self.model = ChainedClassifier(
+            lambda: DecisionTreeClassifier(max_depth=10))
+        self.feature_order = None
+
+    def fit(self, log: ExecutionLog):
+        from repro.core.features import vectorize
+        feats, yr, yc = log.training_set()
+        X, self.feature_order = vectorize(feats)
+        self.model.fit(X, yr, yc)
+        return self
+
+    def predict(self, m: int, k: int, n: int):
+        from repro.core.features import featurize, vectorize
+        f = featurize(shape_features(m, k, n), "matmul_tile",
+                      {"vmem_mb": 16})
+        X, _ = vectorize([f], self.feature_order)
+        er, ec = self.model.predict(X)[0]
+        return min(2 ** int(er), m), min(2 ** int(ec), n)
+
+
+def build_training_log(seed: int = 0, n_shapes: int = 40) -> ExecutionLog:
+    rng = np.random.default_rng(seed)
+    log = ExecutionLog()
+    for _ in range(n_shapes):
+        m = 2 ** rng.integers(7, 14)
+        k = 2 ** rng.integers(7, 13)
+        n = 2 ** rng.integers(7, 14)
+        log, _ = grid_search_matmul(int(m), int(k), int(n), log)
+    return log

@@ -1,0 +1,91 @@
+"""Execution log L and training-set extraction D (paper §III-B).
+
+L is a collection of tuples <d, a, e, p_r, p_c, t>.  Grouping by the triple
+<d, a, e> and taking the argmin-time partitioning per group yields the
+training set D = {<features(d,a,e), (p_r*, p_c*)>}.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+from pathlib import Path
+
+import numpy as np
+
+from repro.core.features import featurize
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecutionRecord:
+    dataset: dict                 # dataset features (rows, cols, size_mb, ...)
+    algo: str
+    env: dict                     # environment features
+    p_r: int
+    p_c: int
+    time_s: float                 # inf == failure (paper's OOM convention)
+    meta: dict = dataclasses.field(default_factory=dict)
+
+    def triple_key(self):
+        d = tuple(sorted((k, round(float(v), 9))
+                         for k, v in self.dataset.items()))
+        e = tuple(sorted((k, round(float(v), 9)) for k, v in self.env.items()))
+        return (d, self.algo, e)
+
+
+class ExecutionLog:
+    def __init__(self, records=None):
+        self.records: list[ExecutionRecord] = list(records or [])
+
+    def add(self, rec: ExecutionRecord):
+        self.records.append(rec)
+
+    # ------------------------------------------------------------------ io
+    def save(self, path):
+        path = Path(path)
+        path.parent.mkdir(parents=True, exist_ok=True)
+        with path.open("w") as f:
+            for r in self.records:
+                f.write(json.dumps({
+                    "dataset": r.dataset, "algo": r.algo, "env": r.env,
+                    "p_r": r.p_r, "p_c": r.p_c,
+                    "time_s": ("inf" if math.isinf(r.time_s) else r.time_s),
+                    "meta": r.meta}) + "\n")
+
+    @classmethod
+    def load(cls, path):
+        out = cls()
+        for line in Path(path).read_text().splitlines():
+            if not line.strip():
+                continue
+            o = json.loads(line)
+            t = float("inf") if o["time_s"] == "inf" else float(o["time_s"])
+            out.add(ExecutionRecord(o["dataset"], o["algo"], o["env"],
+                                    int(o["p_r"]), int(o["p_c"]), t,
+                                    o.get("meta", {})))
+        return out
+
+    # --------------------------------------------------------- extraction
+    def groups(self) -> dict:
+        g: dict = {}
+        for r in self.records:
+            g.setdefault(r.triple_key(), []).append(r)
+        return g
+
+    def best_per_group(self) -> list[ExecutionRecord]:
+        out = []
+        for recs in self.groups().values():
+            finite = [r for r in recs if math.isfinite(r.time_s)]
+            if not finite:
+                continue
+            out.append(min(finite, key=lambda r: r.time_s))
+        return out
+
+    def training_set(self):
+        """-> (feature_dicts, y_r exponents, y_c exponents, s)."""
+        feats, yr, yc = [], [], []
+        for r in self.best_per_group():
+            feats.append(featurize(r.dataset, r.algo, r.env))
+            yr.append(int(round(np.log2(r.p_r))))
+            yc.append(int(round(np.log2(r.p_c))))
+        return feats, np.array(yr), np.array(yc)

@@ -1,0 +1,233 @@
+"""Decision trees from scratch (no sklearn in the container).
+
+CART with gini impurity (classifier) / variance reduction (regressor),
+vectorized split search over sorted feature columns, plus a bagging
+RandomForest.  These are both (a) the paper's learning models -- the chained
+DT_r -> DT_c block-size classifier -- and (b) the per-block base learner of
+the distributed Random Forest workload in repro.algorithms.rf.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class _Node:
+    feature: int = -1
+    threshold: float = 0.0
+    left: int = -1
+    right: int = -1
+    value: np.ndarray | float | None = None     # leaf payload
+
+    @property
+    def is_leaf(self):
+        return self.feature < 0
+
+
+def _gini_gain(y_sorted: np.ndarray, n_classes: int):
+    """Best split position and impurity decrease for one sorted column.
+
+    Returns (best_pos, best_score); split is  "< value at pos".  Vectorized:
+    prefix class counts give gini left/right at every cut in O(n*k).
+    """
+    n = len(y_sorted)
+    onehot = np.zeros((n, n_classes), np.float64)
+    onehot[np.arange(n), y_sorted] = 1.0
+    left = np.cumsum(onehot, axis=0)[:-1]              # counts left of cut i+1
+    nl = np.arange(1, n, dtype=np.float64)
+    nr = n - nl
+    right = left[-1] + onehot[-1] - left
+    gini_l = 1.0 - np.sum((left / nl[:, None]) ** 2, axis=1)
+    gini_r = 1.0 - np.sum((right / nr[:, None]) ** 2, axis=1)
+    score = (nl * gini_l + nr * gini_r) / n            # weighted child gini
+    pos = int(np.argmin(score))
+    return pos + 1, float(score[pos])
+
+
+def _var_gain(y_sorted: np.ndarray):
+    n = len(y_sorted)
+    cs = np.cumsum(y_sorted)
+    cs2 = np.cumsum(y_sorted ** 2)
+    nl = np.arange(1, n, dtype=np.float64)
+    nr = n - nl
+    sl, sr = cs[:-1], cs[-1] - cs[:-1]
+    s2l, s2r = cs2[:-1], cs2[-1] - cs2[:-1]
+    var_l = s2l / nl - (sl / nl) ** 2
+    var_r = s2r / nr - (sr / nr) ** 2
+    score = (nl * var_l + nr * var_r) / n
+    pos = int(np.argmin(score))
+    return pos + 1, float(score[pos])
+
+
+class _BaseTree:
+    def __init__(self, max_depth=8, min_samples_split=2, min_samples_leaf=1,
+                 max_features=None, random_state=0):
+        self.max_depth = max_depth
+        self.min_samples_split = min_samples_split
+        self.min_samples_leaf = min_samples_leaf
+        self.max_features = max_features
+        self.random_state = random_state
+        self.nodes: list[_Node] = []
+
+    # subclass API
+    def _leaf_value(self, y):
+        raise NotImplementedError
+
+    def _node_score(self, y):
+        raise NotImplementedError
+
+    def _best_split_col(self, y_sorted):
+        raise NotImplementedError
+
+    def fit(self, X, y):
+        X = np.asarray(X, np.float64)
+        y = np.asarray(y)
+        self.n_features_ = X.shape[1]
+        rng = np.random.default_rng(self.random_state)
+        self.nodes = []
+        self._grow(X, y, depth=0, rng=rng)
+        return self
+
+    def _grow(self, X, y, depth, rng) -> int:
+        idx = len(self.nodes)
+        self.nodes.append(_Node(value=self._leaf_value(y)))
+        n = len(y)
+        if (depth >= self.max_depth or n < self.min_samples_split
+                or self._node_score(y) <= 1e-12):
+            return idx
+        k = X.shape[1]
+        if self.max_features is not None:
+            m = max(1, int(self.max_features * k)) if isinstance(
+                self.max_features, float) else min(self.max_features, k)
+            feats = rng.choice(k, size=m, replace=False)
+        else:
+            feats = np.arange(k)
+
+        best = (None, None, np.inf)                     # (feat, thresh, score)
+        for f in feats:
+            col = X[:, f]
+            order = np.argsort(col, kind="stable")
+            cs = col[order]
+            if cs[0] == cs[-1]:
+                continue
+            pos, score = self._best_split_col(y[order])
+            # snap pos to a value boundary (can't split identical values)
+            while pos < n and cs[pos] == cs[pos - 1]:
+                pos += 1
+            if pos >= n or pos < self.min_samples_leaf \
+                    or n - pos < self.min_samples_leaf:
+                continue
+            if score < best[2]:
+                best = (f, 0.5 * (cs[pos - 1] + cs[pos]), score)
+        if best[0] is None or best[2] >= self._node_score(y) - 1e-12:
+            return idx
+
+        f, t, _ = best
+        mask = X[:, f] < t
+        node = self.nodes[idx]
+        node.feature, node.threshold = int(f), float(t)
+        node.left = self._grow(X[mask], y[mask], depth + 1, rng)
+        node.right = self._grow(X[~mask], y[~mask], depth + 1, rng)
+        return idx
+
+    def _walk(self, X):
+        X = np.asarray(X, np.float64)
+        out = np.zeros(len(X), int)
+        for i, row in enumerate(X):
+            j = 0
+            while not self.nodes[j].is_leaf:
+                nd = self.nodes[j]
+                j = nd.left if row[nd.feature] < nd.threshold else nd.right
+            out[i] = j
+        return out
+
+    @property
+    def n_nodes(self):
+        return len(self.nodes)
+
+
+class DecisionTreeClassifier(_BaseTree):
+    def fit(self, X, y):
+        y = np.asarray(y)
+        self.classes_, y_enc = np.unique(y, return_inverse=True)
+        self.n_classes_ = len(self.classes_)
+        return super().fit(X, y_enc)
+
+    def _leaf_value(self, y):
+        return np.bincount(y, minlength=self.n_classes_) / max(len(y), 1)
+
+    def _node_score(self, y):
+        p = np.bincount(y, minlength=self.n_classes_) / max(len(y), 1)
+        return 1.0 - np.sum(p ** 2)
+
+    def _best_split_col(self, y_sorted):
+        return _gini_gain(y_sorted, self.n_classes_)
+
+    def predict_proba(self, X):
+        leaves = self._walk(X)
+        return np.stack([self.nodes[j].value for j in leaves])
+
+    def predict(self, X):
+        return self.classes_[np.argmax(self.predict_proba(X), axis=1)]
+
+
+class DecisionTreeRegressor(_BaseTree):
+    def fit(self, X, y):
+        return super().fit(X, np.asarray(y, np.float64))
+
+    def _leaf_value(self, y):
+        return float(np.mean(y)) if len(y) else 0.0
+
+    def _node_score(self, y):
+        return float(np.var(y)) if len(y) else 0.0
+
+    def _best_split_col(self, y_sorted):
+        return _var_gain(y_sorted)
+
+    def predict(self, X):
+        leaves = self._walk(X)
+        return np.array([self.nodes[j].value for j in leaves])
+
+
+class RandomForestClassifier:
+    """Bagged CART ensemble (bootstrap rows, sqrt-feature subsampling)."""
+
+    def __init__(self, n_estimators=20, max_depth=10, max_features="sqrt",
+                 random_state=0, min_samples_leaf=1):
+        self.n_estimators = n_estimators
+        self.max_depth = max_depth
+        self.max_features = max_features
+        self.random_state = random_state
+        self.min_samples_leaf = min_samples_leaf
+        self.trees: list[DecisionTreeClassifier] = []
+
+    def fit(self, X, y):
+        X = np.asarray(X, np.float64)
+        y = np.asarray(y)
+        self.classes_ = np.unique(y)
+        rng = np.random.default_rng(self.random_state)
+        n = len(X)
+        k = X.shape[1]
+        mf = max(1, int(np.sqrt(k))) if self.max_features == "sqrt" else \
+            self.max_features
+        self.trees = []
+        for t in range(self.n_estimators):
+            rows = rng.integers(0, n, n)
+            tree = DecisionTreeClassifier(
+                max_depth=self.max_depth, max_features=mf,
+                min_samples_leaf=self.min_samples_leaf,
+                random_state=int(rng.integers(1 << 31)))
+            tree.classes_ = self.classes_              # align class space
+            tree.n_classes_ = len(self.classes_)
+            yy = np.searchsorted(self.classes_, y[rows])
+            _BaseTree.fit(tree, X[rows], yy)
+            self.trees.append(tree)
+        return self
+
+    def predict_proba(self, X):
+        return np.mean([t.predict_proba(X) for t in self.trees], axis=0)
+
+    def predict(self, X):
+        return self.classes_[np.argmax(self.predict_proba(X), axis=1)]

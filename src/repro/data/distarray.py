@@ -1,0 +1,66 @@
+"""dislib-style blocked distributed array.
+
+A ``DistArray`` is an (n x m) matrix hybrid-partitioned into a
+``p_r x p_c`` grid of blocks (paper §II: hybrid static partitioning).  All
+algorithm-level operations are expressed as per-block *tasks* submitted to a
+``TaskExecutor`` (see executor.py), mirroring dislib's ds-array on top of
+PyCOMPSs.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+class DistArray:
+    def __init__(self, blocks, shape):
+        self.blocks = blocks                 # list[list[np.ndarray]]
+        self.shape = shape
+        self.p_r = len(blocks)
+        self.p_c = len(blocks[0])
+        rows = np.cumsum([0] + [r[0].shape[0] for r in blocks])
+        cols = np.cumsum([0] + [b.shape[1] for b in blocks[0]])
+        self.row_edges = rows
+        self.col_edges = cols
+
+    def split_rows(self, y: np.ndarray):
+        """Split a per-row vector along this array's row partitioning."""
+        return [y[self.row_edges[i]:self.row_edges[i + 1]]
+                for i in range(self.p_r)]
+
+    # ------------------------------------------------------------ creation
+    @classmethod
+    def from_array(cls, x: np.ndarray, p_r: int, p_c: int) -> "DistArray":
+        n, m = x.shape
+        assert 1 <= p_r <= n and 1 <= p_c <= m, (x.shape, p_r, p_c)
+        row_edges = np.linspace(0, n, p_r + 1).astype(int)
+        col_edges = np.linspace(0, m, p_c + 1).astype(int)
+        blocks = [[np.ascontiguousarray(
+            x[row_edges[i]:row_edges[i + 1], col_edges[j]:col_edges[j + 1]])
+            for j in range(p_c)] for i in range(p_r)]
+        return cls(blocks, (n, m))
+
+    def to_array(self) -> np.ndarray:
+        return np.block(self.blocks)
+
+    # ------------------------------------------------------------ helpers
+    @property
+    def block_shape(self):
+        return self.blocks[0][0].shape
+
+    def block_sizes_mb(self):
+        return [[b.nbytes / 2**20 for b in row] for row in self.blocks]
+
+    def row_stitched(self, executor=None):
+        """Concatenate column blocks per row block (a real task when the
+        algorithm needs whole feature rows, e.g. RF / CSVM)."""
+        if self.p_c == 1:
+            return [row[0] for row in self.blocks]
+        if executor is None:
+            return [np.concatenate(row, axis=1) for row in self.blocks]
+        return executor.map(lambda *bs: np.concatenate(bs, axis=1),
+                            [tuple(row) for row in self.blocks],
+                            name="stitch", unpack=True)
+
+    def map_blocks(self, fn) -> "DistArray":
+        return DistArray([[fn(b) for b in row] for row in self.blocks],
+                         self.shape)

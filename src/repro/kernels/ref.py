@@ -1,0 +1,30 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness references)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    return jnp.dot(a.astype(jnp.float32), b.astype(jnp.float32)) \
+        .astype(a.dtype)
+
+
+def flash_attention_ref(q, k, v, *, window: int = 0, n_meta: int = 0,
+                        scale: float | None = None, causal: bool = True):
+    """q,k,v: [B,T,H,dh] (H == KV heads; repeat kv outside for GQA)."""
+    b, t, h, dh = q.shape
+    s = k.shape[1]
+    scale = dh ** -0.5 if scale is None else scale
+    scores = jnp.einsum("bthd,bshd->bhts", q, k).astype(jnp.float32) * scale
+    qpos = jnp.arange(t)[:, None]
+    kpos = jnp.arange(s)[None, :]
+    mask = jnp.ones((t, s), bool)
+    if causal:
+        mask &= kpos <= qpos + (s - t)            # right-aligned for t < s
+    if window > 0:
+        in_win = (qpos + (s - t) - kpos) < window
+        mask &= in_win | (kpos < n_meta)
+    scores = jnp.where(mask[None, None], scores, jnp.finfo(jnp.float32).min)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhts,bshd->bthd", probs.astype(v.dtype), v)

@@ -1,0 +1,248 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import (jax locks the device
+# count at first initialization).  Do not move them.
+
+import argparse      # noqa: E402
+import json          # noqa: E402
+import re            # noqa: E402
+import time          # noqa: E402
+from pathlib import Path  # noqa: E402
+
+import jax           # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs import SHAPES, cells, get_config  # noqa: E402
+from repro.launch.mesh import make_production_mesh   # noqa: E402
+from repro.models import transformer as tf           # noqa: E402
+from repro.models.layers import spec_tree_to_sds     # noqa: E402
+from repro.runtime import sharding as shd            # noqa: E402
+from repro.runtime.optim import opt_state_specs      # noqa: E402
+from repro.runtime.steps import input_specs, step_fn_for  # noqa: E402
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2,
+                "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+                "f64": 8, "c64": 8, "c128": 16}
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    """Bytes of the first 'dtype[d0,d1,...]' shape in an HLO snippet."""
+    m = _SHAPE_RE.search(text)
+    if not m or m.group(1) not in _DTYPE_BYTES:
+        return 0
+    dims = [int(d) for d in m.group(2).split(",") if d] or [1]
+    n = 1
+    for d in dims:
+        n *= d
+    return n * _DTYPE_BYTES[m.group(1)]
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Sum output-shape bytes per collective kind from compiled HLO."""
+    out = {k: {"count": 0, "bytes": 0} for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = re.match(r"^(?:ROOT )?%?[\w.\-]+ = (.+)$", line)
+        if not m:
+            continue
+        rhs = m.group(1)
+        op = re.search(r"\b([a-z\-]+)\(", rhs)
+        if not op:
+            continue
+        name = op.group(1)
+        # match e.g. all-reduce, all-reduce-start, all-gather-done
+        base = name.replace("-start", "").replace("-done", "")
+        if base in _COLLECTIVES and not name.endswith("-done"):
+            # tuple shapes: sum every element shape before the op name
+            head = rhs.split(name + "(")[0]
+            total = 0
+            for sm in _SHAPE_RE.finditer(head):
+                dims = [int(d) for d in sm.group(2).split(",") if d] or [1]
+                n = 1
+                for d in dims:
+                    n *= d
+                total += n * _DTYPE_BYTES.get(sm.group(1), 0)
+            out[base]["count"] += 1
+            out[base]["bytes"] += total
+    return out
+
+
+def build_cell(arch: str, shape_name: str, mesh, *, microbatches=None,
+               overrides=None, use_flash=False, force_f32=False,
+               cfg_overrides=None):
+    """(jitted-fn, example args as ShapeDtypeStructs) for one cell."""
+    cfg = get_config(arch)
+    if cfg_overrides:
+        moe_over = {k[4:]: v for k, v in cfg_overrides.items()
+                    if k.startswith("moe_")}
+        plain = {k: v for k, v in cfg_overrides.items()
+                 if not k.startswith("moe_")}
+        if moe_over and cfg.moe is not None:
+            import dataclasses as _dc
+            plain["moe"] = _dc.replace(cfg.moe, **moe_over)
+        cfg = cfg.replace(**plain)
+    if force_f32:
+        # memory-probe variant: all-f32 avoids XLA:CPU's bf16->f32
+        # legalization converts (hoisted whole-cache/weight copies that do
+        # not exist on TPU); bf16-equivalent bytes = f32 bytes / 2.
+        cfg = cfg.replace(param_dtype="float32", compute_dtype="float32",
+                          grad_accum_dtype="float32")
+    shape = SHAPES[shape_name]
+    rules = shd.make_rules(cfg, mesh, shape, overrides)
+
+    pspecs = tf.param_specs(cfg)
+    p_sds = spec_tree_to_sds(pspecs)
+    p_sh = shd.spec_shardings(pspecs, mesh, rules)
+
+    bspecs = input_specs(cfg, shape, microbatches=microbatches)
+    b_sds = spec_tree_to_sds(bspecs)
+    b_sh = shd.spec_shardings(bspecs, mesh, rules)
+
+    fn, donate = step_fn_for(cfg, shape, use_flash=use_flash,
+                             microbatches=microbatches,
+                             shard_ctx=(mesh, rules))
+    rep = NamedSharding(mesh, P())
+
+    if shape.kind == "train":
+        ospecs = opt_state_specs(cfg, pspecs)
+        o_sds = spec_tree_to_sds(ospecs)
+        opt_rules = rules
+        if cfg.opt_sharding == "zero1":
+            opt_rules = {**rules, "embed": "data", "embed_out": "data"}
+        o_sh = shd.spec_shardings(ospecs, mesh, opt_rules)
+        s_sds = jax.ShapeDtypeStruct((), jax.numpy.int32)
+        jf = jax.jit(fn, in_shardings=(p_sh, o_sh, b_sh, rep),
+                     out_shardings=(p_sh, o_sh, None),
+                     donate_argnums=donate)
+        args = (p_sds, o_sds, b_sds, s_sds)
+    elif shape.kind == "prefill":
+        cspecs = tf.cache_specs(cfg, shape.global_batch, shape.seq_len)
+        c_sh = shd.spec_shardings(cspecs, mesh, rules)
+        jf = jax.jit(fn, in_shardings=(p_sh, b_sh),
+                     out_shardings=(None, c_sh), donate_argnums=donate)
+        args = (p_sds, b_sds)
+    else:  # decode
+        jf = jax.jit(fn, in_shardings=(p_sh, b_sh),
+                     out_shardings=(None, b_sh["cache"]),
+                     donate_argnums=donate)
+        args = (p_sds, b_sds)
+    return cfg, jf, args
+
+
+def run_cell(arch, shape_name, mesh, mesh_name, *, microbatches=None,
+             overrides=None, use_flash=False, save_hlo=False, outdir=None,
+             cfg_overrides=None):
+    t0 = time.time()
+    cfg, jf, args = build_cell(arch, shape_name, mesh,
+                               microbatches=microbatches, overrides=overrides,
+                               use_flash=use_flash,
+                               cfg_overrides=cfg_overrides)
+    with mesh:
+        lowered = jf.lower(*args)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    coll = parse_collectives(hlo)
+
+    per_dev = 0
+    if mem is not None:
+        per_dev = (getattr(mem, "argument_size_in_bytes", 0) or 0) \
+            + (getattr(mem, "temp_size_in_bytes", 0) or 0)
+    tpu_est = None
+    if per_dev > 15 * 2**30 and cfg.param_dtype == "bfloat16":
+        # re-probe in f32 (no legalization converts); /2 = bf16-equivalent
+        cfg32, jf32, args32 = build_cell(
+            arch, shape_name, mesh, microbatches=microbatches,
+            overrides=overrides, use_flash=use_flash, force_f32=True,
+            cfg_overrides=cfg_overrides)
+        with mesh:
+            mem32 = jf32.lower(*args32).compile().memory_analysis()
+        tpu_est = ((mem32.argument_size_in_bytes or 0)
+                   + (mem32.temp_size_in_bytes or 0)) / 2
+
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": mesh_name,
+        "n_devices": mesh.size,
+        "microbatches": microbatches if microbatches is not None
+        else (cfg.train_microbatches if SHAPES[shape_name].kind == "train" else 0),
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "flops": cost.get("flops", 0.0) if cost else 0.0,
+        "bytes_accessed": cost.get("bytes accessed", 0.0) if cost else 0.0,
+        "collectives": coll,
+        "memory": {
+            k: getattr(mem, k, None)
+            for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes", "generated_code_size_in_bytes",
+                      "alias_size_in_bytes")
+        } if mem is not None else {},
+        "mem_device_bytes": per_dev,
+        "mem_device_tpu_est_bytes": tpu_est,
+        "n_params": cfg.n_params(),
+        "n_active_params": cfg.n_active_params(),
+    }
+    if outdir:
+        outdir = Path(outdir)
+        outdir.mkdir(parents=True, exist_ok=True)
+        name = f"{arch}__{shape_name}__{mesh_name}"
+        (outdir / f"{name}.json").write_text(json.dumps(rec, indent=1))
+        if save_hlo:
+            (outdir / f"{name}.hlo.txt").write_text(hlo)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser(description="multi-pod dry-run")
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument("--use-flash", action="store_true")
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    args = ap.parse_args()
+
+    meshes = []
+    if args.both_meshes or not args.multi_pod:
+        meshes.append(("pod16x16", make_production_mesh(multi_pod=False)))
+    if args.both_meshes or args.multi_pod:
+        meshes.append(("pods2x16x16", make_production_mesh(multi_pod=True)))
+
+    todo = list(cells()) if args.all else [(args.arch, args.shape)]
+    failures = []
+    for arch, shape_name in todo:
+        for mesh_name, mesh in meshes:
+            tag = f"{arch} x {shape_name} x {mesh_name}"
+            try:
+                rec = run_cell(arch, shape_name, mesh, mesh_name,
+                               microbatches=args.microbatches,
+                               use_flash=args.use_flash,
+                               save_hlo=args.save_hlo, outdir=args.out)
+                est = rec.get("mem_device_tpu_est_bytes")
+                extra = (f" tpu_est={est/2**30:.2f}GiB" if est else "")
+                print(f"[ok] {tag}: flops={rec['flops']:.3e} "
+                      f"bytes={rec['bytes_accessed']:.3e} "
+                      f"mem/dev={rec['mem_device_bytes']/2**30:.2f}GiB"
+                      f"{extra} compile={rec['compile_s']}s", flush=True)
+            except Exception as e:  # noqa: BLE001 -- report and continue
+                failures.append(tag)
+                print(f"[FAIL] {tag}: {type(e).__name__}: {e}", flush=True)
+    if failures:
+        raise SystemExit(f"{len(failures)} cell(s) failed: {failures}")
+    print("dry-run complete: all cells compiled.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,28 @@
+"""Mesh construction.  Functions only -- importing this module must never
+touch jax device state (the dry-run sets XLA_FLAGS before first jax init).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips/pod ("data","model"); 2 pods adds a "pod" axis."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape: tuple, axes: tuple):
+    return jax.make_mesh(tuple(shape), tuple(axes))
+
+
+def make_host_mesh():
+    """Whatever devices exist locally, as a (data, model) mesh."""
+    n = len(jax.devices())
+    model = 1
+    for cand in (4, 2, 1):
+        if n % cand == 0 and cand <= n:
+            model = cand
+            break
+    return jax.make_mesh((n // model, model), ("data", "model"))

@@ -1,0 +1,191 @@
+"""End-to-end training driver with fault tolerance and elastic re-mesh.
+
+Runs a reduced-scale model on local devices (CPU smoke / demo scale), with:
+  * sharded params/optimizer via the production sharding rules,
+  * async checkpointing (atomic, checksummed, keep-last-k),
+  * straggler detection,
+  * failure injection (--inject-failure N) exercising the full
+    detect -> restore-from-checkpoint -> re-mesh -> resume path.
+
+``--host-devices K`` splits the host CPU into K XLA devices (must be parsed
+before jax initializes, hence the argv peek at the top).
+"""
+import os
+import sys
+
+if "--host-devices" in sys.argv:                      # must precede jax init
+    _n = sys.argv[sys.argv.index("--host-devices") + 1]
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + f" --xla_force_host_platform_device_count={_n}")
+
+import argparse       # noqa: E402
+import time           # noqa: E402
+
+import jax            # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np    # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs import SHAPES, ShapeConfig, get_config, reduced_config  # noqa: E402
+from repro.models import transformer as tfm  # noqa: E402
+from repro.models.layers import init_param_tree, spec_tree_to_sds  # noqa: E402
+from repro.runtime import sharding as shd  # noqa: E402
+from repro.runtime.checkpoint import CheckpointManager  # noqa: E402
+from repro.runtime.elastic import adapt_config, make_plan_mesh, plan_mesh  # noqa: E402
+from repro.runtime.fault import StragglerDetector, simulate_failure  # noqa: E402
+from repro.runtime.optim import opt_state_specs  # noqa: E402
+from repro.runtime.pipeline import DataPipeline, PipelineConfig  # noqa: E402
+from repro.runtime.steps import TrainHParams, input_specs, make_train_step  # noqa: E402
+
+
+def scale_config(cfg, *, d_model=256, n_layers=4, vocab=2048, heads=4):
+    """Blow a reduced config up/down to a target demo scale."""
+    kinds = tuple(cfg.kinds[i % cfg.n_layers] for i in range(n_layers))
+    wins = tuple(cfg.layer_windows[i % cfg.n_layers] for i in range(n_layers))
+    moes = tuple(cfg.layer_moe[i % cfg.n_layers] for i in range(n_layers))
+    return cfg.replace(n_layers=n_layers, d_model=d_model, vocab=vocab,
+                       n_heads=heads, n_kv_heads=min(cfg.n_kv_heads, heads),
+                       d_head=d_model // heads, d_ff=4 * d_model,
+                       dense_d_ff=4 * d_model if cfg.dense_d_ff else 0,
+                       layer_kinds=kinds, windows=wins, moe_layers=moes)
+
+
+PRESETS = {
+    "small": dict(d_model=256, n_layers=4, vocab=2048),    # ~5M params
+    "100m": dict(d_model=768, n_layers=12, vocab=16384),   # ~110M params
+}
+
+
+def build(cfg, shape, mesh, hp):
+    rules = shd.make_rules(cfg, mesh, shape)
+    pspecs = tfm.param_specs(cfg)
+    ospecs = opt_state_specs(cfg, pspecs)
+    bspecs = input_specs(cfg, shape)
+    p_sh = shd.spec_shardings(pspecs, mesh, rules)
+    o_sh = shd.spec_shardings(ospecs, mesh, rules)
+    b_sh = shd.spec_shardings(bspecs, mesh, rules)
+    rep = NamedSharding(mesh, P())
+    fn = make_train_step(cfg, hp, shard_ctx=(mesh, rules))
+    step_fn = jax.jit(fn, in_shardings=(p_sh, o_sh, b_sh, rep),
+                      out_shardings=(p_sh, o_sh, None),
+                      donate_argnums=(0, 1))
+    return step_fn, (pspecs, ospecs), (p_sh, o_sh, b_sh)
+
+
+def init_state(cfg, specs, shardings, seed):
+    pspecs, ospecs = specs
+    p_sh, o_sh, _ = shardings
+    params = init_param_tree(pspecs, jax.random.PRNGKey(seed))
+    params = jax.tree.map(jax.device_put, params, p_sh)
+    opt = init_param_tree(ospecs, jax.random.PRNGKey(0))   # zeros
+    opt = jax.tree.map(jax.device_put, opt, o_sh)
+    return params, opt
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="yi-6b")
+    ap.add_argument("--preset", default="small", choices=sorted(PRESETS))
+    ap.add_argument("--steps", type=int, default=30)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--microbatches", type=int, default=2)
+    ap.add_argument("--ckpt-dir", default="artifacts/ckpt_demo")
+    ap.add_argument("--ckpt-every", type=int, default=10)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--inject-failure", type=int, default=-1)
+    ap.add_argument("--host-devices", type=int, default=0)  # consumed above
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--quiet", action="store_true")
+    args = ap.parse_args(argv)
+
+    cfg = scale_config(reduced_config(args.arch), **PRESETS[args.preset])
+    cfg = cfg.replace(train_microbatches=args.microbatches)
+    shape = ShapeConfig("demo", "train", args.seq, args.global_batch)
+    hp = TrainHParams(peak_lr=1e-3, warmup=10, total_steps=args.steps)
+
+    n_dev = len(jax.devices())
+    plan = plan_mesh(n_dev, args.global_batch, prefer_model=min(4, n_dev),
+                     microbatches=cfg.train_microbatches)
+    mesh = make_plan_mesh(plan)
+    cfg = adapt_config(cfg, plan, args.global_batch)
+    print(f"[train] arch={cfg.name} params={cfg.n_params()/1e6:.1f}M "
+          f"mesh={dict(zip(mesh.axis_names, mesh.devices.shape))} "
+          f"microbatches={cfg.train_microbatches}")
+
+    step_fn, specs, shardings = build(cfg, shape, mesh, hp)
+    ckpt = CheckpointManager(args.ckpt_dir, keep=3)
+    pipe = DataPipeline(cfg, shape, PipelineConfig(seed=args.seed),
+                        sharding=shardings[2]).start()
+
+    start_step = 0
+    if args.resume and ckpt.all_steps():
+        tree = {"params": spec_tree_to_sds(specs[0]),
+                "opt": spec_tree_to_sds(specs[1])}
+        sh = {"params": shardings[0], "opt": shardings[1]}
+        restored, manifest = ckpt.restore_latest(tree, shardings=sh)
+        params, opt = restored["params"], restored["opt"]
+        start_step = manifest["step"]
+        pipe.restore(manifest["extra"]["pipeline"])
+        print(f"[train] resumed from step {start_step}")
+    else:
+        params, opt = init_state(cfg, specs, shardings, args.seed)
+
+    detector = StragglerDetector()
+    losses = []
+    failure_schedule = ({args.inject_failure: ("device_loss", {"lost": 1})}
+                        if args.inject_failure >= 0 else {})
+
+    step = start_step
+    while step < args.steps:
+        ev = simulate_failure(step, failure_schedule)
+        if ev is not None:
+            print(f"[fault] injected {ev.kind} at step {step}: "
+                  "restoring from checkpoint onto reduced mesh")
+            ckpt.wait()
+            n_healthy = max(1, n_dev - ev.payload["lost"])
+            plan = plan_mesh(n_healthy, args.global_batch,
+                             prefer_model=min(4, n_healthy),
+                             microbatches=cfg.train_microbatches)
+            mesh = make_plan_mesh(plan)
+            cfg = adapt_config(cfg, plan, args.global_batch)
+            step_fn, specs, shardings = build(cfg, shape, mesh, hp)
+            pipe.sharding = shardings[2]
+            tree = {"params": spec_tree_to_sds(specs[0]),
+                    "opt": spec_tree_to_sds(specs[1])}
+            sh = {"params": shardings[0], "opt": shardings[1]}
+            restored, manifest = ckpt.restore_latest(tree, shardings=sh,
+                                                     max_step=step)
+            params, opt = restored["params"], restored["opt"]
+            step = manifest["step"]
+            pipe.restore(manifest["extra"]["pipeline"])
+            failure_schedule.pop(ev.step, None)
+            print(f"[fault] resumed at step {step} on {plan.size} device(s)")
+            continue
+
+        batch = next(pipe)
+        t0 = time.time()
+        params, opt, metrics = step_fn(params, opt, batch,
+                                       jnp.asarray(step, jnp.int32))
+        loss = float(metrics["loss"])
+        dt = time.time() - t0
+        verdict = detector.record(dt)
+        losses.append(loss)
+        step += 1
+        if not args.quiet and (step % 5 == 0 or step == 1):
+            print(f"  step {step:4d} loss={loss:.4f} {dt*1e3:7.1f}ms "
+                  f"gnorm={float(metrics['gnorm']):.2f} [{verdict}]")
+        if step % args.ckpt_every == 0 or step == args.steps:
+            ckpt.save(step, {"params": params, "opt": opt},
+                      extra={"pipeline": pipe.state()})
+    ckpt.wait()
+    pipe.stop()
+
+    first, last = np.mean(losses[:5]), np.mean(losses[-5:])
+    print(f"[train] done: loss {first:.4f} -> {last:.4f} "
+          f"({'improved' if last < first else 'NOT improved'})")
+    return losses
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,294 @@
+"""Attention variants: GQA (full / sliding-window) and MLA (DeepSeek-V3).
+
+Two paths per variant:
+  * full-sequence (train / prefill) -- optionally emits the KV cache;
+  * single-token decode against a cache (full, ring/windowed, or MLA-latent),
+    with an optional never-evicted prefix segment (hymba meta tokens).
+
+MLA decode uses the absorbed formulation (q projected into the latent space,
+scores/context computed against the compressed c_kv cache) -- the memory- and
+FLOP-saving trick that makes MLA serving-efficient.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import ParamSpec, apply_rope, causal_window_mask, rms_norm
+from repro.runtime.shardctx import constrain
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs
+# ---------------------------------------------------------------------------
+
+def gqa_spec(cfg: ModelConfig, lead: tuple = ()):
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    la = ("layers",) * len(lead)
+    dt = cfg.param_dtype
+    return {
+        "wq": ParamSpec(lead + (d, h, hd), la + ("embed", "heads", "head_dim"), dt),
+        "wk": ParamSpec(lead + (d, kv, hd), la + ("embed", "kv", "head_dim"), dt),
+        "wv": ParamSpec(lead + (d, kv, hd), la + ("embed", "kv", "head_dim"), dt),
+        "wo": ParamSpec(lead + (h, hd, d), la + ("heads", "head_dim", "embed_out"), dt),
+    }
+
+
+def mla_spec(cfg: ModelConfig, lead: tuple = ()):
+    m = cfg.mla
+    d, h = cfg.d_model, cfg.n_heads
+    la = ("layers",) * len(lead)
+    dt = cfg.param_dtype
+    return {
+        "wq_a": ParamSpec(lead + (d, m.q_lora_rank), la + ("embed", None), dt),
+        "q_norm": ParamSpec(lead + (m.q_lora_rank,), la + (None,), dt, init="zeros"),
+        "wq_b": ParamSpec(lead + (m.q_lora_rank, h, m.qk_nope_dim + m.qk_rope_dim),
+                          la + (None, "heads", "head_dim"), dt),
+        "wkv_a": ParamSpec(lead + (d, m.kv_lora_rank + m.qk_rope_dim),
+                           la + ("embed", None), dt),
+        "kv_norm": ParamSpec(lead + (m.kv_lora_rank,), la + (None,), dt, init="zeros"),
+        "wkv_b": ParamSpec(lead + (m.kv_lora_rank, h, m.qk_nope_dim + m.v_head_dim),
+                           la + (None, "heads", "head_dim"), dt),
+        "wo": ParamSpec(lead + (h, m.v_head_dim, d),
+                        la + ("heads", "head_dim", "embed_out"), dt),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Core softmax attention (shared)
+# ---------------------------------------------------------------------------
+
+# above this many score elements per (batch, head), full-sequence attention
+# switches to the chunked-query path (the pure-XLA analogue of the Pallas
+# flash kernel: [T,S] probabilities are never materialized)
+_CHUNK_THRESHOLD = 32 * 1024 * 1024
+_CHUNK_Q = 1024
+
+
+def _chunked_sdpa(q, k, v, positions, window, n_meta, scale):
+    """Scan over query chunks; keys stay whole per chunk (full-row softmax).
+
+    Peak memory is [B,H,chunk_q,S] instead of [B,H,T,S].
+    """
+    b, t, h, dh = q.shape
+    cq = min(_CHUNK_Q, t)
+    pad = (-t) % cq
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        positions = jnp.concatenate(
+            [positions, positions[-1] + 1 + jnp.arange(pad)])
+    nq = q.shape[1] // cq
+    qc = q.reshape(b, nq, cq, h, dh).transpose(1, 0, 2, 3, 4)
+    pc = positions.reshape(nq, cq)
+    k_pos = positions[:t] if pad else positions
+
+    def body(_, inp):
+        q_i, p_i = inp
+        scores = jnp.einsum("bthd,bshd->bhts", q_i, k) \
+            .astype(jnp.float32) * scale
+        # heads take "model" when they divide it; otherwise the key axis
+        # does (hymba's 25 heads) -- resolver drops the loser per-tensor
+        scores = constrain(scores, ("batch", "heads", None, "attn_kv"))
+        mask = causal_window_mask(p_i, k_pos, window, n_meta)
+        scores = jnp.where(mask[None, None], scores,
+                           jnp.finfo(jnp.float32).min)
+        probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+        return None, jnp.einsum("bhts,bshd->bthd", probs, v)
+
+    _, out = jax.lax.scan(body, None, (qc, pc))
+    dhv = v.shape[-1]                        # MLA: v head dim != qk head dim
+    out = out.transpose(1, 0, 2, 3, 4).reshape(b, t + pad, h, dhv)
+    return out[:, :t]
+
+
+def _attend(q, k, v, positions, window, n_meta, scale):
+    """Dense or chunked full-sequence attention (auto by score size)."""
+    t, s = q.shape[1], k.shape[1]
+    g = q.shape[2] // k.shape[2]
+    if g > 1:
+        k = jnp.repeat(k, g, axis=2)
+        v = jnp.repeat(v, g, axis=2)
+    if t * s >= _CHUNK_THRESHOLD:
+        return _chunked_sdpa(q, k, v, positions, window, n_meta, scale)
+    mask = causal_window_mask(positions, positions, window, n_meta)
+    return _sdpa(q, k, v, mask[None], scale)
+
+
+def _sdpa(q, k, v, mask, scale):
+    """q:[B,T,H,dh] k,v:[B,S,KV,dh] (KV divides H); mask:[B?,T,S] bool.
+
+    KV heads are tiled up to H ("repeat-kv") before the score einsum so the
+    [B,H,T,S] probabilities stay sharded on the (large, model-sharded) head
+    axis even when n_kv_heads does not divide the model-axis size -- the
+    memory-critical layout under tensor parallelism.
+    """
+    b, t, h, dh = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    if g > 1:
+        k = jnp.repeat(k, g, axis=2)
+        v = jnp.repeat(v, g, axis=2)
+    scores = jnp.einsum("bthd,bshd->bhts", q, k).astype(jnp.float32) * scale
+    scores = constrain(scores, ("batch", "heads", None, "attn_kv"))
+    scores = jnp.where(mask[:, None] if mask.ndim == 3 else mask, scores,
+                       jnp.finfo(jnp.float32).min)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhts,bshd->bthd", probs, v)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# GQA: full-sequence path
+# ---------------------------------------------------------------------------
+
+def gqa_forward(p, x, positions, *, window: int, theta: float, n_meta: int,
+                return_kv: bool = False, use_flash: bool = False):
+    """x: [B,T,D]; positions: [T] absolute. Returns y (and optionally (k, v))."""
+    dh = p["wq"].shape[-1]
+    q = constrain(jnp.einsum("btd,dhk->bthk", x, p["wq"]),
+                  ("batch", None, "heads", None))
+    k = constrain(jnp.einsum("btd,dhk->bthk", x, p["wk"]),
+                  ("batch", None, "kv", None))
+    v = constrain(jnp.einsum("btd,dhk->bthk", x, p["wv"]),
+                  ("batch", None, "kv", None))
+    q = apply_rope(q, positions, theta)
+    k = apply_rope(k, positions, theta)
+    if use_flash:
+        from repro.kernels.ops import flash_attention
+        y = flash_attention(q, k, v, window=window, n_meta=n_meta,
+                            scale=dh ** -0.5)
+    else:
+        y = _attend(q, k, v, positions, window, n_meta, dh ** -0.5)
+    out = jnp.einsum("bthk,hkd->btd", y, p["wo"])
+    if return_kv:
+        return out, (k, v)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# GQA: decode path (full or ring cache, optional static prefix)
+# ---------------------------------------------------------------------------
+
+def gqa_decode(p, x, cache, pos, *, window: int, theta: float, n_meta: int):
+    """x: [B,1,D]; cache: {"k","v": [B,S,KV,dh], optional "k_pre","v_pre"}.
+
+    ``pos`` is the absolute position of the new token.  For windowed layers
+    the cache is a ring buffer of capacity ``window``; otherwise capacity is
+    the max sequence length and slot == pos.
+    """
+    dh = p["wq"].shape[-1]
+    q = apply_rope(jnp.einsum("btd,dhk->bthk", x, p["wq"]), pos[None], theta)
+    k_new = apply_rope(jnp.einsum("btd,dhk->bthk", x, p["wk"]), pos[None], theta)
+    v_new = jnp.einsum("btd,dhk->bthk", x, p["wv"])
+
+    cap = cache["k"].shape[1]
+    slot = jnp.where(window > 0, pos % cap, pos)
+    k = jax.lax.dynamic_update_slice(cache["k"], k_new.astype(cache["k"].dtype),
+                                     (0, slot, 0, 0))
+    v = jax.lax.dynamic_update_slice(cache["v"], v_new.astype(cache["v"].dtype),
+                                     (0, slot, 0, 0))
+
+    n_prefix = cache["k_pre"].shape[1] if "k_pre" in cache else 0
+    idx = jnp.arange(cap)
+    if window > 0:
+        age = jnp.mod(slot - idx, cap)          # 0 == just written
+        # ring slots are valid iff their absolute position (pos - age) has
+        # been written; prefix positions live in k_pre, never in the ring.
+        valid = age <= pos - n_prefix
+    else:
+        valid = idx <= pos
+    mask = valid[None, None, :]                  # [1,1,S]
+
+    if "k_pre" in cache:                         # never-evicted prefix (meta)
+        k_all = jnp.concatenate([cache["k_pre"], k], axis=1)
+        v_all = jnp.concatenate([cache["v_pre"], v], axis=1)
+        pre = jnp.ones((1, 1, cache["k_pre"].shape[1]), bool)
+        mask = jnp.concatenate([pre, mask], axis=-1)
+    else:
+        k_all, v_all = k, v
+
+    y = _sdpa(q, k_all.astype(q.dtype), v_all.astype(q.dtype), mask, dh ** -0.5)
+    out = jnp.einsum("bthk,hkd->btd", y, p["wo"])
+    new_cache = dict(cache)
+    new_cache["k"], new_cache["v"] = k, v
+    return out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA: full-sequence path
+# ---------------------------------------------------------------------------
+
+def mla_forward(cfg: ModelConfig, p, x, positions, *, n_meta: int = 0,
+                return_latent: bool = False):
+    m = cfg.mla
+    b, t, _ = x.shape
+    h = cfg.n_heads
+    scale = (m.qk_nope_dim + m.qk_rope_dim) ** -0.5
+
+    q = rms_norm(x @ p["wq_a"], p["q_norm"], cfg.norm_eps)
+    q = jnp.einsum("btr,rhk->bthk", q, p["wq_b"])
+    q_nope, q_rope = jnp.split(q, [m.qk_nope_dim], axis=-1)
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    ckv = x @ p["wkv_a"]                                   # [B,T,rank+rope]
+    c, k_rope = jnp.split(ckv, [m.kv_lora_rank], axis=-1)
+    c = rms_norm(c, p["kv_norm"], cfg.norm_eps)
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)
+
+    kvd = jnp.einsum("btr,rhk->bthk", c, p["wkv_b"])       # decompress
+    k_nope, v = jnp.split(kvd, [m.qk_nope_dim], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope, (b, t, h, m.qk_rope_dim))], axis=-1)
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+
+    y = _attend(q_full, k, v, positions, 0, n_meta, scale)
+    out = jnp.einsum("bthk,hkd->btd", y, p["wo"])
+    if return_latent:
+        return out, (c, k_rope[:, :, 0, :])
+    return out
+
+
+# ---------------------------------------------------------------------------
+# MLA: decode path (absorbed, latent cache)
+# ---------------------------------------------------------------------------
+
+def mla_decode(cfg: ModelConfig, p, x, cache, pos):
+    """cache: {"ckv": [B,S,rank], "krope": [B,S,rope_dim]} (latent only)."""
+    m = cfg.mla
+    scale = (m.qk_nope_dim + m.qk_rope_dim) ** -0.5
+
+    q = rms_norm(x @ p["wq_a"], p["q_norm"], cfg.norm_eps)
+    q = jnp.einsum("btr,rhk->bthk", q, p["wq_b"])[:, 0]    # [B,H,nope+rope]
+    q_nope, q_rope = jnp.split(q, [m.qk_nope_dim], axis=-1)
+    q_rope = apply_rope(q_rope[:, None], pos[None], cfg.rope_theta)[:, 0]
+
+    ckv = (x @ p["wkv_a"])[:, 0]                           # [B,rank+rope]
+    c_new, kr_new = jnp.split(ckv, [m.kv_lora_rank], axis=-1)
+    c_new = rms_norm(c_new, p["kv_norm"], cfg.norm_eps)
+    kr_new = apply_rope(kr_new[:, None, None, :], pos[None],
+                        cfg.rope_theta)[:, 0, 0]
+
+    ckv_c = jax.lax.dynamic_update_slice(
+        cache["ckv"], c_new[:, None].astype(cache["ckv"].dtype), (0, pos, 0))
+    kr_c = jax.lax.dynamic_update_slice(
+        cache["krope"], kr_new[:, None].astype(cache["krope"].dtype), (0, pos, 0))
+
+    # absorbed projections
+    w_uk = p["wkv_b"][..., : m.qk_nope_dim]                # [rank,H,nope]
+    w_uv = p["wkv_b"][..., m.qk_nope_dim:]                 # [rank,H,v]
+    q_lat = jnp.einsum("bhn,rhn->bhr", q_nope, w_uk)
+
+    s = jnp.einsum("bhr,bsr->bhs", q_lat.astype(jnp.float32),
+                   ckv_c.astype(jnp.float32))
+    s = s + jnp.einsum("bhn,bsn->bhs", q_rope.astype(jnp.float32),
+                       kr_c.astype(jnp.float32))
+    s = s * scale
+    valid = jnp.arange(ckv_c.shape[1]) <= pos
+    s = jnp.where(valid[None, None], s, jnp.finfo(jnp.float32).min)
+    probs = jax.nn.softmax(s, axis=-1)
+
+    o_lat = jnp.einsum("bhs,bsr->bhr", probs, ckv_c.astype(jnp.float32))
+    v = jnp.einsum("bhr,rhv->bhv", o_lat.astype(x.dtype), w_uv)
+    out = jnp.einsum("bhv,hvd->bd", v, p["wo"])[:, None]
+    return out, {"ckv": ckv_c, "krope": kr_c}

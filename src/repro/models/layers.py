@@ -1,0 +1,147 @@
+"""Shared model layers: norms, rotary embeddings, MLPs, parameter specs.
+
+All layers are pure functions over parameter pytrees.  Parameter *specs*
+(shape + dtype + logical axes) are first-class so the dry-run can lower
+against ``jax.ShapeDtypeStruct`` trees without ever allocating weights.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ParamSpec:
+    """Shape/dtype/logical-axes description of one parameter tensor."""
+    shape: tuple
+    axes: tuple                    # logical axis name (or None) per dim
+    dtype: str = "bfloat16"
+    init: str = "normal"           # normal | zeros | ones | ssm_a | ssm_dt
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+    def sds(self) -> jax.ShapeDtypeStruct:
+        return jax.ShapeDtypeStruct(self.shape, jnp.dtype(self.dtype))
+
+
+def spec_tree_to_sds(tree):
+    return jax.tree.map(lambda s: s.sds(), tree,
+                        is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def _init_leaf(spec: ParamSpec, key: jax.Array) -> jax.Array:
+    dt = jnp.dtype(spec.dtype)
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, dt)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, dt)
+    if spec.init == "ssm_a":       # A_log in [log 1, log 16]
+        u = jax.random.uniform(key, spec.shape, jnp.float32, 1.0, 16.0)
+        return jnp.log(u).astype(dt)
+    if spec.init == "ssm_dt":      # dt bias ~ softplus^-1(U[1e-3, 1e-1])
+        u = jax.random.uniform(key, spec.shape, jnp.float32, 1e-3, 1e-1)
+        return (u + jnp.log(-jnp.expm1(-u))).astype(dt)
+    fan_in = spec.shape[-2] if len(spec.shape) >= 2 else spec.shape[-1]
+    scale = 0.02 if fan_in == 0 else min(0.02, (1.0 / fan_in) ** 0.5)
+    return (jax.random.normal(key, spec.shape, jnp.float32) * scale).astype(dt)
+
+
+def init_param_tree(tree, rng: jax.Array):
+    """Materialize a ParamSpec tree into real weights (smoke/example scale)."""
+    leaves, treedef = jax.tree.flatten(
+        tree, is_leaf=lambda x: isinstance(x, ParamSpec))
+    keys = jax.random.split(rng, len(leaves))
+    return jax.tree.unflatten(
+        treedef, [_init_leaf(s, k) for s, k in zip(leaves, keys)])
+
+
+# ---------------------------------------------------------------------------
+# Primitive layers
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + scale.astype(jnp.float32))).astype(dtype)
+
+
+def rope_freqs(head_dim: int, theta) -> jax.Array:
+    """Inverse frequencies [head_dim//2]; theta may be a traced scalar."""
+    exponent = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponent)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta) -> jax.Array:
+    """x: [..., T, H, d]; positions: broadcastable to [..., T]."""
+    d = x.shape[-1]
+    inv = rope_freqs(d, theta)                       # [d/2]
+    ang = positions[..., None].astype(jnp.float32) * inv       # [..., T, d/2]
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def activation(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu}[name]
+
+
+# ---------------------------------------------------------------------------
+# Gated MLP (SwiGLU / GeGLU)
+# ---------------------------------------------------------------------------
+
+def mlp_spec(d_model: int, d_ff: int, dtype: str, stacked: int | None = None):
+    lead = () if stacked is None else (stacked,)
+    lax = () if stacked is None else ("layers",)
+    return {
+        "wi": ParamSpec(lead + (d_model, d_ff), lax + ("embed", "ffn"), dtype),
+        "wg": ParamSpec(lead + (d_model, d_ff), lax + ("embed", "ffn"), dtype),
+        "wo": ParamSpec(lead + (d_ff, d_model), lax + ("ffn", "embed_out"), dtype),
+    }
+
+
+def mlp(params, x: jax.Array, act: str) -> jax.Array:
+    h = activation(act)(x @ params["wg"]) * (x @ params["wi"])
+    return h @ params["wo"]
+
+
+# ---------------------------------------------------------------------------
+# Masks
+# ---------------------------------------------------------------------------
+
+def causal_window_mask(q_pos: jax.Array, k_pos: jax.Array, window,
+                       n_always_visible: int = 0) -> jax.Array:
+    """Boolean [.., Tq, Tk] mask: causal, optionally sliding-window.
+
+    ``window`` may be a traced scalar; 0 means global.  ``n_always_visible``
+    prefix positions (hymba meta tokens) are exempt from the window.
+    """
+    diff = q_pos[..., :, None] - k_pos[..., None, :]
+    mask = diff >= 0
+    window = jnp.asarray(window)
+    in_window = (diff < jnp.where(window > 0, window, jnp.iinfo(jnp.int32).max))
+    always = k_pos[..., None, :] < n_always_visible
+    return mask & (in_window | always)
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  mask: jax.Array | None = None):
+    """Mean next-token CE in fp32; logits [..., V], labels [...] int32."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - ll
+    if mask is not None:
+        denom = jnp.maximum(jnp.sum(mask), 1)
+        return jnp.sum(nll * mask) / denom
+    return jnp.mean(nll)

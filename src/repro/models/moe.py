@@ -1,0 +1,140 @@
+"""Mixture-of-experts FFN with capacity-based top-k routing.
+
+Dispatch is the per-expert top-C gather formulation: after top-k routing,
+each expert independently selects its C highest-affinity tokens
+(``lax.top_k`` over the token axis), processes them with a gated MLP, and
+scatter-adds the weighted results back.  Overflow tokens are dropped
+(standard capacity-factor semantics); shared experts (DeepSeek-V3) are
+always-on dense MLPs added to the routed output.
+
+Expert weights shard either expert-parallel (``shard_mode="ep"``: the expert
+axis over the "model" mesh axis) or tensor-parallel inside each expert
+(``shard_mode="tp"``: d_ff over "model") -- chosen per-arch (mixtral has only
+8 experts for a 16-way model axis).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import ParamSpec, activation
+from repro.runtime.shardctx import constrain
+
+
+def moe_spec(cfg: ModelConfig, lead: tuple = ()):
+    mo = cfg.moe
+    d = cfg.d_model
+    la = ("layers",) * len(lead)
+    dt = cfg.param_dtype
+    e_ax = "experts" if mo.shard_mode == "ep" else None
+    f_ax = None if mo.shard_mode == "ep" else "ffn"
+    spec = {
+        "router": ParamSpec(lead + (d, mo.n_experts), la + ("embed", None),
+                            "float32"),
+        "w_in": ParamSpec(lead + (mo.n_experts, d, mo.d_ff),
+                          la + (e_ax, "embed", f_ax), dt),
+        "w_gate": ParamSpec(lead + (mo.n_experts, d, mo.d_ff),
+                            la + (e_ax, "embed", f_ax), dt),
+        "w_out": ParamSpec(lead + (mo.n_experts, mo.d_ff, d),
+                           la + (e_ax, f_ax, "embed_out"), dt),
+    }
+    if mo.n_shared:
+        f = mo.n_shared * mo.d_ff
+        spec["shared"] = {
+            "wi": ParamSpec(lead + (d, f), la + ("embed", "ffn"), dt),
+            "wg": ParamSpec(lead + (d, f), la + ("embed", "ffn"), dt),
+            "wo": ParamSpec(lead + (f, d), la + ("ffn", "embed_out"), dt),
+        }
+    return spec
+
+
+def capacity(n_tokens: int, moe) -> int:
+    c = max(8, int(math.ceil(n_tokens * moe.top_k / moe.n_experts
+                             * moe.capacity_factor)))
+    return min(c, n_tokens)
+
+
+# dispatch groups are routed independently above this many tokens: the
+# gather source stays bounded (a 1M-token prefill would otherwise
+# all-gather the whole activation tensor to every device)
+MAX_DISPATCH_TOKENS = 65536
+
+
+def moe_apply(cfg: ModelConfig, p, x: jax.Array, router_mode: str = "softmax"):
+    """x: [B,T,D] -> (y, aux_load_balance_loss).
+
+    Above MAX_DISPATCH_TOKENS the token stream is split into groups and
+    routed per-group (local routing with per-group capacity -- the standard
+    device-local MoE semantics).
+    """
+    mo = cfg.moe
+    b, t, d = x.shape
+    nt = b * t
+    if nt > MAX_DISPATCH_TOKENS and nt % MAX_DISPATCH_TOKENS == 0:
+        ng = nt // MAX_DISPATCH_TOKENS
+        xg = x.reshape(ng, 1, MAX_DISPATCH_TOKENS, d)
+
+        def body(_, xc):
+            yc, aux = _moe_dispatch(cfg, p, xc, router_mode)
+            return None, (yc, aux)
+
+        _, (yg, auxg) = jax.lax.scan(body, None, xg)
+        return yg.reshape(b, t, d), jnp.mean(auxg)
+    return _moe_dispatch(cfg, p, x, router_mode)
+
+
+def _moe_dispatch(cfg: ModelConfig, p, x: jax.Array, router_mode: str):
+    mo = cfg.moe
+    b, t, d = x.shape
+    nt = b * t
+    xf = constrain(x.reshape(nt, d), ("moe_tokens", None))
+
+    logits = (xf.astype(jnp.float32) @ p["router"]).astype(jnp.float32)
+    if router_mode == "sigmoid":                     # DeepSeek-V3 style
+        scores = jax.nn.sigmoid(logits)
+        topv, topi = jax.lax.top_k(scores, mo.top_k)
+        weights = topv / jnp.maximum(topv.sum(-1, keepdims=True), 1e-9)
+        probs = scores / jnp.maximum(scores.sum(-1, keepdims=True), 1e-9)
+    else:                                            # mixtral: softmax-then-topk
+        probs = jax.nn.softmax(logits, axis=-1)
+        topv, topi = jax.lax.top_k(probs, mo.top_k)
+        weights = topv / jnp.maximum(topv.sum(-1, keepdims=True), 1e-9)
+
+    # token->expert affinity matrix (nonzero only at routed slots)
+    affinity = jnp.zeros((nt, mo.n_experts), jnp.float32)
+    affinity = affinity.at[jnp.arange(nt)[:, None], topi].add(weights)
+
+    cap = capacity(nt, mo)
+    gval, gidx = jax.lax.top_k(affinity.T, cap)      # [E,C] per-expert picks
+    keep = (gval > 0.0).astype(xf.dtype)
+
+    xe = jnp.take(xf, gidx.reshape(-1), axis=0).reshape(
+        mo.n_experts, cap, d)                        # [E,C,D]
+    # dispatch buffers: experts over "model" (ep) and capacity over the
+    # batch axes -- the memory-critical layout (see DESIGN.md §4)
+    xe = constrain(xe, ("experts", "moe_cap", None))
+    act = activation(cfg.act)
+    h = act(jnp.einsum("ecd,edf->ecf", xe, p["w_gate"])) \
+        * jnp.einsum("ecd,edf->ecf", xe, p["w_in"])
+    h = constrain(h, ("experts", "moe_cap", "ffn"))
+    ye = jnp.einsum("ecf,efd->ecd", h, p["w_out"])
+    ye = constrain(ye, ("experts", "moe_cap", None))
+    ye = ye * (gval.astype(xf.dtype) * keep)[..., None]
+
+    out = jnp.zeros((nt, d), xf.dtype).at[gidx.reshape(-1)].add(
+        ye.reshape(-1, d), mode="drop")
+    out = constrain(out, ("moe_tokens", None))
+
+    if mo.n_shared:
+        sh = p["shared"]
+        hs = act(xf @ sh["wg"]) * (xf @ sh["wi"])
+        out = out + hs @ sh["wo"]
+
+    # Switch-style load-balance auxiliary loss
+    frac = jnp.mean((affinity > 0).astype(jnp.float32), axis=0)      # [E]
+    prob_mean = jnp.mean(probs, axis=0)                              # [E]
+    aux = mo.n_experts * jnp.sum(frac * prob_mean)
+    return out.reshape(b, t, d), aux

@@ -1,0 +1,190 @@
+"""Mamba-2 SSD (state-space duality) block, chunked-scan formulation.
+
+Train/prefill uses the blocked SSD algorithm from arXiv:2405.21060 §6:
+within-chunk "attention-like" quadratic term + inter-chunk linear state
+recurrence (``lax.scan`` over chunks).  The chunk length is itself a
+"block size" in the paper's sense and is exposed to the autotuner.
+
+Decode is the O(1) recurrent step over (conv_state, ssm_state).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import ParamSpec, rms_norm
+from repro.runtime.shardctx import constrain
+
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    nh = d_in // s.head_dim
+    conv_dim = d_in + 2 * s.n_groups * s.d_state
+    return s, d_in, nh, conv_dim
+
+
+def ssm_spec(cfg: ModelConfig, lead: tuple = ()):
+    s, d_in, nh, conv_dim = _dims(cfg)
+    d = cfg.d_model
+    la = ("layers",) * len(lead)
+    dt = cfg.param_dtype
+    return {
+        "in_proj": ParamSpec(lead + (d, 2 * d_in + 2 * s.n_groups * s.d_state + nh),
+                             la + ("embed", "ffn"), dt),
+        "conv_w": ParamSpec(lead + (s.d_conv, conv_dim), la + (None, "ffn"), dt),
+        "conv_b": ParamSpec(lead + (conv_dim,), la + ("ffn",), dt, init="zeros"),
+        "a_log": ParamSpec(lead + (nh,), la + ("heads",), "float32", init="ssm_a"),
+        "d_skip": ParamSpec(lead + (nh,), la + ("heads",), "float32", init="ones"),
+        "dt_bias": ParamSpec(lead + (nh,), la + ("heads",), "float32", init="ssm_dt"),
+        "norm": ParamSpec(lead + (d_in,), la + ("ffn",), dt, init="zeros"),
+        "out_proj": ParamSpec(lead + (d_in, d), la + ("ffn", "embed_out"), dt),
+    }
+
+
+def _split_zxbcdt(cfg, zxbcdt):
+    s, d_in, nh, conv_dim = _dims(cfg)
+    return jnp.split(zxbcdt, [d_in, d_in + conv_dim], axis=-1)  # z, xBC, dt
+
+
+def _causal_conv(xbc, w, b):
+    """Depthwise causal conv1d. xbc:[B,T,C], w:[K,C]."""
+    k = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jax.lax.conv_general_dilated(
+        pad, w[:, None, :],
+        window_strides=(1,), padding="VALID",
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=xbc.shape[-1])
+    return jax.nn.silu(out + b)
+
+
+def _segsum(x):
+    """Stable segment-sum: out[i,j] = sum_{j<k<=i} x[k], -inf for j>i."""
+    t = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    out = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((t, t), bool))
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def ssd_forward(cfg: ModelConfig, p, x, *, initial_state=None,
+                return_state: bool = False):
+    """Full-sequence SSD. x: [B,T,D] (T divisible by chunk)."""
+    s, d_in, nh, conv_dim = _dims(cfg)
+    b, t0, _ = x.shape
+    cl = min(s.chunk, t0)
+    pad = (-t0) % cl
+    t = t0 + pad
+    nc = t // cl
+    hpg = nh // s.n_groups
+
+    z, xbc_raw, dt = _split_zxbcdt(cfg, x @ p["in_proj"])
+    xbc = _causal_conv(xbc_raw, p["conv_w"], p["conv_b"])
+    if pad:
+        xbc = jnp.pad(xbc, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+    xs, bm, cm = jnp.split(xbc, [d_in, d_in + s.n_groups * s.d_state], axis=-1)
+    xs = xs.reshape(b, nc, cl, nh, s.head_dim)
+    bm = bm.reshape(b, nc, cl, s.n_groups, s.d_state)
+    cm = cm.reshape(b, nc, cl, s.n_groups, s.d_state)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])       # [B,T,nh]
+    if pad:
+        # padded steps must be identity for the state: dt=0 -> decay=1, input=0
+        live = (jnp.arange(t) < t0)[None, :, None]
+        dt = dt * live
+    dt = dt.reshape(b, nc, cl, nh)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))                      # [nh]
+    da = dt * a                                                       # [B,nc,cl,nh]
+    da_h = jnp.moveaxis(da, -1, 2)                                    # [B,nc,nh,cl]
+    cum = jnp.cumsum(da_h, axis=-1)                                   # [B,nc,nh,cl]
+
+    # ---- intra-chunk (quadratic within the chunk) -------------------------
+    # [B,nc,nh,cl,cl] tensors shard over the chunk axis ("ssm_chunks" ->
+    # model): SSM head counts (e.g. hymba's 50) rarely divide the mesh,
+    # and replicated cl x cl blocks dominate memory otherwise.
+    lmat = jnp.exp(_segsum(da_h))                                     # [B,nc,nh,cl,cl]
+    lmat = constrain(lmat, ("batch", "ssm_chunks", None, None, None))
+    cb = jnp.einsum("bcign,bcjgn->bcgij", cm.astype(jnp.float32),
+                    bm.astype(jnp.float32))                           # [B,nc,G,cl,cl]
+    cb = jnp.repeat(cb, hpg, axis=2)                                  # [B,nc,nh,cl,cl]
+    cb = constrain(cb, ("batch", "ssm_chunks", None, None, None))
+    y_diag = jnp.einsum("bchij,bcjh,bcjhd->bcihd", cb * lmat, dt,
+                        xs.astype(jnp.float32))
+    y_diag = constrain(y_diag, ("batch", "ssm_chunks", None, None, None))
+
+    # ---- chunk end-states --------------------------------------------------
+    decay_last = jnp.exp(cum[..., -1:] - cum)                         # [B,nc,nh,cl]
+    bm_h = jnp.repeat(bm, hpg, axis=3)                                # [B,nc,cl,nh,N]
+    states = jnp.einsum("bcjhn,bchj,bcjh,bcjhd->bchdn",
+                        bm_h.astype(jnp.float32), decay_last, dt,
+                        xs.astype(jnp.float32))
+
+    # ---- inter-chunk recurrence -------------------------------------------
+    chunk_decay = jnp.exp(cum[..., -1])                               # [B,nc,nh]
+    s0 = (jnp.zeros((b, nh, s.head_dim, s.d_state), jnp.float32)
+          if initial_state is None else initial_state.astype(jnp.float32))
+
+    def step(carry, inp):
+        st, dec = inp                                                 # [B,nh,hd,N],[B,nh]
+        new = carry * dec[..., None, None] + st
+        return new, carry                                             # emit state *before* chunk
+
+    final_state, prev_states = jax.lax.scan(
+        step, s0, (states.swapaxes(0, 1), chunk_decay.swapaxes(0, 1)))
+    prev_states = prev_states.swapaxes(0, 1)                          # [B,nc,nh,hd,N]
+
+    # ---- inter-chunk output contribution -----------------------------------
+    state_decay = jnp.exp(cum)                                        # [B,nc,nh,cl]
+    cm_h = jnp.repeat(cm, hpg, axis=3)                                # [B,nc,cl,nh,N]
+    y_off = jnp.einsum("bcihn,bchdn,bchi->bcihd",
+                       cm_h.astype(jnp.float32), prev_states, state_decay)
+
+    y = (y_diag + y_off).reshape(b, t, nh, s.head_dim)
+    y = y + p["d_skip"][:, None] * xs.reshape(b, t, nh, s.head_dim).astype(jnp.float32)
+    y = y.reshape(b, t, d_in)[:, :t0].astype(x.dtype)
+
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = y @ p["out_proj"]
+    if return_state:
+        # conv tail for decode handoff: last (K-1) pre-activation conv inputs
+        conv_state = xbc_raw[:, -(s.d_conv - 1):, :]
+        return out, {"state": final_state.astype(jnp.float32),
+                     "conv": conv_state}
+    return out
+
+
+def ssd_decode(cfg: ModelConfig, p, x, cache):
+    """One-token recurrent step. x: [B,1,D]; cache: {"state","conv"}."""
+    s, d_in, nh, conv_dim = _dims(cfg)
+    b = x.shape[0]
+
+    z, xbc_new, dt = _split_zxbcdt(cfg, (x @ p["in_proj"])[:, 0])     # [B,...]
+    conv_in = jnp.concatenate([cache["conv"], xbc_new[:, None]], axis=1)
+    xbc = jnp.einsum("bkc,kc->bc", conv_in, p["conv_w"]) + p["conv_b"]
+    xbc = jax.nn.silu(xbc)
+    new_conv = conv_in[:, 1:]
+
+    xs, bm, cm = jnp.split(xbc, [d_in, d_in + s.n_groups * s.d_state], axis=-1)
+    xs = xs.reshape(b, nh, s.head_dim).astype(jnp.float32)
+    bm = bm.reshape(b, s.n_groups, s.d_state).astype(jnp.float32)
+    cm = cm.reshape(b, s.n_groups, s.d_state).astype(jnp.float32)
+    hpg = nh // s.n_groups
+    bm_h = jnp.repeat(bm, hpg, axis=1)                                # [B,nh,N]
+    cm_h = jnp.repeat(cm, hpg, axis=1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])       # [B,nh]
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    da = jnp.exp(dt * a)                                              # [B,nh]
+
+    state = cache["state"] * da[..., None, None] + \
+        jnp.einsum("bh,bhd,bhn->bhdn", dt, xs, bm_h)
+    y = jnp.einsum("bhdn,bhn->bhd", state, cm_h)
+    y = y + p["d_skip"][:, None] * xs
+    y = y.reshape(b, 1, d_in).astype(x.dtype)
+
+    y = rms_norm(y * jax.nn.silu(z[:, None]), p["norm"], cfg.norm_eps)
+    out = y @ p["out_proj"]
+    return out, {"state": state, "conv": new_conv}

@@ -1,0 +1,156 @@
+"""Fault-tolerant checkpointing: atomic, checksummed, async, keep-last-k.
+
+Layout per step::
+
+    <dir>/step_<N>/arrays.npz     flattened param/opt/extra pytree
+    <dir>/step_<N>/manifest.json  shapes, dtypes, sha256 per leaf, metadata
+    <dir>/step_<N>/COMMITTED      written last -- absence marks a torn save
+
+Saves stage into ``step_<N>.tmp`` and ``os.replace`` to commit, so a crash
+mid-write can never corrupt the latest checkpoint.  ``restore_latest`` walks
+checkpoints newest-first and transparently falls back past torn/corrupt ones
+(checksum mismatch), which is the node-failure recovery path.  Restoring
+accepts a different mesh than the one that saved (elastic re-shard): arrays
+are ``device_put`` with the *new* shardings.
+"""
+from __future__ import annotations
+
+import concurrent.futures as cf
+import hashlib
+import json
+import os
+import shutil
+import time
+from pathlib import Path
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in leaves:
+        key = "/".join(str(p.key) if hasattr(p, "key") else str(p.idx)
+                       for p in path)
+        a = np.asarray(leaf)
+        if a.dtype.kind == "V" or "bfloat16" in str(a.dtype):
+            # npz cannot represent ml_dtypes natively; f32 holds bf16 exactly
+            a = a.astype(np.float32)
+        out[key] = a
+    return out
+
+
+def _sha(a: np.ndarray) -> str:
+    return hashlib.sha256(np.ascontiguousarray(a).tobytes()).hexdigest()
+
+
+class CheckpointManager:
+    def __init__(self, directory, keep: int = 3, async_save: bool = True):
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self._pool = cf.ThreadPoolExecutor(max_workers=1) if async_save else None
+        self._pending: cf.Future | None = None
+
+    # ----------------------------------------------------------------- save
+    def save(self, step: int, tree, extra: dict | None = None):
+        """Snapshot to host memory now; write (possibly async) afterwards."""
+        arrays = _flatten(tree)                       # sync device->host
+        if self._pool is not None:
+            self.wait()
+            self._pending = self._pool.submit(
+                self._write, step, arrays, extra or {})
+        else:
+            self._write(step, arrays, extra or {})
+
+    def _write(self, step: int, arrays: dict, extra: dict):
+        final = self.dir / f"step_{step:08d}"
+        tmp = self.dir / f"step_{step:08d}.tmp"
+        if tmp.exists():
+            shutil.rmtree(tmp)
+        tmp.mkdir(parents=True)
+        np.savez(tmp / "arrays.npz", **arrays)
+        manifest = {
+            "step": step,
+            "time": time.time(),
+            "extra": extra,
+            "leaves": {k: {"shape": list(v.shape), "dtype": str(v.dtype),
+                           "sha256": _sha(v)} for k, v in arrays.items()},
+        }
+        (tmp / "manifest.json").write_text(json.dumps(manifest))
+        (tmp / "COMMITTED").write_text("ok")
+        if final.exists():
+            shutil.rmtree(final)
+        os.replace(tmp, final)
+        self._gc()
+
+    def wait(self):
+        if self._pending is not None:
+            self._pending.result()
+            self._pending = None
+
+    def _gc(self):
+        steps = sorted(self.all_steps())
+        for s in steps[: -self.keep]:
+            shutil.rmtree(self.dir / f"step_{s:08d}", ignore_errors=True)
+
+    # -------------------------------------------------------------- restore
+    def all_steps(self):
+        out = []
+        for p in self.dir.glob("step_*"):
+            if p.suffix == ".tmp" or not (p / "COMMITTED").exists():
+                continue
+            out.append(int(p.name.split("_")[1]))
+        return sorted(out)
+
+    def _load(self, step: int, verify: bool = True):
+        d = self.dir / f"step_{step:08d}"
+        manifest = json.loads((d / "manifest.json").read_text())
+        with np.load(d / "arrays.npz") as z:
+            arrays = {k: z[k] for k in z.files}
+        if verify:
+            for k, info in manifest["leaves"].items():
+                if _sha(arrays[k]) != info["sha256"]:
+                    raise IOError(f"checksum mismatch in {d}/{k}")
+        return arrays, manifest
+
+    def restore_latest(self, target_tree, *, shardings=None, verify=True,
+                       max_step: int | None = None):
+        """Newest valid checkpoint -> (tree, manifest); falls back on corrupt.
+
+        ``target_tree`` provides the pytree structure (leaves may be specs,
+        ShapeDtypeStructs or arrays).  ``shardings`` (same structure) places
+        each leaf -- pass shardings built for the *current* mesh to restore
+        onto a different topology than the one that saved.  ``max_step``
+        bounds the search (failure recovery must not resume "from the
+        future" of the failed step).
+        """
+        steps = [s for s in self.all_steps()
+                 if max_step is None or s <= max_step]
+        for step in reversed(steps):
+            try:
+                arrays, manifest = self._load(step, verify)
+                return self._unflatten(target_tree, arrays, shardings), manifest
+            except Exception as e:  # noqa: BLE001 -- any torn/corrupt state
+                print(f"[ckpt] step {step} unusable "
+                      f"({type(e).__name__}: {e}); trying previous")
+        raise FileNotFoundError(f"no valid checkpoint under {self.dir}")
+
+    @staticmethod
+    def _unflatten(target_tree, arrays, shardings):
+        paths = jax.tree_util.tree_flatten_with_path(target_tree)
+        leaves, treedef = paths
+        sh_leaves = (jax.tree_util.tree_flatten(shardings)[0]
+                     if shardings is not None else [None] * len(leaves))
+        out = []
+        for (path, leaf), sh in zip(leaves, sh_leaves):
+            key = "/".join(str(p.key) if hasattr(p, "key") else str(p.idx)
+                           for p in path)
+            a = arrays[key]
+            dtype = getattr(leaf, "dtype", a.dtype)
+            if str(a.dtype) != str(dtype):
+                a = jax.numpy.asarray(a).astype(dtype)   # handles bf16
+            out.append(jax.device_put(a, sh) if sh is not None
+                       else jax.numpy.asarray(a))
+        return jax.tree_util.tree_unflatten(treedef, [x for x in out])

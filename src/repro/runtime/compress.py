@@ -1,0 +1,104 @@
+"""Gradient compression for cross-pod (DCN) traffic.
+
+Two composable schemes, both with exactness-preserving *error feedback*:
+
+* ``topk``  -- keep the largest-|g| fraction per tensor, accumulate the
+  residual into feedback state (Deep Gradient Compression style).
+* ``int8``  -- symmetric per-tensor int8 quantization with stochastic
+  rounding; the quantization error also feeds back.
+
+Inside a pjit program the compressed gradient is a masked/quantized dense
+tensor (XLA's all-reduce then moves ~8x fewer effective bytes for int8 when
+the reduce is wire-compressed; for top-k the wire win needs the shard_map
+sparse all-gather in ``sparse_allreduce`` below, provided for the cross-pod
+axis).  Error feedback keeps convergence: see tests/test_compress.py for the
+property that compressed-SGD still drives a quadratic to its optimum.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# top-k with error feedback
+# ---------------------------------------------------------------------------
+
+def topk_mask(g: jax.Array, ratio: float) -> jax.Array:
+    if g.ndim == 0 or ratio >= 1.0:
+        return jnp.ones_like(g, bool)
+    k = max(1, int(g.size * ratio))
+    flat = jnp.abs(g.reshape(-1))
+    thresh = jax.lax.top_k(flat, k)[0][-1]
+    return (jnp.abs(g) >= thresh)
+
+
+def compress_topk(grads, state, ratio: float):
+    """(grads, feedback_state) -> (compressed_grads, new_state)."""
+    def one(g, r):
+        acc = g.astype(jnp.float32) + r
+        mask = topk_mask(acc, ratio)
+        sent = jnp.where(mask, acc, 0.0)
+        return sent.astype(g.dtype), acc - sent
+    out = jax.tree.map(one, grads, state)
+    sent = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_state = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    return sent, new_state
+
+
+def init_feedback(params_like):
+    return jax.tree.map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params_like)
+
+
+# ---------------------------------------------------------------------------
+# int8 with stochastic rounding
+# ---------------------------------------------------------------------------
+
+def quantize_int8(g: jax.Array, key: jax.Array):
+    scale = jnp.maximum(jnp.max(jnp.abs(g.astype(jnp.float32))), 1e-12) / 127.0
+    x = g.astype(jnp.float32) / scale
+    noise = jax.random.uniform(key, g.shape) - 0.5
+    q = jnp.clip(jnp.round(x + noise), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array, dtype=jnp.float32):
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def compress_int8(grads, state, key):
+    def one(g, r, k):
+        acc = g.astype(jnp.float32) + r
+        q, s = quantize_int8(acc, k)
+        deq = dequantize_int8(q, s)
+        return deq.astype(g.dtype), acc - deq
+    leaves, treedef = jax.tree.flatten(grads)
+    keys = jax.random.split(key, len(leaves))
+    res = treedef.flatten_up_to(state)
+    out = [one(g, r, k) for g, r, k in zip(leaves, res, keys)]
+    return (treedef.unflatten([o[0] for o in out]),
+            treedef.unflatten([o[1] for o in out]))
+
+
+# ---------------------------------------------------------------------------
+# wire-level sparse all-reduce over a named (cross-pod) axis, for shard_map
+# ---------------------------------------------------------------------------
+
+def sparse_allreduce(g: jax.Array, axis_name: str, ratio: float):
+    """Inside shard_map: top-k values+indices all-gather, scatter-add merge.
+
+    Moves 2*k*ratio words instead of |g| per hop across ``axis_name`` --
+    the DCN-saving primitive for multi-pod data parallelism.
+    """
+    flat = g.reshape(-1).astype(jnp.float32)
+    k = max(1, int(flat.size * ratio))
+    vals, idx = jax.lax.top_k(jnp.abs(flat), k)
+    vals = flat[idx]
+    all_vals = jax.lax.all_gather(vals, axis_name)     # [P, k]
+    all_idx = jax.lax.all_gather(idx, axis_name)
+    merged = jnp.zeros_like(flat).at[all_idx.reshape(-1)].add(
+        all_vals.reshape(-1))
+    return merged.reshape(g.shape).astype(g.dtype)

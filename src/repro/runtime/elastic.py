@@ -1,0 +1,86 @@
+"""Elastic scaling: re-mesh planning and checkpoint resharding.
+
+When devices fail (or are added), training resumes on the largest feasible
+mesh: ``plan_mesh`` picks a (data, model) factorization from the healthy
+device count, and ``reshard_tree`` places restored host arrays onto the new
+topology.  Because checkpoints are stored as full logical arrays (per-leaf
+npz, see checkpoint.py), resharding is just a ``device_put`` with the new
+``NamedSharding`` -- no shard surgery.
+
+Invariants (tested in tests/test_elastic.py):
+  * plan_mesh(n).size <= n, and model' divides the tensor dims it used to;
+  * global batch stays divisible by the new data axis (microbatches adapt);
+  * a train step after re-mesh produces the same loss as an un-failed run
+    restored from the same checkpoint (determinism).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+
+from repro.configs.base import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshPlan:
+    shape: tuple
+    axes: tuple
+    microbatches: int
+
+    @property
+    def size(self) -> int:
+        n = 1
+        for s in self.shape:
+            n *= s
+        return n
+
+
+def _divisors_desc(n: int):
+    return [d for d in range(n, 0, -1) if n % d == 0]
+
+
+def plan_mesh(n_healthy: int, global_batch: int, *, prefer_model: int = 16,
+              microbatches: int = 1) -> MeshPlan:
+    """Largest usable (data, model) mesh for ``n_healthy`` devices.
+
+    Keeps the model axis as close to ``prefer_model`` as possible (tensor
+    shards must keep dividing weight dims), then maximizes the data axis
+    under the constraint that the global batch splits evenly; the microbatch
+    count adapts to keep per-device batch >= 1.
+    """
+    best = None
+    for model in sorted(_divisors_desc(prefer_model)):
+        data = n_healthy // model
+        while data > 0:
+            if global_batch % data == 0:
+                plan = MeshPlan((data, model), ("data", "model"),
+                                max(microbatches, 1))
+                if best is None or plan.size > best.size or (
+                        plan.size == best.size and model > best.shape[1]):
+                    best = plan
+                break
+            data -= 1
+    assert best is not None
+    return best
+
+
+def make_plan_mesh(plan: MeshPlan):
+    return jax.make_mesh(plan.shape, plan.axes)
+
+
+def reshard_tree(host_tree, shardings):
+    """Place host arrays onto a (new) mesh via the given sharding tree."""
+    return jax.tree.map(jax.device_put, host_tree, shardings)
+
+
+def adapt_config(cfg: ModelConfig, plan: MeshPlan,
+                 global_batch: int) -> ModelConfig:
+    """Adjust microbatching so the per-device batch stays integral."""
+    data = plan.shape[0]
+    m = cfg.train_microbatches
+    while m > 1 and (global_batch % m or (global_batch // m) % data):
+        m -= 1
+    while (global_batch // m) % data and m < global_batch:
+        m += 1
+    return cfg.replace(train_microbatches=m)

@@ -1,0 +1,186 @@
+"""Optimizers built from scratch: AdamW and Adafactor, with spec-level state.
+
+Optimizer state has first-class *specs* (shape/dtype/logical axes) mirroring
+the parameter specs, so the dry-run can lower ``train_step`` against
+``ShapeDtypeStruct`` state and the sharding rules apply uniformly.
+
+Adafactor (factored second moment over the trailing two dims, no momentum)
+exists because a 671B-parameter model cannot hold Adam moments in
+512 x 16 GB HBM; see DESIGN.md §4.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import ParamSpec
+
+
+def _is_spec(x):
+    return isinstance(x, ParamSpec)
+
+
+# ---------------------------------------------------------------------------
+# Schedules
+# ---------------------------------------------------------------------------
+
+def cosine_schedule(step, *, peak_lr: float, warmup: int, total: int,
+                    floor_frac: float = 0.1):
+    step = step.astype(jnp.float32)
+    warm = peak_lr * step / max(warmup, 1)
+    prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+    cos = peak_lr * (floor_frac + (1 - floor_frac) * 0.5
+                     * (1 + jnp.cos(jnp.pi * prog)))
+    return jnp.where(step < warmup, warm, cos)
+
+
+def global_norm(tree) -> jax.Array:
+    sq = jax.tree.map(lambda g: jnp.sum(jnp.square(g.astype(jnp.float32))), tree)
+    return jnp.sqrt(jax.tree.reduce(jnp.add, sq))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    gn = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+                        tree), gn
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip: float = 1.0
+
+
+def adamw_state_specs(pspecs, opt_dtype: str):
+    moment = jax.tree.map(
+        lambda s: ParamSpec(s.shape, s.axes, opt_dtype, init="zeros"),
+        pspecs, is_leaf=_is_spec)
+    return {"mu": moment, "nu": jax.tree.map(lambda s: s, moment,
+                                             is_leaf=_is_spec),
+            "count": ParamSpec((), (), "int32", init="zeros")}
+
+
+def adamw_update(cfg: AdamWConfig, grads, state, params, lr):
+    grads, gnorm = clip_by_global_norm(grads, cfg.clip)
+    count = state["count"] + 1
+    c = count.astype(jnp.float32)
+    bc1 = 1 - cfg.b1 ** c
+    bc2 = 1 - cfg.b2 ** c
+
+    def upd(g, mu, nu, p):
+        g32 = g.astype(jnp.float32)
+        mu2 = cfg.b1 * mu.astype(jnp.float32) + (1 - cfg.b1) * g32
+        nu2 = cfg.b2 * nu.astype(jnp.float32) + (1 - cfg.b2) * jnp.square(g32)
+        step = (mu2 / bc1) / (jnp.sqrt(nu2 / bc2) + cfg.eps)
+        if p.ndim >= 2:                                 # decoupled weight decay
+            step = step + cfg.weight_decay * p.astype(jnp.float32)
+        new_p = (p.astype(jnp.float32) - lr * step).astype(p.dtype)
+        return new_p, mu2.astype(mu.dtype), nu2.astype(nu.dtype)
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_mu = treedef.flatten_up_to(state["mu"])
+    flat_nu = treedef.flatten_up_to(state["nu"])
+    out = [upd(g, m, n, p) for g, m, n, p in zip(flat_g, flat_mu, flat_nu, flat_p)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_mu = treedef.unflatten([o[1] for o in out])
+    new_nu = treedef.unflatten([o[2] for o in out])
+    return new_p, {"mu": new_mu, "nu": new_nu, "count": count}, gnorm
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (beta1=0, factored second moment over trailing two dims)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class AdafactorConfig:
+    decay: float = 0.8              # t^-decay second-moment decay exponent
+    eps1: float = 1e-30
+    eps2: float = 1e-3
+    clip_rms: float = 1.0
+    weight_decay: float = 0.0
+
+
+def adafactor_state_specs(pspecs, opt_dtype: str):
+    def slot(s: ParamSpec):
+        if len(s.shape) >= 2:
+            return {
+                "vr": ParamSpec(s.shape[:-1], s.axes[:-1], opt_dtype, init="zeros"),
+                "vc": ParamSpec(s.shape[:-2] + s.shape[-1:],
+                                s.axes[:-2] + s.axes[-1:], opt_dtype,
+                                init="zeros"),
+            }
+        return {"v": ParamSpec(s.shape, s.axes, opt_dtype, init="zeros")}
+
+    slots = jax.tree.map(slot, pspecs, is_leaf=_is_spec)
+    return {"slots": slots, "count": ParamSpec((), (), "int32", init="zeros")}
+
+
+def adafactor_update(cfg: AdafactorConfig, grads, state, params, lr):
+    count = state["count"] + 1
+    c = count.astype(jnp.float32)
+    beta2 = 1.0 - c ** (-cfg.decay)
+
+    def upd(g, slot, p):
+        g32 = g.astype(jnp.float32)
+        g2 = jnp.square(g32) + cfg.eps1
+        if g.ndim >= 2:
+            vr = beta2 * slot["vr"].astype(jnp.float32) \
+                + (1 - beta2) * jnp.mean(g2, axis=-1)
+            vc = beta2 * slot["vc"].astype(jnp.float32) \
+                + (1 - beta2) * jnp.mean(g2, axis=-2)
+            denom = jnp.mean(vr, axis=-1, keepdims=True)
+            vhat = (vr[..., None] / jnp.maximum(denom[..., None], cfg.eps1)) \
+                * vc[..., None, :]
+            upd = g32 * jax.lax.rsqrt(jnp.maximum(vhat, cfg.eps1))
+            new_slot = {"vr": vr.astype(slot["vr"].dtype),
+                        "vc": vc.astype(slot["vc"].dtype)}
+        else:
+            v = beta2 * slot["v"].astype(jnp.float32) + (1 - beta2) * g2
+            upd = g32 * jax.lax.rsqrt(jnp.maximum(v, cfg.eps1))
+            new_slot = {"v": v.astype(slot["v"].dtype)}
+        # RMS-clip the update, scale by parameter scale (Adafactor rule)
+        rms = jnp.sqrt(jnp.mean(jnp.square(upd)) + 1e-12)
+        upd = upd / jnp.maximum(1.0, rms / cfg.clip_rms)
+        pscale = jnp.maximum(
+            jnp.sqrt(jnp.mean(jnp.square(p.astype(jnp.float32)))), cfg.eps2)
+        step = lr * pscale * upd
+        if cfg.weight_decay and p.ndim >= 2:
+            step = step + lr * cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - step).astype(p.dtype), new_slot
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_s = treedef.flatten_up_to(state["slots"])
+    out = [upd(g, s, p) for g, s, p in zip(flat_g, flat_s, flat_p)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_slots = treedef.unflatten([o[1] for o in out])
+    return new_p, {"slots": new_slots, "count": count}, global_norm(grads)
+
+
+# ---------------------------------------------------------------------------
+# Uniform facade
+# ---------------------------------------------------------------------------
+
+def opt_state_specs(model_cfg: ModelConfig, pspecs):
+    if model_cfg.optimizer == "adafactor":
+        return adafactor_state_specs(pspecs, model_cfg.opt_dtype)
+    return adamw_state_specs(pspecs, model_cfg.opt_dtype)
+
+
+def opt_update(model_cfg: ModelConfig, grads, state, params, lr):
+    if model_cfg.optimizer == "adafactor":
+        return adafactor_update(AdafactorConfig(), grads, state, params, lr)
+    return adamw_update(AdamWConfig(), grads, state, params, lr)

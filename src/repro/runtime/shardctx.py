@@ -1,0 +1,37 @@
+"""Trace-time sharding-constraint context.
+
+Model code is mesh-agnostic; the step builder opens a ``scope(mesh, rules)``
+around the traced body, and model layers call ``constrain(x, logical_axes)``
+at memory-critical intermediates (MoE dispatch buffers, attention
+probabilities, logits).  Outside a scope this is a no-op, so pure-CPU smoke
+tests and the reference paths are unaffected.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+
+import jax
+from jax.sharding import NamedSharding
+
+from repro.runtime.sharding import resolve_pspec
+
+_CTX: contextvars.ContextVar = contextvars.ContextVar("shardctx", default=None)
+
+
+@contextlib.contextmanager
+def scope(mesh, rules):
+    tok = _CTX.set((mesh, rules))
+    try:
+        yield
+    finally:
+        _CTX.reset(tok)
+
+
+def constrain(x, logical_axes: tuple):
+    ctx = _CTX.get()
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    spec = resolve_pspec(logical_axes, x.shape, rules, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

@@ -1,0 +1,124 @@
+"""Logical-axis sharding rules (MaxText-style) and NamedSharding builders.
+
+Every parameter / cache / activation spec carries *logical* axis names
+("embed", "heads", "batch", "kv_seq", ...).  A rule table -- computed per
+(model config, input shape, mesh) -- maps logical names to mesh axes.  The
+resolver drops mappings whose mesh axis is unavailable, already used by an
+earlier dim of the same tensor, or does not divide the dim size (GQA heads
+< model-axis size fall back to replication rather than padded sharding).
+
+The rule table is exactly the search space of the paper's block-size
+estimator at the LM layer: `repro.core.meshtune` tunes over alternative
+tables the way the paper tunes over (p_r, p_c).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models.layers import ParamSpec
+
+
+def _mesh_axes(mesh: Mesh):
+    return tuple(mesh.axis_names)
+
+
+def batch_axes(mesh: Mesh):
+    return tuple(a for a in ("pod", "data") if a in _mesh_axes(mesh))
+
+
+def make_rules(cfg: ModelConfig, mesh: Mesh, shape: ShapeConfig | None = None,
+               overrides: dict | None = None) -> dict:
+    """Logical axis -> mesh axis (or tuple) mapping for one dry-run cell."""
+    b_axes = batch_axes(mesh)
+    fsdp = cfg.param_sharding == "fsdp"
+    rules = {
+        "batch": b_axes,
+        "vocab": "model",
+        "heads": "model",
+        "kv": "model",
+        "ffn": "model",
+        "experts": "model",
+        "embed": "data" if fsdp else None,
+        "embed_out": "data" if fsdp else None,
+        "head_dim": None,
+        "layers": None,
+        "kv_seq": None,
+        # MoE dispatch buffers: flattened tokens and per-expert capacity
+        # slots shard over the batch axes
+        "moe_tokens": b_axes,
+        "moe_cap": b_axes,
+        # SSD intra-chunk [cl x cl] tensors shard over the chunk axis
+        "ssm_chunks": "model",
+        # attention-score key axis: takes "model" only when the head axis
+        # of the same tensor cannot (per-tensor dedup in resolve_pspec)
+        "attn_kv": "model",
+    }
+    if shape is not None and shape.kind == "prefill":
+        # returned caches shard their sequence axis (they are about to be
+        # consumed by seq-sharded decode); attention internals unaffected
+        rules["kv_seq"] = "model"
+    if shape is not None and shape.kind == "decode":
+        mesh_batch = 1
+        for a in b_axes:
+            mesh_batch *= mesh.shape[a]
+        if cfg.decode_cache_sharding == "seq":
+            # flash-decoding style: cache sequence takes the model axis.
+            # Weights keep heads/kv on "model" -- per-tensor axis dedup in
+            # resolve_pspec gives kv_seq priority inside cache tensors
+            # (their axes tuple lists "kv_seq" before "kv").
+            if shape.global_batch < mesh_batch:
+                # tiny-batch long-context decode: give the cache sequence
+                # every axis the batch cannot use
+                rules["batch"] = ()
+                rules["kv_seq"] = b_axes + ("model",)
+            else:
+                rules["kv_seq"] = "model"
+        # else: "heads" policy -- kv/heads on "model", seq unsharded
+    if overrides:
+        rules = {**rules, **overrides}
+    return rules
+
+
+def resolve_pspec(spec_axes: tuple, shape: tuple, rules: dict,
+                  mesh: Mesh) -> P:
+    """Map one tensor's logical axes to a PartitionSpec, with fallbacks."""
+    names = _mesh_axes(mesh)
+    used: set = set()
+    out = []
+    for dim, ax in zip(shape, spec_axes):
+        target = rules.get(ax) if ax is not None else None
+        if target is None:
+            out.append(None)
+            continue
+        axes = (target,) if isinstance(target, str) else tuple(target)
+        axes = [a for a in axes if a in names and a not in used]
+        size = 1
+        for a in axes:
+            size *= mesh.shape[a]
+        if not axes or size <= 0 or dim % size != 0:
+            out.append(None)
+            continue
+        used.update(axes)
+        out.append(tuple(axes) if len(axes) > 1 else axes[0])
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def spec_shardings(tree, mesh: Mesh, rules: dict):
+    """ParamSpec tree -> NamedSharding tree."""
+    def leaf(s: ParamSpec):
+        return NamedSharding(mesh, resolve_pspec(s.axes, s.shape, rules, mesh))
+    return jax.tree.map(leaf, tree, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def batch_shardings(tree_of_specs, mesh: Mesh, rules: dict):
+    return spec_shardings(tree_of_specs, mesh, rules)
+
+
+def constrain(x, logical_axes: tuple, rules: dict, mesh: Mesh):
+    """with_sharding_constraint by logical axes (no-op outside mesh ctx)."""
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, resolve_pspec(logical_axes, x.shape, rules, mesh)))

@@ -1,0 +1,10 @@
+"""Shared fixtures.  NOTE: never set xla_force_host_platform_device_count
+here -- smoke tests and benches must see 1 device; multi-device tests spawn
+subprocesses (see test_sharding.py)."""
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,100 @@
+"""Data-parallel algorithms: correctness vs serial references AND the key
+partitioning-invariance property -- the result must not depend on
+(p_r, p_c), only the execution time does (that is the paper's premise)."""
+import numpy as np
+import pytest
+
+from repro.algorithms import gmm, kmeans, pca, rf, svm
+from repro.data.datasets import gaussian_blobs, trajectory_like
+from repro.data.distarray import DistArray
+from repro.data.executor import Environment, TaskExecutor
+
+
+def ex():
+    return TaskExecutor(Environment(n_workers=4))
+
+
+def test_kmeans_partition_invariance():
+    X, _ = gaussian_blobs(256, 24, n_classes=3, seed=0)
+    results = []
+    for (pr, pc) in [(1, 1), (4, 1), (2, 3), (8, 4)]:
+        d = DistArray.from_array(X, pr, pc)
+        m = kmeans.fit(ex(), d, k=3, iters=4, seed=7)
+        results.append(m["centers"])
+    for c in results[1:]:
+        np.testing.assert_allclose(results[0], c, rtol=1e-8, atol=1e-8)
+
+
+def test_kmeans_clusters_blobs():
+    X, y = gaussian_blobs(300, 8, n_classes=3, noise_frac=0.0,
+                          redundant_frac=0.0, seed=1)
+    d = DistArray.from_array(X, 4, 2)
+    m = kmeans.fit(ex(), d, k=3, iters=8, seed=0)
+    pred = kmeans.predict(m, X)
+    # clustering should be highly pure wrt true labels
+    purity = 0
+    for c in range(3):
+        if (pred == c).any():
+            purity += np.bincount(y[pred == c]).max()
+    assert purity / len(y) > 0.9
+
+
+def test_pca_matches_numpy():
+    X = trajectory_like(200, 32, seed=2)
+    d = DistArray.from_array(X, 4, 4)
+    m = pca.fit(ex(), d, n_components=4)
+    Xc = X - X.mean(0)
+    w, v = np.linalg.eigh(Xc.T @ Xc / (len(X) - 1))
+    order = np.argsort(w)[::-1][:4]
+    np.testing.assert_allclose(m["variance"], w[order], rtol=1e-6)
+    for i in range(4):                      # eigenvectors up to sign
+        dot = abs(np.dot(m["components"][:, i], v[:, order[i]]))
+        assert dot > 1 - 1e-6
+
+
+def test_pca_partition_invariance():
+    X = trajectory_like(120, 16, seed=3)
+    outs = [pca.fit(ex(), DistArray.from_array(X, pr, pc), n_components=3)
+            for pr, pc in [(1, 1), (3, 2), (5, 4)]]
+    for m in outs[1:]:
+        np.testing.assert_allclose(outs[0]["variance"], m["variance"],
+                                   rtol=1e-8)
+
+
+def test_gmm_recovers_components():
+    X, y = gaussian_blobs(400, 6, n_classes=2, noise_frac=0.0,
+                          redundant_frac=0.0, seed=4)
+    d = DistArray.from_array(X, 4, 2)
+    m = gmm.fit(ex(), d, k=2, iters=10, seed=1)
+    pred = gmm.predict(m, X)
+    acc = max((pred == y).mean(), (pred != y).mean())
+    assert acc > 0.9
+
+
+def test_csvm_separates():
+    X, y = gaussian_blobs(400, 10, n_classes=2, noise_frac=0.0,
+                          redundant_frac=0.0, seed=5)
+    d = DistArray.from_array(X, 4, 2)
+    m = svm.fit(ex(), d, y)
+    acc = (svm.predict(m, X) == y).mean()
+    assert acc > 0.9
+
+
+def test_rf_learns():
+    X, y = gaussian_blobs(300, 12, n_classes=3, seed=6)
+    d = DistArray.from_array(X, 3, 1)
+    m = rf.fit(ex(), d, y, n_trees=9, max_depth=8)
+    assert len(m["trees"]) >= 9
+    acc = (rf.predict(m, X) == y).mean()
+    assert acc > 0.85
+
+
+def test_timings_vary_with_partitioning():
+    """The whole point: same answer, different cost."""
+    X, _ = gaussian_blobs(512, 32, seed=7)
+    times = {}
+    for pr in (1, 8, 64):
+        e = TaskExecutor(Environment(n_workers=4, dispatch_overhead_s=5e-4))
+        kmeans.fit(e, DistArray.from_array(X, pr, 1), k=4, iters=3)
+        times[pr] = e.sim_time
+    assert len({round(v, 6) for v in times.values()}) > 1

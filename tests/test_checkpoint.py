@@ -1,0 +1,82 @@
+"""Checkpointing: atomic commit, checksums, corruption fallback, keep-k,
+async writer, max_step bound, dtype restore."""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.runtime.checkpoint import CheckpointManager
+
+
+def tree(seed=0):
+    r = np.random.default_rng(seed)
+    return {"a": jnp.asarray(r.normal(size=(4, 8)), jnp.float32),
+            "b": {"c": jnp.asarray(r.normal(size=(3,)), jnp.bfloat16),
+                  "d": jnp.asarray(5, jnp.int32)}}
+
+
+def test_roundtrip(tmp_path):
+    mgr = CheckpointManager(tmp_path, async_save=False)
+    t = tree()
+    mgr.save(3, t, extra={"note": "hi"})
+    restored, manifest = mgr.restore_latest(t)
+    assert manifest["step"] == 3 and manifest["extra"]["note"] == "hi"
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+        assert a.dtype == b.dtype
+
+
+def test_async_save_then_wait(tmp_path):
+    mgr = CheckpointManager(tmp_path, async_save=True)
+    mgr.save(1, tree())
+    mgr.wait()
+    assert mgr.all_steps() == [1]
+
+
+def test_keep_last_k(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=2, async_save=False)
+    for s in (1, 2, 3, 4):
+        mgr.save(s, tree(s))
+    assert mgr.all_steps() == [3, 4]
+
+
+def test_corruption_falls_back(tmp_path):
+    mgr = CheckpointManager(tmp_path, async_save=False)
+    t = tree()
+    mgr.save(1, t)
+    mgr.save(2, t)
+    # corrupt step 2's array payload
+    f = tmp_path / "step_00000002" / "arrays.npz"
+    data = bytearray(f.read_bytes())
+    data[-100:] = b"\x00" * 100
+    f.write_bytes(bytes(data))
+    restored, manifest = mgr.restore_latest(t)
+    assert manifest["step"] == 1           # transparently skipped corrupt 2
+
+
+def test_torn_save_ignored(tmp_path):
+    mgr = CheckpointManager(tmp_path, async_save=False)
+    mgr.save(1, tree())
+    torn = tmp_path / "step_00000005"
+    torn.mkdir()
+    (torn / "manifest.json").write_text(json.dumps({"step": 5}))
+    # no COMMITTED marker -> invisible
+    assert mgr.all_steps() == [1]
+
+
+def test_max_step_bound(tmp_path):
+    mgr = CheckpointManager(tmp_path, async_save=False)
+    t = tree()
+    for s in (2, 4, 6):
+        mgr.save(s, t)
+    _, manifest = mgr.restore_latest(t, max_step=5)
+    assert manifest["step"] == 4
+
+
+def test_no_checkpoint_raises(tmp_path):
+    mgr = CheckpointManager(tmp_path)
+    with pytest.raises(FileNotFoundError):
+        mgr.restore_latest(tree())

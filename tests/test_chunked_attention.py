@@ -1,0 +1,57 @@
+"""Chunked (flash-style, never-materialize-[T,S]) attention path vs the
+dense path -- must be numerically identical for every mask variant."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.models.attention as attn
+from repro.models.attention import _attend, _chunked_sdpa, causal_window_mask, _sdpa
+
+
+@pytest.mark.parametrize("window,n_meta", [(0, 0), (24, 0), (24, 8)])
+@pytest.mark.parametrize("t", [64, 96])
+def test_chunked_matches_dense(window, n_meta, t, monkeypatch):
+    monkeypatch.setattr(attn, "_CHUNK_Q", 32)
+    rng = np.random.default_rng(t + window)
+    b, h, d = 2, 4, 16
+    q = jnp.asarray(rng.normal(size=(b, t, h, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, t, h, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, t, h, d)), jnp.float32)
+    positions = jnp.arange(t)
+    got = _chunked_sdpa(q, k, v, positions, window, n_meta, d ** -0.5)
+    mask = causal_window_mask(positions, positions, window, n_meta)
+    want = _sdpa(q, k, v, mask[None], d ** -0.5)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_chunked_mla_head_dims(monkeypatch):
+    """v head dim != qk head dim (the MLA case)."""
+    monkeypatch.setattr(attn, "_CHUNK_Q", 16)
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.normal(size=(1, 48, 2, 24)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 48, 2, 24)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(1, 48, 2, 10)), jnp.float32)
+    positions = jnp.arange(48)
+    got = _chunked_sdpa(q, k, v, positions, 0, 0, 24 ** -0.5)
+    mask = causal_window_mask(positions, positions, 0, 0)
+    want = _sdpa(q, k, v, mask[None], 24 ** -0.5)
+    assert got.shape == (1, 48, 2, 10)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_attend_auto_threshold(monkeypatch):
+    """_attend switches paths by score size; both give the same answer."""
+    rng = np.random.default_rng(1)
+    q = jnp.asarray(rng.normal(size=(1, 64, 2, 8)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 64, 1, 8)), jnp.float32)  # GQA
+    v = jnp.asarray(rng.normal(size=(1, 64, 1, 8)), jnp.float32)
+    positions = jnp.arange(64)
+    monkeypatch.setattr(attn, "_CHUNK_THRESHOLD", 1 << 60)
+    dense = _attend(q, k, v, positions, 0, 0, 8 ** -0.5)
+    monkeypatch.setattr(attn, "_CHUNK_THRESHOLD", 1)
+    monkeypatch.setattr(attn, "_CHUNK_Q", 16)
+    chunked = _attend(q, k, v, positions, 0, 0, 8 ** -0.5)
+    np.testing.assert_allclose(np.asarray(dense), np.asarray(chunked),
+                               rtol=1e-5, atol=1e-5)

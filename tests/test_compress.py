@@ -1,0 +1,85 @@
+"""Gradient compression: quantization bounds, top-k semantics, and the
+error-feedback convergence property (compressed SGD still reaches the
+optimum of a quadratic)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.runtime.compress import (compress_int8, compress_topk,
+                                    dequantize_int8, init_feedback,
+                                    quantize_int8, sparse_allreduce,
+                                    topk_mask)
+
+
+def test_int8_roundtrip_bound():
+    rng = np.random.default_rng(0)
+    g = jnp.asarray(rng.normal(size=(64, 64)), jnp.float32)
+    q, s = quantize_int8(g, jax.random.PRNGKey(0))
+    err = jnp.abs(dequantize_int8(q, s) - g)
+    assert float(err.max()) <= float(s) * 1.01            # half-ulp + noise
+
+
+@settings(max_examples=20, deadline=None)
+@given(ratio=st.floats(0.05, 1.0), seed=st.integers(0, 100))
+def test_topk_mask_density(ratio, seed):
+    g = jnp.asarray(np.random.default_rng(seed).normal(size=(40, 25)))
+    mask = topk_mask(g, ratio)
+    k = max(1, int(g.size * ratio))
+    assert int(mask.sum()) >= k                           # ties keep extras
+    kept = jnp.abs(g)[mask].min()
+    dropped = jnp.where(mask, jnp.inf, jnp.abs(g)).max() if ratio < 1 else 0
+    # hmm: dropped max must be <= kept min
+    dropped = jnp.abs(jnp.where(mask, 0.0, g)).max()
+    assert float(dropped) <= float(kept) + 1e-12
+
+
+def test_error_feedback_preserves_mass():
+    g = {"w": jnp.asarray(np.random.default_rng(1).normal(size=(32, 8)),
+                          jnp.float32)}
+    state = init_feedback(g)
+    sent, new_state = compress_topk(g, state, ratio=0.25)
+    # sent + residual == original (nothing lost, only delayed)
+    np.testing.assert_allclose(np.asarray(sent["w"] + new_state["w"]),
+                               np.asarray(g["w"]), rtol=1e-6, atol=1e-7)
+
+
+def test_compressed_sgd_converges_on_quadratic():
+    """min 0.5||x - t||^2 with top-10% compressed grads + error feedback."""
+    t = jnp.asarray(np.random.default_rng(2).normal(size=(50,)), jnp.float32)
+    x = jnp.zeros(50)
+    state = init_feedback({"x": x})
+    # note: lr must stay below the error-feedback stability threshold
+    # (lr=0.3 demonstrably diverges with 10% sparsity on this problem)
+    for i in range(300):
+        g = {"x": x - t}
+        sent, state = compress_topk(g, state, ratio=0.1)
+        x = x - 0.15 * sent["x"]
+    assert float(jnp.max(jnp.abs(x - t))) < 1e-3
+
+
+def test_int8_error_feedback_converges():
+    t = jnp.asarray(np.random.default_rng(3).normal(size=(20,)), jnp.float32)
+    x = jnp.zeros(20)
+    state = init_feedback({"x": x})
+    key = jax.random.PRNGKey(0)
+    for i in range(200):
+        key, k = jax.random.split(key)
+        sent, state = compress_int8({"x": x - t}, state, k)
+        x = x - 0.3 * sent["x"]
+    assert float(jnp.max(jnp.abs(x - t))) < 5e-2
+
+
+def test_sparse_allreduce_single_shard():
+    """axis of size 1: sparse all-reduce == top-k truncation."""
+    mesh = jax.make_mesh((1,), ("x",))
+    g = jnp.asarray(np.random.default_rng(4).normal(size=(16,)), jnp.float32)
+
+    out = jax.shard_map(
+        lambda v: sparse_allreduce(v, "x", ratio=0.5),
+        mesh=mesh, in_specs=jax.sharding.PartitionSpec(),
+        out_specs=jax.sharding.PartitionSpec(), check_vma=False)(g)
+    mask = topk_mask(g, 0.5)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(jnp.where(mask, g, 0.0)),
+                               rtol=1e-6, atol=1e-7)

@@ -1,0 +1,93 @@
+"""Config registry: exact assigned architectures, parameter counts vs the
+published sizes, reduced-config invariants, cell enumeration."""
+import pytest
+
+from repro.configs import ARCH_IDS, SHAPES, cells, get_config, reduced_config
+
+# published parameter counts (billions) with tolerance
+PUBLISHED_B = {
+    "mixtral-8x7b": (46.7, 0.05),
+    "deepseek-v3-671b": (671.0, 0.01),
+    "yi-6b": (6.06, 0.05),
+    "h2o-danube-3-4b": (3.96, 0.10),
+    "deepseek-7b": (6.91, 0.05),
+    "gemma3-27b": (27.0, 0.10),
+    "phi-3-vision-4.2b": (3.8, 0.15),     # backbone only (frontend stubbed)
+    "musicgen-large": (3.3, 0.10),
+    "mamba2-370m": (0.37, 0.10),
+    "hymba-1.5b": (1.5, 0.15),
+}
+
+
+def test_all_ten_archs_present():
+    assert len(ARCH_IDS) == 10
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_param_counts_match_published(arch):
+    cfg = get_config(arch)
+    target, tol = PUBLISHED_B[arch]
+    got = cfg.n_params() / 1e9
+    assert abs(got - target) / target <= tol, (arch, got, target)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_exact_assigned_dims(arch):
+    cfg = get_config(arch)
+    expected = {
+        "mixtral-8x7b": (32, 4096, 32, 8, 32000),
+        "deepseek-v3-671b": (61, 7168, 128, 128, 129280),
+        "yi-6b": (32, 4096, 32, 4, 64000),
+        "h2o-danube-3-4b": (24, 3840, 32, 8, 32000),
+        "deepseek-7b": (30, 4096, 32, 32, 102400),
+        "gemma3-27b": (62, 5376, 32, 16, 262144),
+        "phi-3-vision-4.2b": (32, 3072, 32, 32, 32064),
+        "musicgen-large": (48, 2048, 32, 32, 2048),
+        "mamba2-370m": (48, 1024, 1, 1, 50280),
+        "hymba-1.5b": (32, 1600, 25, 5, 32001),
+    }[arch]
+    got = (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.vocab)
+    assert got == expected
+
+
+def test_moe_configs():
+    mx = get_config("mixtral-8x7b").moe
+    assert (mx.n_experts, mx.top_k, mx.d_ff) == (8, 2, 14336)
+    ds = get_config("deepseek-v3-671b").moe
+    assert (ds.n_experts, ds.top_k, ds.n_shared, ds.d_ff) == (256, 8, 1, 2048)
+
+
+def test_active_params_moe():
+    cfg = get_config("mixtral-8x7b")
+    assert 12.5e9 < cfg.n_active_params() < 13.5e9      # ~12.9B active
+    ds = get_config("deepseek-v3-671b")
+    assert 35e9 < ds.n_active_params() < 42e9           # ~37B active
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_reduced_config_small(arch):
+    r = reduced_config(arch)
+    assert r.n_layers <= 4 and r.d_model == 128 and r.vocab == 512
+    # layer-kind mix preserved
+    full = get_config(arch)
+    assert set(r.kinds) == set(full.kinds[:full.n_layers])
+
+
+def test_cell_enumeration():
+    all_cells = list(cells(include_skipped=True))
+    run_cells = list(cells())
+    assert len(all_cells) == 40
+    assert len(run_cells) == 35                         # 5 documented skips
+    skipped = set(all_cells) - set(run_cells)
+    assert all(s == "long_500k" for _, s in skipped)
+    assert {a for a, _ in skipped} == {
+        "yi-6b", "deepseek-7b", "deepseek-v3-671b", "phi-3-vision-4.2b",
+        "musicgen-large"}
+
+
+def test_long_context_archs_run_500k():
+    for arch in ("mamba2-370m", "hymba-1.5b", "mixtral-8x7b",
+                 "h2o-danube-3-4b", "gemma3-27b"):
+        cfg = get_config(arch)
+        assert cfg.long_context_ok
+        assert "long_500k" not in cfg.skip_shapes

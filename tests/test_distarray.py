@@ -1,0 +1,48 @@
+"""DistArray invariants (hypothesis): partition/reassemble identity for any
+valid (p_r, p_c), row splits, stitching."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.data.distarray import DistArray
+from repro.data.executor import Environment, TaskExecutor
+
+
+@settings(max_examples=30, deadline=None)
+@given(n=st.integers(4, 64), m=st.integers(4, 64),
+       p_r=st.integers(1, 8), p_c=st.integers(1, 8), seed=st.integers(0, 99))
+def test_roundtrip_identity(n, m, p_r, p_c, seed):
+    p_r, p_c = min(p_r, n), min(p_c, m)
+    x = np.random.default_rng(seed).normal(size=(n, m))
+    d = DistArray.from_array(x, p_r, p_c)
+    assert d.p_r == p_r and d.p_c == p_c
+    np.testing.assert_array_equal(d.to_array(), x)
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(6, 50), p_r=st.integers(1, 6))
+def test_split_rows_alignment(n, p_r):
+    p_r = min(p_r, n)
+    x = np.arange(n * 3, dtype=float).reshape(n, 3)
+    y = np.arange(n)
+    d = DistArray.from_array(x, p_r, 1)
+    parts = d.split_rows(y)
+    assert sum(len(p) for p in parts) == n
+    np.testing.assert_array_equal(np.concatenate(parts), y)
+    for i, part in enumerate(parts):       # rows align with blocks
+        np.testing.assert_array_equal(
+            d.blocks[i][0][:, 0], x[part[0]:part[-1] + 1, 0])
+
+
+def test_stitch_restores_rows():
+    x = np.random.default_rng(0).normal(size=(12, 10))
+    d = DistArray.from_array(x, 3, 4)
+    ex = TaskExecutor(Environment())
+    rows = d.row_stitched(ex)
+    np.testing.assert_array_equal(np.concatenate(rows), x)
+    assert ex.n_tasks == 3                 # stitching is real, counted work
+
+
+def test_block_sizes_mb():
+    x = np.zeros((1024, 1024))
+    d = DistArray.from_array(x, 2, 2)
+    assert abs(d.block_sizes_mb()[0][0] - 2.0) < 1e-6   # 512x512 f64 = 2 MB

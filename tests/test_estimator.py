@@ -1,0 +1,119 @@
+"""Grid search + log extraction + end-to-end BlockSizeEstimator."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.estimator import BlockSizeEstimator
+from repro.core.gridsearch import grid_powers, grid_search, grid_stats
+from repro.core.log import ExecutionLog, ExecutionRecord
+from repro.data.datasets import gaussian_blobs
+from repro.data.executor import Environment
+
+
+def test_grid_powers_paper_convention():
+    # 64 cores, s=2, 4x multiple -> powers up to 256 (paper Fig. 3)
+    ps = grid_powers(64, s=2, mult=4)
+    assert ps[0] == 1 and ps[-1] == 256
+    ps3 = grid_powers(27, s=3, mult=1)
+    assert ps3 == [1, 3, 9, 27]
+
+
+def _mk_rec(pr, pc, t, rows=100, algo="kmeans"):
+    return ExecutionRecord({"rows": rows, "cols": 10}, algo,
+                           {"n_workers": 4}, pr, pc, t)
+
+
+def test_log_best_per_group_argmin():
+    log = ExecutionLog()
+    for pr, t in [(1, 5.0), (2, 1.0), (4, 3.0)]:
+        log.add(_mk_rec(pr, 1, t))
+    best = log.best_per_group()
+    assert len(best) == 1 and best[0].p_r == 2
+
+
+def test_log_infinite_times_excluded():
+    log = ExecutionLog()
+    log.add(_mk_rec(1, 1, float("inf")))
+    log.add(_mk_rec(2, 1, 2.0))
+    best = log.best_per_group()
+    assert best[0].p_r == 2
+    # group with only failures disappears
+    log2 = ExecutionLog([_mk_rec(1, 1, float("inf"))])
+    assert log2.best_per_group() == []
+
+
+def test_log_roundtrip_with_inf(tmp_path):
+    log = ExecutionLog([_mk_rec(1, 1, float("inf")), _mk_rec(2, 4, 1.5)])
+    p = tmp_path / "log.jsonl"
+    log.save(p)
+    back = ExecutionLog.load(p)
+    assert math.isinf(back.records[0].time_s)
+    assert back.records[1].p_c == 4
+
+
+def test_grid_search_runs_and_oom_marks_inf():
+    X, y = gaussian_blobs(128, 16, seed=0)
+    env = Environment(n_workers=4, mem_limit_mb=0.02)    # tight per-task RAM
+    log, grid = grid_search(X, y, "kmeans", env, mult=1)
+    assert any(math.isinf(t) for t in grid.values())     # big blocks OOM
+    assert any(math.isfinite(t) for t in grid.values())  # small blocks fit
+
+
+def test_end_to_end_estimator_learns_grid_argmin():
+    """Train on synthetic logs where the best partitioning follows a clear
+    rule; the estimator must reproduce the rule on held-out sizes."""
+    log = ExecutionLog()
+    rng = np.random.default_rng(0)
+    for rows in (256, 512, 1024, 2048, 4096, 8192):
+        for algo in ("kmeans", "rf"):
+            # synthetic truth: p_r* = rows//512 (min 1), p_c* = 1 for rf,
+            # 2 for kmeans
+            best_pr = max(1, rows // 512)
+            best_pc = 2 if algo == "kmeans" else 1
+            for pr in (1, 2, 4, 8, 16):
+                for pc in (1, 2, 4):
+                    t = abs(np.log2(pr) - np.log2(best_pr)) \
+                        + abs(np.log2(pc) - np.log2(best_pc)) \
+                        + 0.01 * rng.random()
+                    log.add(ExecutionRecord(
+                        {"rows": rows, "cols": 64,
+                         "log_rows": np.log2(rows)},
+                        algo, {"n_workers": 4}, pr, pc, t))
+    est = BlockSizeEstimator("tree").fit(log)
+    pr, pc = est.predict_partitions(2048, 64, "kmeans", {"n_workers": 4})
+    assert pr == 4 and pc == 2
+    pr, pc = est.predict_partitions(8192, 64, "rf", {"n_workers": 4})
+    assert pr == 16 and pc == 1
+
+
+def test_predict_block_size_formula():
+    """(r*, c*) = (n/p_r, m/p_c) -- the paper's worked example."""
+    log = ExecutionLog()
+    for t, pr, pc in [(1.0, 4, 16), (2.0, 1, 1), (3.0, 2, 2)]:
+        log.add(ExecutionRecord({"rows": 51200, "cols": 256}, "csvm",
+                                {"n_workers": 64}, pr, pc, t))
+    est = BlockSizeEstimator("tree").fit(log)
+    r, c = est.predict_block_size(51200, 256, "csvm", {"n_workers": 64})
+    assert (r, c) == (12800, 16)          # paper §III-C example
+
+
+def test_estimator_all_model_variants():
+    log = ExecutionLog()
+    for rows in (128, 256, 512):
+        for pr in (1, 2, 4):
+            log.add(ExecutionRecord({"rows": rows, "cols": 8}, "pca",
+                                    {"n_workers": 2}, pr, 1,
+                                    abs(pr - 2) + 0.1))
+    for name in ("tree", "forest", "independent", "regression"):
+        est = BlockSizeEstimator(name).fit(log)
+        pr, pc = est.predict_partitions(256, 8, "pca", {"n_workers": 2})
+        assert pr >= 1 and pc >= 1
+
+
+def test_stats_best_avg_worst():
+    grid = {(1, 1): 4.0, (2, 1): 1.0, (4, 1): float("inf"), (8, 1): 7.0}
+    st = grid_stats(grid)
+    assert st["best"] == 1.0 and st["worst"] == 7.0
+    assert st["avg"] == pytest.approx(4.0)
+    assert st["n_oom"] == 1

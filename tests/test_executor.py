@@ -1,0 +1,67 @@
+"""Task executor: LPT schedule properties, memory-budget OOM, dispatch
+overhead accounting, warmup exclusion."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.data.executor import (Environment, TaskExecutor, TaskMemoryError,
+                                 lpt_makespan)
+
+
+@settings(max_examples=40, deadline=None)
+@given(durs=st.lists(st.floats(0.001, 10.0), min_size=1, max_size=30),
+       w=st.integers(1, 16))
+def test_lpt_bounds(durs, w):
+    ms = lpt_makespan(durs, w)
+    lower = max(max(durs), sum(durs) / w)
+    assert ms >= lower - 1e-9
+    assert ms <= sum(durs) + 1e-9
+    # LPT is within 4/3 - 1/(3w) of optimal >= lower bound
+    assert ms <= (4 / 3) * lower + max(durs)
+
+
+def test_one_worker_is_serial():
+    durs = [0.5, 1.0, 0.25]
+    assert lpt_makespan(durs, 1) == pytest.approx(sum(durs))
+
+
+def test_many_workers_is_max():
+    durs = [0.5, 1.0, 0.25]
+    assert lpt_makespan(durs, 8) == pytest.approx(1.0)
+
+
+def test_memory_budget_raises():
+    env = Environment(mem_limit_mb=0.5)
+    ex = TaskExecutor(env)
+    big = np.zeros((1024, 1024))           # 8 MB > 3x-multiplier budget
+    with pytest.raises(TaskMemoryError):
+        ex.map(lambda b: b.sum(), [big])
+
+
+def test_dispatch_overhead_grows_with_tasks():
+    env = Environment(n_workers=64, dispatch_overhead_s=1e-3)
+    blocks = [np.zeros((8, 8)) for _ in range(32)]
+    ex1 = TaskExecutor(env)
+    ex1.map(lambda b: b + 0, blocks[:4], name="p")
+    ex2 = TaskExecutor(env)
+    ex2.map(lambda b: b + 0, blocks, name="p")
+    # 32 tasks pay ~8x the dispatch cost of 4 tasks
+    assert ex2.sim_time > ex1.sim_time + 27e-3
+
+
+def test_sim_time_at_most_real_plus_overhead():
+    env = Environment(n_workers=4)
+    ex = TaskExecutor(env)
+    blocks = [np.random.default_rng(i).normal(size=(256, 256))
+              for i in range(8)]
+    ex.map(lambda b: b @ b.T, blocks)
+    overhead = ex.n_tasks * env.dispatch_overhead_s
+    assert ex.sim_time <= ex.real_time + overhead + 1e-9
+    assert ex.sim_time > 0
+
+
+def test_reduce_tree_counts_tasks():
+    ex = TaskExecutor(Environment())
+    out = ex.reduce(lambda a, b: a + b, list(np.arange(8.0)))
+    assert out == pytest.approx(28.0)
+    assert ex.n_tasks == 7                 # binary tree over 8 leaves

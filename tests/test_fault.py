@@ -1,0 +1,91 @@
+"""Fault-tolerance policies: straggler detection, retries, elastic mesh
+planning (hypothesis invariants)."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.runtime.elastic import adapt_config, plan_mesh
+from repro.runtime.fault import (RetryPolicy, StragglerConfig,
+                                 StragglerDetector, simulate_failure)
+from repro.configs import reduced_config
+
+
+def test_straggler_detects_consecutive_slow_steps():
+    det = StragglerDetector(StragglerConfig(warmup=3, patience=2,
+                                            threshold=2.0))
+    verdicts = [det.record(0.1) for _ in range(8)]
+    assert all(v == "ok" for v in verdicts)
+    assert det.record(0.5) == "slow"
+    assert det.record(0.5) == "act"            # patience reached
+
+
+def test_straggler_excludes_slow_from_baseline():
+    det = StragglerDetector(StragglerConfig(warmup=2, patience=3,
+                                            threshold=2.0))
+    for _ in range(6):
+        det.record(0.1)
+    med_before = det.median()
+    det.record(10.0)                           # huge straggler
+    assert det.median() == med_before          # not polluted
+
+
+def test_straggler_recovers_after_normal_step():
+    det = StragglerDetector(StragglerConfig(warmup=2, patience=3,
+                                            threshold=2.0))
+    for _ in range(5):
+        det.record(0.1)
+    det.record(0.5)
+    det.record(0.1)                            # back to normal
+    assert det.consecutive_slow == 0
+
+
+def test_retry_policy_retries_then_succeeds():
+    calls = {"n": 0}
+
+    def flaky():
+        calls["n"] += 1
+        if calls["n"] < 3:
+            raise IOError("transient")
+        return "ok"
+
+    out = RetryPolicy(max_retries=3, backoff_s=0).run(flaky, sleep=lambda s: None)
+    assert out == "ok" and calls["n"] == 3
+
+
+def test_retry_policy_escalates():
+    with pytest.raises(RuntimeError):
+        RetryPolicy(max_retries=2, backoff_s=0).run(
+            lambda: (_ for _ in ()).throw(IOError("x")), sleep=lambda s: None)
+
+
+def test_simulate_failure_schedule():
+    sched = {5: ("device_loss", {"lost": 2})}
+    assert simulate_failure(4, sched) is None
+    ev = simulate_failure(5, sched)
+    assert ev.kind == "device_loss" and ev.payload["lost"] == 2
+
+
+# ------------------------------------------------------------- elastic
+@settings(max_examples=50, deadline=None)
+@given(n=st.integers(1, 600), gb=st.sampled_from([8, 64, 256]))
+def test_plan_mesh_invariants(n, gb):
+    plan = plan_mesh(n, gb, prefer_model=16)
+    assert plan.size <= n
+    data, model = plan.shape
+    assert 16 % model == 0                     # tensor shards keep dividing
+    assert gb % data == 0                      # batch splits evenly
+
+
+def test_plan_mesh_prefers_larger_usable_mesh():
+    plan = plan_mesh(512, 256, prefer_model=16)
+    assert plan.size == 512
+    plan7 = plan_mesh(7, 256, prefer_model=4)
+    assert plan7.size <= 7 and plan7.size >= 4
+
+
+def test_adapt_config_keeps_batch_divisible():
+    cfg = reduced_config("yi-6b").replace(train_microbatches=6)
+    plan = plan_mesh(8, 64, prefer_model=2)
+    c2 = adapt_config(cfg, plan, 64)
+    data = plan.shape[0]
+    assert 64 % c2.train_microbatches == 0
+    assert (64 // c2.train_microbatches) % data == 0

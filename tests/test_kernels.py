@@ -1,0 +1,122 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps + hypothesis
+property tests, in interpret mode (assignment requirement)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops
+from repro.kernels.flash_attention import vmem_bytes as fa_vmem
+from repro.kernels.matmul_blocked import vmem_bytes as mm_vmem
+from repro.kernels.ref import flash_attention_ref, matmul_ref
+
+RNG = np.random.default_rng(0)
+
+
+# ---------------------------------------------------------------- matmul
+@pytest.mark.parametrize("m,k,n", [(128, 128, 128), (256, 128, 64),
+                                   (100, 60, 36), (32, 512, 96)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_matmul_shapes_dtypes(m, k, n, dtype):
+    a = jnp.asarray(RNG.normal(size=(m, k)), dtype)
+    b = jnp.asarray(RNG.normal(size=(k, n)), dtype)
+    got = ops.matmul(a, b, block_m=64, block_n=64, block_k=64)
+    want = matmul_ref(a, b)
+    tol = 1e-4 if dtype == jnp.float32 else 5e-2
+    assert got.dtype == a.dtype
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol * 10)
+
+
+@settings(max_examples=15, deadline=None)
+@given(m=st.integers(8, 96), k=st.integers(8, 96), n=st.integers(8, 96),
+       bm=st.sampled_from([16, 32, 64]), bk=st.sampled_from([16, 32, 64]))
+def test_matmul_property(m, k, n, bm, bk):
+    rng = np.random.default_rng(m * 7919 + k * 31 + n)
+    a = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(k, n)), jnp.float32)
+    got = ops.matmul(a, b, block_m=bm, block_n=bm, block_k=bk)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(matmul_ref(a, b)),
+                               rtol=1e-4, atol=1e-3)
+
+
+# ---------------------------------------------------------- flash attention
+@pytest.mark.parametrize("t,h,kv,d,win,meta", [
+    (128, 4, 4, 64, 0, 0),        # MHA causal
+    (128, 4, 2, 64, 0, 0),        # GQA
+    (128, 8, 2, 32, 32, 0),       # GQA + sliding window
+    (96, 4, 2, 32, 32, 8),        # window + always-visible meta prefix
+    (64, 2, 1, 128, 16, 0),       # MQA + window
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(t, h, kv, d, win, meta, dtype):
+    rng = np.random.default_rng(t + h + win)
+    q = jnp.asarray(rng.normal(size=(2, t, h, d)), dtype)
+    k = jnp.asarray(rng.normal(size=(2, t, kv, d)), dtype)
+    v = jnp.asarray(rng.normal(size=(2, t, kv, d)), dtype)
+    got = ops.flash_attention(q, k, v, window=win, n_meta=meta,
+                              block_q=32, block_k=32)
+    kk, vv = (jnp.repeat(x, h // kv, axis=2) for x in (k, v))
+    want = flash_attention_ref(q, kk, vv, window=win, n_meta=meta)
+    tol = 2e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_flash_block_size_invariance():
+    """Output must not depend on the tile choice (pure perf knob)."""
+    rng = np.random.default_rng(5)
+    q = jnp.asarray(rng.normal(size=(1, 128, 4, 32)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 128, 4, 32)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(1, 128, 4, 32)), jnp.float32)
+    outs = [ops.flash_attention(q, k, v, block_q=bq, block_k=bk)
+            for bq, bk in [(32, 32), (64, 32), (32, 64), (128, 128)]]
+    for o in outs[1:]:
+        np.testing.assert_allclose(np.asarray(outs[0]), np.asarray(o),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_flash_gradients():
+    rng = np.random.default_rng(7)
+    q = jnp.asarray(rng.normal(size=(1, 64, 2, 32)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 64, 2, 32)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(1, 64, 2, 32)), jnp.float32)
+
+    def f(q, k, v):
+        return ops.flash_attention(q, k, v, window=16, block_q=32,
+                                   block_k=32).sum()
+
+    def f_ref(q, k, v):
+        return flash_attention_ref(q, k, v, window=16).sum()
+
+    g = jax.grad(f, argnums=(0, 1, 2))(q, k, v)
+    g_ref = jax.grad(f_ref, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g, g_ref):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_model_integration_use_flash():
+    """gqa_forward(use_flash=True) == jnp path on a full reduced model."""
+    from repro.configs import reduced_config
+    from repro.models import transformer as tf
+    from repro.models.layers import init_param_tree
+    cfg = reduced_config("h2o-danube-3-4b")
+    params = init_param_tree(tf.param_specs(cfg), jax.random.PRNGKey(0))
+    tokens = jnp.asarray(np.arange(64)[None, :] % cfg.vocab)
+    a, *_ = tf.model_forward(cfg, params, tokens, use_flash=False)
+    b, *_ = tf.model_forward(cfg, params, tokens, use_flash=True)
+    np.testing.assert_allclose(np.asarray(a, np.float32),
+                               np.asarray(b, np.float32), rtol=2e-3,
+                               atol=2e-3)
+
+
+# ------------------------------------------------------------- vmem models
+def test_vmem_budgets():
+    # default tiles must fit v5e VMEM (~128 KiB x ... ~16 MiB usable)
+    assert mm_vmem(128, 128, 128) < 16 * 2**20
+    assert fa_vmem(128, 128, 128) < 16 * 2**20
+    assert mm_vmem(2048, 2048, 512) > 16 * 2**20    # and the model can say no

@@ -1,0 +1,75 @@
+"""Beyond-paper tuners: mesh-factorization and kernel-tile estimators built
+on the paper's chained-DT cascade."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.configs import SHAPES, get_config
+from repro.core.kerneltune import (KernelTuner, build_training_log,
+                                   grid_search_matmul, matmul_tile_time)
+from repro.core.meshtune import (MeshTuner, arch_features, grid_search_cell,
+                                 tune_all)
+
+
+def test_mesh_grid_marks_oom_inf():
+    cfg = get_config("deepseek-v3-671b")
+    _, grid = grid_search_cell(cfg, SHAPES["train_4k"], chips=256)
+    assert any(math.isinf(v) for v in grid.values())     # tiny dp can't fit
+    assert any(math.isfinite(v) for v in grid.values())
+
+
+def test_meshtune_predicts_feasible():
+    log, _ = tune_all(["yi-6b", "mamba2-370m", "mixtral-8x7b"],
+                      shapes=("train_4k",))
+    tuner = MeshTuner(256).fit(log)
+    cfg = get_config("deepseek-7b")                      # unseen arch
+    dp, tp, mb = tuner.predict(cfg, SHAPES["train_4k"])
+    assert dp * tp == 256
+    assert SHAPES["train_4k"].global_batch % (dp * mb) == 0
+
+
+def test_meshtune_close_to_grid_best():
+    archs = ["yi-6b", "mamba2-370m", "mixtral-8x7b", "h2o-danube-3-4b",
+             "musicgen-large"]
+    log, _ = tune_all(archs, shapes=("train_4k",))
+    tuner = MeshTuner(256).fit(log)
+    cfg = get_config("deepseek-7b")
+    dp, tp, mb = tuner.predict(cfg, SHAPES["train_4k"])
+    _, grid = grid_search_cell(cfg, SHAPES["train_4k"], chips=256)
+    finite = {k: v for k, v in grid.items() if math.isfinite(v)}
+    best = min(finite.values())
+    t = grid.get((dp, mb), float("inf"))
+    assert math.isfinite(t)
+    assert t <= 3.0 * best                               # near-optimal cell
+
+
+def test_arch_features_schema():
+    f = arch_features(get_config("hymba-1.5b"), SHAPES["decode_32k"])
+    assert f["ssm_state"] == 16 and f["is_decode"] == 1.0
+
+
+# ----------------------------------------------------------- kernel tuner
+def test_tile_cost_model_vmem_inf():
+    assert math.isinf(matmul_tile_time(4096, 4096, 4096, 2048, 2048, 1024))
+    assert math.isfinite(matmul_tile_time(4096, 4096, 4096, 128, 128, 128))
+
+
+def test_tile_cost_prefers_aligned():
+    t_al = matmul_tile_time(1024, 1024, 1024, 128, 128, 128)
+    t_un = matmul_tile_time(1024, 1024, 1024, 96, 96, 96)
+    assert t_al < t_un
+
+
+def test_kernel_tuner_near_best():
+    tun = KernelTuner().fit(build_training_log(n_shapes=25))
+    rng = np.random.default_rng(3)
+    ratios = []
+    for _ in range(8):
+        m, k, n = (int(2 ** rng.integers(7, 13)) for _ in range(3))
+        _, grid = grid_search_matmul(m, k, n)
+        finite = {kk: v for kk, v in grid.items() if math.isfinite(v)}
+        bm, bn = tun.predict(m, k, n)
+        t = grid.get((bm, bn), float("inf"))
+        ratios.append(t / min(finite.values()))
+    assert np.mean(ratios) < 1.5

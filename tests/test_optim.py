@@ -1,0 +1,85 @@
+"""Optimizers: convergence on a quadratic, state-spec/shape agreement,
+schedule values, clipping."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import reduced_config
+from repro.models.layers import ParamSpec, init_param_tree, spec_tree_to_sds
+from repro.models.transformer import param_specs
+from repro.runtime.optim import (AdamWConfig, adamw_state_specs, adamw_update,
+                                 adafactor_state_specs, adafactor_update,
+                                 AdafactorConfig, clip_by_global_norm,
+                                 cosine_schedule, global_norm,
+                                 opt_state_specs)
+
+
+def quad_target(seed=0, shape=(8, 6)):
+    return jnp.asarray(np.random.default_rng(seed).normal(size=shape),
+                       jnp.float32)
+
+
+@pytest.mark.parametrize("opt", ["adamw", "adafactor"])
+def test_optimizers_converge_quadratic(opt):
+    t = quad_target()
+    params = {"w": jnp.zeros_like(t)}
+    specs = {"w": ParamSpec(t.shape, (None, None), "float32")}
+    if opt == "adamw":
+        state = init_param_tree(adamw_state_specs(specs, "float32"),
+                                jax.random.PRNGKey(0))
+        cfg = AdamWConfig(weight_decay=0.0)
+        upd = lambda g, s, p: adamw_update(cfg, g, s, p, 0.05)
+    else:
+        state = init_param_tree(adafactor_state_specs(specs, "float32"),
+                                jax.random.PRNGKey(0))
+        cfg = AdafactorConfig()
+        upd = lambda g, s, p: adafactor_update(cfg, g, s, p, 0.05)
+    for _ in range(400):
+        g = {"w": params["w"] - t}
+        params, state, _ = upd(g, state, params)
+    assert float(jnp.mean(jnp.abs(params["w"] - t))) < 0.05
+
+
+def test_state_specs_match_param_tree():
+    cfg = reduced_config("mixtral-8x7b")
+    ps = param_specs(cfg)
+    for name in ("adamw", "adafactor"):
+        st = opt_state_specs(cfg.replace(optimizer=name), ps)
+        sds = spec_tree_to_sds(st)
+        assert jax.tree.all(jax.tree.map(lambda s: s.size >= 0, sds))
+    # adamw moments mirror shapes exactly
+    st = adamw_state_specs(ps, "float32")
+    flat_p = jax.tree.leaves(ps, is_leaf=lambda x: isinstance(x, ParamSpec))
+    flat_m = jax.tree.leaves(st["mu"],
+                             is_leaf=lambda x: isinstance(x, ParamSpec))
+    assert [p.shape for p in flat_p] == [m.shape for m in flat_m]
+
+
+def test_adafactor_state_is_small():
+    cfg = reduced_config("yi-6b").replace(optimizer="adafactor")
+    ps = param_specs(cfg)
+    st = opt_state_specs(cfg, ps)
+    p_elems = sum(np.prod(s.shape) for s in jax.tree.leaves(
+        ps, is_leaf=lambda x: isinstance(x, ParamSpec)))
+    s_elems = sum(np.prod(s.shape) for s in jax.tree.leaves(
+        st, is_leaf=lambda x: isinstance(x, ParamSpec)))
+    assert s_elems < 0.2 * p_elems        # factored: far below 2x of Adam
+
+
+def test_cosine_schedule():
+    lr0 = cosine_schedule(jnp.asarray(0), peak_lr=1.0, warmup=10, total=100)
+    lr_peak = cosine_schedule(jnp.asarray(10), peak_lr=1.0, warmup=10,
+                              total=100)
+    lr_end = cosine_schedule(jnp.asarray(100), peak_lr=1.0, warmup=10,
+                             total=100)
+    assert float(lr0) == 0.0
+    assert float(lr_peak) == pytest.approx(1.0)
+    assert float(lr_end) == pytest.approx(0.1, abs=1e-6)   # floor 10%
+
+
+def test_clip_by_global_norm():
+    tree = {"a": jnp.full((4,), 3.0), "b": jnp.full((4,), 4.0)}
+    clipped, gn = clip_by_global_norm(tree, 1.0)
+    assert float(gn) == pytest.approx(10.0)
+    assert float(global_norm(clipped)) == pytest.approx(1.0, rel=1e-5)

@@ -1,0 +1,70 @@
+"""Decode-vs-full-forward equivalence for every architecture -- the cache
+machinery (full, ring/windowed, MLA latent, SSM state, meta-token prefix)
+must reproduce full-sequence logits token-for-token."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, reduced_config
+from repro.models import transformer as tf
+from repro.models.layers import init_param_tree
+
+# capacity-MoE drop boundaries differ between T-1 and T token counts
+TOL = {"mixtral-8x7b": 5e-3, "deepseek-v3-671b": 5e-3}
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_decode_matches_forward(arch, T=40, B=2):
+    cfg = reduced_config(arch)
+    params = init_param_tree(tf.param_specs(cfg), jax.random.PRNGKey(0))
+    rng = np.random.default_rng(1)
+    shape = (B, cfg.n_codebooks, T) if cfg.n_codebooks > 1 else (B, T)
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab, shape))
+    img = None
+    if cfg.frontend == "vision":
+        img = jnp.asarray(rng.normal(0, 0.02, (B, cfg.image_tokens,
+                                               cfg.d_model)), jnp.float32)
+    logits_full, *_ = tf.model_forward(cfg, params, tokens, img)
+    last, cache = tf.prefill(cfg, params, tokens[..., :T - 1], img)
+    cache = tf.grow_cache(cfg, cache,
+                          T + cfg.meta_tokens + cfg.image_tokens + 4)
+    logits_dec, cache2 = tf.decode_step(cfg, params, cache,
+                                        tokens[..., T - 1:T])
+    tol = TOL.get(arch, 2e-3)
+    err = float(jnp.max(jnp.abs(logits_full[:, -1] - logits_dec[:, 0])))
+    assert err < tol, (arch, err)
+    err2 = float(jnp.max(jnp.abs(logits_full[:, -2] - last[:, 0])))
+    assert err2 < tol, (arch, err2)
+    assert int(cache2["pos"]) == int(cache["pos"]) + 1
+
+
+def test_multi_step_decode_matches_forward():
+    """Three consecutive decode steps track the full forward exactly."""
+    arch = "h2o-danube-3-4b"                  # ring cache: hardest path
+    cfg = reduced_config(arch)
+    params = init_param_tree(tf.param_specs(cfg), jax.random.PRNGKey(0))
+    rng = np.random.default_rng(3)
+    T = 44
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab, (1, T)))
+    logits_full, *_ = tf.model_forward(cfg, params, tokens)
+    _, cache = tf.prefill(cfg, params, tokens[:, :T - 3])
+    cache = tf.grow_cache(cfg, cache, T + 4)
+    for i in range(3):
+        pos = T - 3 + i
+        logits, cache = tf.decode_step(cfg, params, cache,
+                                       tokens[:, pos:pos + 1])
+        err = float(jnp.max(jnp.abs(logits_full[:, pos] - logits[:, 0])))
+        assert err < 2e-3, (i, err)
+
+
+def test_grow_cache_pads_only_seq():
+    cfg = reduced_config("yi-6b")
+    params = init_param_tree(tf.param_specs(cfg), jax.random.PRNGKey(0))
+    tokens = jnp.asarray(np.arange(16)[None, :] % cfg.vocab)
+    _, cache = tf.prefill(cfg, params, tokens)
+    grown = tf.grow_cache(cfg, cache, 64)
+    k = grown["stages"][0]["u0"]["k"]
+    assert k.shape[2] == 64
+    orig = cache["stages"][0]["u0"]["k"]
+    assert jnp.allclose(k[:, :, :orig.shape[2]], orig)

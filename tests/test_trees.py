@@ -1,0 +1,113 @@
+"""From-scratch CART / forest / chained-classifier correctness."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.chained import (ChainedClassifier, IndependentClassifier,
+                                RegressionBaseline)
+from repro.core.trees import (DecisionTreeClassifier, DecisionTreeRegressor,
+                              RandomForestClassifier)
+
+
+def blobs(n=200, seed=0, k=3, m=4):
+    rng = np.random.default_rng(seed)
+    X = rng.normal(size=(n, m))
+    y = (X[:, 0] * 2 + X[:, 1] > 0).astype(int) + \
+        (X[:, 2] > 1).astype(int) * (k - 2)
+    return X, y
+
+
+def test_tree_overfits_training_set():
+    X, y = blobs()
+    t = DecisionTreeClassifier(max_depth=20).fit(X, y)
+    assert (t.predict(X) == y).mean() > 0.98
+
+
+def test_tree_axis_aligned_split_exact():
+    X = np.array([[0.0], [1.0], [2.0], [3.0]])
+    y = np.array([0, 0, 1, 1])
+    t = DecisionTreeClassifier(max_depth=2).fit(X, y)
+    assert (t.predict(np.array([[0.5], [2.5]])) == [0, 1]).all()
+    assert t.nodes[0].threshold == pytest.approx(1.5)
+
+
+def test_tree_depth_limit():
+    X, y = blobs(400, seed=1)
+    t = DecisionTreeClassifier(max_depth=1).fit(X, y)
+    assert t.n_nodes <= 3
+
+
+def test_tree_predicts_seen_classes_only():
+    X, y = blobs(seed=2)
+    t = DecisionTreeClassifier().fit(X, y)
+    assert set(np.unique(t.predict(X))) <= set(np.unique(y))
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 1000), depth=st.integers(1, 12))
+def test_tree_probability_simplex(seed, depth):
+    X, y = blobs(100, seed=seed)
+    t = DecisionTreeClassifier(max_depth=depth).fit(X, y)
+    p = t.predict_proba(X)
+    assert np.all(p >= 0) and np.allclose(p.sum(axis=1), 1.0)
+
+
+def test_regressor_fits_step_function():
+    X = np.linspace(0, 1, 200)[:, None]
+    y = (X[:, 0] > 0.5) * 3.0
+    r = DecisionTreeRegressor(max_depth=3).fit(X, y)
+    assert np.abs(r.predict(X) - y).max() < 0.1
+
+
+def test_forest_beats_stump():
+    X, y = blobs(500, seed=3)
+    Xt, yt = blobs(200, seed=4)
+    stump = DecisionTreeClassifier(max_depth=1).fit(X, y)
+    forest = RandomForestClassifier(n_estimators=15, max_depth=8).fit(X, y)
+    assert (forest.predict(Xt) == yt).mean() > (stump.predict(Xt) == yt).mean()
+
+
+# ------------------------------------------------------------- chaining
+def _xor_targets(n=300, seed=0):
+    """y_c depends on y_r: chained model should exploit it."""
+    rng = np.random.default_rng(seed)
+    X = rng.normal(size=(n, 3))
+    y_r = (X[:, 0] > 0).astype(int) + (X[:, 1] > 0).astype(int)
+    y_c = (y_r + (X[:, 2] > 0)).astype(int) % 3
+    return X, y_r, y_c
+
+
+def test_chained_predicts_both_targets():
+    X, yr, yc = _xor_targets()
+    m = ChainedClassifier().fit(X, yr, yc)
+    pred = m.predict(X)
+    assert pred.shape == (len(X), 2)
+    assert (pred[:, 0] == yr).mean() > 0.95
+    assert (pred[:, 1] == yc).mean() > 0.9
+
+
+def test_chained_uses_row_target():
+    """When y_c == y_r exactly, chaining must get y_c ~perfect from the
+    chained feature even with uninformative X for DT_c."""
+    rng = np.random.default_rng(1)
+    X = rng.normal(size=(400, 2))
+    y_r = (X[:, 0] + X[:, 1] > 0).astype(int)
+    m = ChainedClassifier().fit(X, y_r, y_r)
+    pred = m.predict(X)
+    agree = (pred[:, 0] == pred[:, 1]).mean()
+    assert agree > 0.98
+
+
+def test_independent_and_regression_baselines_run():
+    X, yr, yc = _xor_targets(seed=5)
+    for cls in (IndependentClassifier, RegressionBaseline):
+        pred = cls().fit(X, yr, yc).predict(X)
+        assert pred.shape == (len(X), 2)
+        assert np.all(pred >= 0)
+
+
+def test_regression_snaps_to_power_grid():
+    X, yr, yc = _xor_targets(seed=6)
+    m = RegressionBaseline(s=2).fit(X, yr, yc)
+    pred = m.predict(X)
+    assert pred.dtype.kind == "i"          # exponents, constrained grid
