@@ -1,0 +1,201 @@
+"""Hot-path microbenchmarks for the vectorized estimation pipeline.
+
+Measures the four paths the perf overhaul targets and writes
+``BENCH_hotpath.json`` at the repo root:
+
+  * ``fit``        -- chained-DT / forest training time on a synthetic log;
+  * ``predict``    -- single-query loop vs ``predict_partitions_batch``
+                      (one model pass) vs the memoized ``EstimatorService``;
+  * ``gridsearch`` -- wall time and executed-cell count with and without
+                      monotone OOM pruning + block-refinement reuse;
+  * ``kerneltune`` -- broadcast tile-grid scoring throughput.
+
+Prints ``name,us_per_call,derived`` CSV rows (harness convention).
+"""
+from __future__ import annotations
+
+import json
+import math
+import time
+from pathlib import Path
+
+import numpy as np
+
+from repro.core.estimator import BlockSizeEstimator, EstimatorService
+from repro.core.gridsearch import grid_search, grid_stats
+from repro.core.kerneltune import grid_search_matmul
+from repro.core.log import ExecutionLog, ExecutionRecord
+from repro.data.datasets import gaussian_blobs
+from repro.data.executor import Environment
+
+from benchmarks.common import csv_row
+
+OUT = Path(__file__).resolve().parent.parent / "BENCH_hotpath.json"
+
+
+def synthetic_log(n_sizes: int = 10, seed: int = 0) -> ExecutionLog:
+    """Training log shaped like the paper's: argmin follows a clean rule."""
+    log = ExecutionLog()
+    rng = np.random.default_rng(seed)
+    for rows in (2 ** np.arange(8, 8 + n_sizes)):
+        for algo in ("kmeans", "pca", "rf", "csvm"):
+            best_pr = max(1, int(rows) // 512)
+            best_pc = 2 if algo in ("kmeans", "pca") else 1
+            for pr in (1, 2, 4, 8, 16, 32):
+                for pc in (1, 2, 4):
+                    t = abs(np.log2(pr) - np.log2(best_pr)) \
+                        + abs(np.log2(pc) - np.log2(best_pc)) \
+                        + 0.01 * rng.random()
+                    log.add(ExecutionRecord(
+                        {"rows": float(rows), "cols": 64.0,
+                         "log_rows": float(np.log2(rows))},
+                        algo, {"n_workers": 4}, pr, pc, t))
+    return log
+
+
+def bench_fit(results: dict, verbose=True):
+    log = synthetic_log()
+    for model in ("tree", "forest"):
+        t0 = time.perf_counter()
+        BlockSizeEstimator(model).fit(log)
+        dt = time.perf_counter() - t0
+        results[f"fit_{model}_s"] = dt
+        csv_row(f"hotpath/fit_{model}", dt * 1e6, "chained_cascade")
+
+
+def _best_of(fn, reps: int = 3):
+    """(min wall time, last result) -- min damps scheduler noise."""
+    best, out = float("inf"), None
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        out = fn()
+        best = min(best, time.perf_counter() - t0)
+    return best, out
+
+
+def bench_predict(results: dict, verbose=True, n_queries: int = 1024):
+    est = BlockSizeEstimator("tree").fit(synthetic_log())
+    rng = np.random.default_rng(1)
+    qs = [(int(2 ** rng.integers(8, 16)), 64,
+           ("kmeans", "pca", "rf", "csvm")[int(rng.integers(4))],
+           {"n_workers": 4}) for _ in range(n_queries)]
+
+    t_loop, loop = _best_of(
+        lambda: [est.predict_partitions(*q) for q in qs])
+    t_batch, batch = _best_of(lambda: est.predict_partitions_batch(qs))
+    assert batch == loop, "batched serving path diverged from per-row path"
+
+    svc = EstimatorService(est)
+    svc.predict_partitions_batch(qs)                       # warm the memo
+    t_svc, _ = _best_of(lambda: svc.predict_partitions_batch(qs))
+
+    speedup = t_loop / t_batch
+    results.update({
+        "predict_queries": n_queries,
+        "predict_loop_s": t_loop, "predict_batch_s": t_batch,
+        "predict_service_warm_s": t_svc,
+        "batch_speedup_x": speedup,
+        "service_hit_rate": svc.hit_rate,
+    })
+    csv_row("hotpath/predict_loop", t_loop / n_queries * 1e6, "per_query")
+    csv_row("hotpath/predict_batch", t_batch / n_queries * 1e6,
+            f"speedup={speedup:.1f}x")
+    csv_row("hotpath/predict_service_warm", t_svc / n_queries * 1e6,
+            f"hit_rate={svc.hit_rate:.2f}")
+
+
+def bench_grid_generation(results: dict, verbose=True):
+    """Partitioning cost alone: re-slicing the source at every cell vs one
+    slice + view-refinement chains (``DistArray.refine``)."""
+    from repro.core.gridsearch import _refined_cells, grid_powers
+    from repro.data.distarray import DistArray
+
+    X = np.zeros((8192, 512))                          # 32 MB source
+    ps = grid_powers(8, s=2, mult=4)                   # 1..32 -> 36 cells
+
+    t0 = time.perf_counter()
+    slice_cells = {(pr, pc): DistArray.from_array(X, pr, pc)
+                   for pr in ps for pc in ps}
+    t_slice = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    view_cells = _refined_cells(X, ps, ps)
+    t_view = time.perf_counter() - t0
+
+    assert set(slice_cells) == set(view_cells)
+    for key in ((1, 1), (4, 8), (32, 32)):             # spot-check shapes
+        assert slice_cells[key].block_shape == view_cells[key].block_shape
+
+    results.update({
+        "gen_cells": len(view_cells),
+        "gen_reslice_s": t_slice, "gen_refine_s": t_view,
+        "gen_speedup_x": t_slice / t_view,
+    })
+    csv_row("hotpath/grid_gen_reslice", t_slice * 1e6,
+            f"cells={len(slice_cells)}")
+    csv_row("hotpath/grid_gen_refine", t_view * 1e6,
+            f"speedup={t_slice / t_view:.1f}x")
+
+
+def bench_gridsearch(results: dict, verbose=True):
+    """Full sweep under a tight memory budget: pruned cells are recorded
+    ``inf`` without execution, and the argmin label is unchanged."""
+    X, y = gaussian_blobs(2048, 32, seed=0)
+    env = Environment(n_workers=8, mem_limit_mb=0.3)   # coarse cells OOM
+
+    t0 = time.perf_counter()
+    log_base, g_base = grid_search(X, y, "kmeans", env, mult=1,
+                                   prune_oom=False, reuse_blocks=False)
+    t_base = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    log_fast, g_fast = grid_search(X, y, "kmeans", env, mult=1,
+                                   prune_oom=True, reuse_blocks=True)
+    t_fast = time.perf_counter() - t0
+
+    pruned = sum(1 for r in log_fast.records if r.meta.get("pruned"))
+    executed = len(log_fast.records) - pruned
+    assert pruned > 0, "bench config must exercise OOM pruning"
+    assert set(g_base) == set(g_fast)
+    assert {k for k, v in g_base.items() if math.isfinite(v)} \
+        == {k for k, v in g_fast.items() if math.isfinite(v)}
+    assert grid_stats(g_base)["best_part"] == grid_stats(g_fast)["best_part"]
+
+    results.update({
+        "grid_cells": len(g_fast), "grid_pruned_cells": pruned,
+        "grid_executed_cells": executed,
+        "grid_unpruned_s": t_base, "grid_pruned_s": t_fast,
+        "grid_argmin": list(grid_stats(g_fast)["best_part"]),
+    })
+    csv_row("hotpath/grid_unpruned", t_base * 1e6,
+            f"cells={len(g_base)};executed={len(g_base)}")
+    csv_row("hotpath/grid_pruned", t_fast * 1e6,
+            f"executed={executed};pruned={pruned}")
+
+
+def bench_kerneltune(results: dict, verbose=True):
+    t0 = time.perf_counter()
+    n_grids = 50
+    for i in range(n_grids):
+        grid_search_matmul(1024 << (i % 3), 1024, 2048)
+    dt = time.perf_counter() - t0
+    results["kernel_grid_us"] = dt / n_grids * 1e6
+    csv_row("hotpath/kernel_tile_grid", dt / n_grids * 1e6,
+            "broadcast_cost_model;bk_swept")
+
+
+def run(verbose=True):
+    results: dict = {}
+    bench_fit(results, verbose)
+    bench_predict(results, verbose)
+    bench_grid_generation(results, verbose)
+    bench_gridsearch(results, verbose)
+    bench_kerneltune(results, verbose)
+    OUT.write_text(json.dumps(results, indent=2) + "\n")
+    if verbose:
+        print(f"# wrote {OUT}")
+    return results
+
+
+if __name__ == "__main__":
+    run()

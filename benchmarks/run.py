@@ -9,7 +9,7 @@ import argparse
 import time
 
 SUITES = ("table2", "table3", "table4", "table6", "ablation", "meshtune",
-          "kernel", "roofline")
+          "kernel", "roofline", "hotpath")
 
 
 def main(argv=None) -> None:
@@ -47,6 +47,9 @@ def main(argv=None) -> None:
     if "roofline" in todo:
         from benchmarks import roofline
         roofline.run(verbose=verbose)
+    if "hotpath" in todo:
+        from benchmarks import hotpath_bench
+        hotpath_bench.run(verbose=verbose)
     print(f"# benchmarks done in {time.time()-t0:.1f}s")
 
 

@@ -17,6 +17,16 @@ import numpy as np
 from repro.core.trees import DecisionTreeClassifier
 
 
+def _chain(X: np.ndarray, target) -> np.ndarray:
+    """Features ++ row-target column, written into one preallocated matrix
+    (column_stack's list-of-arrays round trip costs an extra copy per call
+    on the serving hot path)."""
+    Xc = np.empty((X.shape[0], X.shape[1] + 1), np.float64)
+    Xc[:, :-1] = X
+    Xc[:, -1] = np.asarray(target, np.float64)
+    return Xc
+
+
 class ChainedClassifier:
     def __init__(self, base_factory=None):
         self.base_factory = base_factory or (
@@ -27,15 +37,18 @@ class ChainedClassifier:
     def fit(self, X, y_r, y_c):
         X = np.asarray(X, np.float64)
         self.model_r = self.base_factory().fit(X, y_r)
-        Xc = np.column_stack([X, np.asarray(y_r, np.float64)])
-        self.model_c = self.base_factory().fit(Xc, y_c)
+        self.model_c = self.base_factory().fit(_chain(X, y_r), y_c)
         return self
 
     def predict(self, X):
+        """Row-batched: both cascade stages classify the whole query matrix
+        in one pass each (the estimator's batched serving path relies on
+        this -- never loop rows through here)."""
         X = np.asarray(X, np.float64)
+        if len(X) == 0:
+            return np.zeros((0, 2), int)
         pr = self.model_r.predict(X)
-        Xc = np.column_stack([X, pr.astype(np.float64)])
-        pc = self.model_c.predict(Xc)
+        pc = self.model_c.predict(_chain(X, pr))
         return np.stack([pr, pc], axis=1)
 
 

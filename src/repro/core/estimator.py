@@ -9,8 +9,16 @@ The estimator is model-agnostic (`model="tree"|"forest"|"independent"|
 "regression"`): "tree" is the paper-faithful cascade of two decision trees;
 the others are the ablations/upgrades benchmarked in
 benchmarks/ablation_models.py.
+The serving path is batched end to end: ``predict_partitions_batch``
+featurizes and classifies any number of queries in one model pass (the
+chained cascade in core/chained.py is row-batched throughout), and
+``EstimatorService`` fronts a fitted estimator with a shape-bucketed LRU
+memo for repeat traffic.
 """
 from __future__ import annotations
+
+import math
+from collections import OrderedDict
 
 import numpy as np
 
@@ -52,15 +60,93 @@ class BlockSizeEstimator:
     # ------------------------------------------------------------- predict
     def predict_partitions(self, n_rows: int, n_cols: int, algo: str,
                            env_features: dict) -> tuple:
-        f = featurize(dataset_features(n_rows, n_cols), algo, env_features)
-        X, _ = vectorize([f], self.feature_order)
-        er, ec = self.model.predict(X)[0]
-        p_r = int(self.s ** max(int(er), 0))
-        p_c = int(self.s ** max(int(ec), 0))
-        return min(p_r, n_rows), min(p_c, n_cols)
+        return self.predict_partitions_batch(
+            [(n_rows, n_cols, algo, env_features)])[0]
+
+    def predict_partitions_batch(self, queries) -> list[tuple]:
+        """Vectorized serving path: one featurize + one model pass for many
+        ``(n_rows, n_cols, algo, env_features)`` queries."""
+        queries = list(queries)
+        if not queries:
+            return []
+        feats = [featurize(dataset_features(nr, nc), algo, env)
+                 for nr, nc, algo, env in queries]
+        X, _ = vectorize(feats, self.feature_order)
+        E = self.model.predict(X)
+        out = []
+        for (nr, nc, _, _), (er, ec) in zip(queries, E):
+            p_r = int(self.s ** max(int(er), 0))
+            p_c = int(self.s ** max(int(ec), 0))
+            out.append((min(p_r, nr), min(p_c, nc)))
+        return out
 
     def predict_block_size(self, n_rows: int, n_cols: int, algo: str,
                            env_features: dict) -> tuple:
         """(r*, c*) = (n/p_r*, m/p_c*) -- the paper's §III-C output."""
         p_r, p_c = self.predict_partitions(n_rows, n_cols, algo, env_features)
         return int(np.ceil(n_rows / p_r)), int(np.ceil(n_cols / p_c))
+
+
+class EstimatorService:
+    """Serving front-end over a fitted estimator: shape-bucketed LRU memo.
+
+    Partition classes are powers of ``s``, so queries are canonicalized to
+    the next power-of-two shape (``2^ceil(log2 rows)`` x same for cols) and
+    memoized per (bucket shape, algo, env).  A memo hit skips the model
+    entirely; all misses in a batch are answered by one
+    ``predict_partitions_batch`` pass on the canonical shapes.  Results are
+    clamped to each query's true shape on the way out, matching
+    ``predict_partitions`` whenever the raw class fits the bucket shape.
+    """
+
+    def __init__(self, estimator: BlockSizeEstimator, maxsize: int = 4096):
+        self.estimator = estimator
+        self.maxsize = maxsize
+        self._memo: OrderedDict[tuple, tuple] = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+
+    @staticmethod
+    def _bucket(n_rows: int, n_cols: int, algo: str, env: dict) -> tuple:
+        br = 1 << max(0, math.ceil(math.log2(max(n_rows, 1))))
+        bc = 1 << max(0, math.ceil(math.log2(max(n_cols, 1))))
+        return (br, bc, algo, tuple(sorted((k, float(v))
+                                           for k, v in env.items())))
+
+    def predict_partitions_batch(self, queries) -> list[tuple]:
+        """Batch predict with memoization; accepts the same query tuples as
+        ``BlockSizeEstimator.predict_partitions_batch``."""
+        queries = list(queries)
+        keys = [self._bucket(*q) for q in queries]
+        resolved: dict[tuple, tuple] = {}
+        missing: list[tuple] = []
+        for key in keys:
+            if key in resolved:
+                self.hits += 1
+            elif key in self._memo:
+                self._memo.move_to_end(key)
+                resolved[key] = self._memo[key]
+                self.hits += 1
+            else:
+                resolved[key] = ()                 # placeholder; filled below
+                missing.append(key)
+                self.misses += 1
+        if missing:
+            canon = [(br, bc, algo, dict(env))
+                     for br, bc, algo, env in missing]
+            preds = self.estimator.predict_partitions_batch(canon)
+            for key, pred in zip(missing, preds):
+                resolved[key] = pred
+                self._memo[key] = pred
+                if len(self._memo) > self.maxsize:
+                    self._memo.popitem(last=False)
+        out = []
+        for (nr, nc, _, _), key in zip(queries, keys):
+            p_r, p_c = resolved[key]
+            out.append((min(p_r, nr), min(p_c, nc)))
+        return out
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0

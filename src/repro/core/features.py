@@ -7,20 +7,24 @@ tuner with a different vocabulary (see core/meshtune.py).
 """
 from __future__ import annotations
 
+import math
+
 import numpy as np
 
 ALGOS = ("kmeans", "pca", "gmm", "csvm", "rf")
 
 
 def dataset_features(n_rows: int, n_cols: int, dtype_bytes: int = 8) -> dict:
+    # math.log2, not np.log2: scalar numpy calls cost ~1-2us each and this
+    # runs once per query on the serving hot path (identical doubles)
     size_mb = n_rows * n_cols * dtype_bytes / 2**20
     return {
         "rows": float(n_rows),
         "cols": float(n_cols),
         "size_mb": size_mb,
-        "log_rows": float(np.log2(max(n_rows, 1))),
-        "log_cols": float(np.log2(max(n_cols, 1))),
-        "aspect": float(np.log2(max(n_rows, 1) / max(n_cols, 1))),
+        "log_rows": math.log2(max(n_rows, 1)),
+        "log_cols": math.log2(max(n_cols, 1)),
+        "aspect": math.log2(max(n_rows, 1) / max(n_cols, 1)),
     }
 
 

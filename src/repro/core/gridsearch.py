@@ -5,6 +5,15 @@ For a triple <d, a, e> builds the k x k grid G with
 executor, and records the measured (modeled-makespan) time -- failures
 (per-task memory budget exceeded) score infinity.  The annotated argmin
 becomes one training sample.
+
+Hot-path structure: the DistArray for every cell is derived once by
+refining the previous cell's blocks (``DistArray.refine`` view-splits; the
+source array is sliced exactly once), and cells execute fine -> coarse so
+that a measured OOM at (p_r, p_c) prunes every coarser-or-equal cell
+(p_r' <= p_r, p_c' <= p_c) without execution: coarser cells have
+per-task working sets at least as large, so they are recorded ``inf``
+directly (meta ``pruned: True``).  Argmin labels are provably unchanged --
+pruned cells would have scored ``inf`` anyway.
 """
 from __future__ import annotations
 
@@ -21,44 +30,104 @@ from repro.data.executor import Environment, TaskExecutor, TaskMemoryError
 
 def grid_powers(n_cores: int, s: int = 2, mult: int = 4,
                 min_power: int = 0) -> list[int]:
-    """Partition counts s^i up to mult x n_cores (paper uses 4x)."""
-    k = int(math.log(max(n_cores * mult, s), s))
+    """Partition counts s^i up to mult x n_cores (paper uses 4x).
+
+    Uses an exact integer logarithm: ``int(math.log(243, 3))`` is 4 (float
+    truncation), which silently dropped the top power of the sweep.
+    """
+    cap = max(n_cores * mult, s)
+    k = 0
+    while s ** (k + 1) <= cap:
+        k += 1
     return [s ** i for i in range(min_power, k + 1)]
 
 
 def run_cell(X: np.ndarray, y, algo: str, env: Environment, p_r: int, p_c: int,
-             *, algo_kw=None, repeats: int = 1) -> tuple[float, dict]:
-    """One grid cell: real execution, modeled makespan; inf on OOM."""
+             *, algo_kw=None, repeats: int = 1,
+             Xd: DistArray | None = None) -> tuple[float, dict]:
+    """One grid cell: real execution, modeled makespan; inf on OOM.
+
+    ``Xd`` lets the caller supply a pre-partitioned array (grid_search
+    derives them by block refinement); otherwise the source is sliced here.
+    Refined blocks can be column-strided views -- those are copied to
+    contiguous storage *before* the timed execution, so measured task
+    durations (the training labels) match ``from_array`` partitioning
+    exactly and never pay BLAS's internal strided-input copies.
+    """
     n, m = X.shape
     if p_r > n or p_c > m:
         return float("inf"), {"reason": "degenerate"}
+    if Xd is None:
+        Xd = DistArray.from_array(X, p_r, p_c)
+    elif any(not b.flags.c_contiguous for row in Xd.blocks for b in row):
+        Xd = DistArray([[np.ascontiguousarray(b) for b in row]
+                        for row in Xd.blocks], Xd.shape)
     best = float("inf")
     info = {}
     for rep in range(repeats):
         ex = TaskExecutor(env)
-        Xd = DistArray.from_array(X, p_r, p_c)
         try:
             run_algo(algo, ex, Xd, y)
         except TaskMemoryError as e:
-            return float("inf"), {"reason": str(e)}
+            return float("inf"), {"reason": str(e), "oom": True}
         best = min(best, ex.sim_time)
         info = {"tasks": ex.n_tasks, "real_s": ex.real_time}
     return best, info
 
 
+def _refined_cells(X: np.ndarray, ps, col_ps) -> dict:
+    """DistArray per feasible cell, each derived from its coarser neighbour
+    by view-splitting (the source array is sliced exactly once)."""
+    n, m = X.shape
+    cells: dict[tuple[int, int], DistArray] = {}
+    base, prev_r = None, None
+    for p_r in ps:
+        if p_r > n:
+            break
+        base = DistArray.from_array(X, p_r, 1) if base is None \
+            else base.refine(p_r // prev_r, 1)
+        prev_r = p_r
+        cur, prev_c = base, 1
+        for p_c in col_ps:
+            if p_c > m:
+                break
+            cur = cur.refine(1, p_c // prev_c)
+            prev_c = p_c
+            cells[(p_r, p_c)] = cur
+    return cells
+
+
 def grid_search(X: np.ndarray, y, algo: str, env: Environment, *, s: int = 2,
                 mult: int = 4, repeats: int = 1, log: ExecutionLog | None = None,
-                row_only: bool = False, verbose: bool = False):
-    """Sweep the (p_r, p_c) grid; returns (log, grid dict)."""
+                row_only: bool = False, verbose: bool = False,
+                prune_oom: bool = True, reuse_blocks: bool = True):
+    """Sweep the (p_r, p_c) grid; returns (log, grid dict).
+
+    ``prune_oom`` skips execution of cells coarser than a measured OOM cell
+    (recorded ``inf`` with meta ``pruned``); ``reuse_blocks`` derives each
+    cell's partitioning by refining the previous one instead of re-slicing
+    ``X``.  Both default on; disabling them reproduces the exhaustive
+    scalar path cell for cell.
+    """
     log = log or ExecutionLog()
     d = dataset_features(*X.shape)
     e = env.features()
     ps = grid_powers(env.n_workers, s=s, mult=mult)
     col_ps = [1] if row_only else ps
+    cells = _refined_cells(X, ps, col_ps) if reuse_blocks else {}
     grid = {}
-    for p_r in ps:
-        for p_c in col_ps:
-            t, info = run_cell(X, y, algo, env, p_r, p_c, repeats=repeats)
+    oom_cells: list[tuple[int, int]] = []
+    for p_r in sorted(ps, reverse=True):
+        for p_c in sorted(col_ps, reverse=True):
+            if prune_oom and any(qr >= p_r and qc >= p_c
+                                 for qr, qc in oom_cells):
+                t, info = float("inf"), {"reason": "coarser than an OOM cell",
+                                         "pruned": True}
+            else:
+                t, info = run_cell(X, y, algo, env, p_r, p_c, repeats=repeats,
+                                   Xd=cells.get((p_r, p_c)))
+                if info.get("oom"):
+                    oom_cells.append((p_r, p_c))
             grid[(p_r, p_c)] = t
             log.add(ExecutionRecord(d, algo, e, p_r, p_c, t, info))
             if verbose:

@@ -26,28 +26,44 @@ VMEM_BUDGET = 16 * 2**20          # ~16 MiB usable VMEM per core (v5e)
 MXU = 128                         # systolic array edge
 
 
-def matmul_tile_time(m: int, k: int, n: int, bm: int, bn: int, bk: int,
-                     *, hw: Hardware = V5E, dtype_bytes: int = 2) -> float:
-    """Modeled kernel time: max(MXU compute, HBM traffic) + launch overhead.
+def matmul_tile_times(m: int, k: int, n: int, bm, bn, bk,
+                      *, hw: Hardware = V5E,
+                      dtype_bytes: int = 2) -> np.ndarray:
+    """Modeled kernel time, broadcast over whole tile grids at once.
 
-    Tiling determines refetch: A is re-read n/bn times, B m/bm times --
-    the classic blocking trade-off the paper's "block size" controls.
+    ``bm``/``bn``/``bk`` are any mutually-broadcastable integer arrays (or
+    scalars); one numpy evaluation scores every tile candidate:
+    max(MXU compute, HBM traffic) + launch overhead.  Tiling determines
+    refetch: A is re-read n/bn times, B m/bm times -- the classic blocking
+    trade-off the paper's "block size" controls.  Infeasible tiles
+    (overhanging the problem, or VMEM working set over budget -- the
+    paper's OOM) score ``inf``.
     """
-    if bm > m or bn > n or bk > k:
-        return float("inf")
-    if mm_vmem(bm, bn, bk, dtype_bytes) > VMEM_BUDGET:
-        return float("inf")                      # VMEM OOM == paper's inf
-    gm, gn, gk = math.ceil(m / bm), math.ceil(n / bn), math.ceil(k / bk)
+    bm, bn, bk = np.broadcast_arrays(np.asarray(bm, np.float64),
+                                     np.asarray(bn, np.float64),
+                                     np.asarray(bk, np.float64))
+    bad = (bm > m) | (bn > n) | (bk > k) \
+        | (mm_vmem(bm, bn, bk, dtype_bytes) > VMEM_BUDGET)
+    gm, gn, gk = np.ceil(m / bm), np.ceil(n / bn), np.ceil(k / bk)
     flops = 2.0 * (gm * bm) * (gn * bn) * (gk * bk)   # padded compute
     # MXU efficiency: partial tiles and sub-128 dims waste systolic slots
-    eff = min(bm, MXU) / MXU * min(bn, MXU) / MXU
-    eff = min(1.0, eff) if (bm % MXU == 0 and bn % MXU == 0) else 0.6 * eff
-    compute = flops / (hw.peak_flops * max(eff, 1e-3))
+    eff = np.minimum(bm, MXU) / MXU * np.minimum(bn, MXU) / MXU
+    eff = np.where((bm % MXU == 0) & (bn % MXU == 0),
+                   np.minimum(1.0, eff), 0.6 * eff)
+    compute = flops / (hw.peak_flops * np.maximum(eff, 1e-3))
     traffic = (gn * m * k + gm * k * n) * dtype_bytes \
         + m * n * dtype_bytes                      # A refetched gn x, B gm x
     memory = traffic / hw.hbm_bw
     launch = gm * gn * gk * 1e-6                   # per-grid-step overhead
-    return max(compute, memory) + launch
+    t = np.maximum(compute, memory) + launch
+    return np.where(bad, np.inf, t)
+
+
+def matmul_tile_time(m: int, k: int, n: int, bm: int, bn: int, bk: int,
+                     *, hw: Hardware = V5E, dtype_bytes: int = 2) -> float:
+    """Scalar view of ``matmul_tile_times`` (kept for single-tile callers)."""
+    return float(matmul_tile_times(m, k, n, bm, bn, bk, hw=hw,
+                                   dtype_bytes=dtype_bytes))
 
 
 def shape_features(m: int, k: int, n: int) -> dict:
@@ -56,19 +72,36 @@ def shape_features(m: int, k: int, n: int) -> dict:
             "log_inner": math.log2(k), "size_mb": m * k * 2 / 2**20}
 
 
+BM_SWEEP = (64, 128, 256, 512)
+BN_SWEEP = (64, 128, 256, 512)
+BK_SWEEP = (128, 256, 512)
+
+
 def grid_search_matmul(m: int, k: int, n: int,
                        log: ExecutionLog | None = None):
-    """Sweep power-of-2 tiles; record modeled times (inf on VMEM OOM)."""
+    """Sweep power-of-2 tiles; record modeled times (inf on VMEM OOM).
+
+    The whole (bm, bn, bk) cube is scored in a single broadcast evaluation
+    of the cost model, and -- unlike the old fixed ``bk`` heuristic -- the
+    reduction dimension is swept too.  The grid stays keyed by (bm, bn)
+    (the tuner's two predicted exponents) with the best time over bk; the
+    winning bk lands in the record meta.
+    """
     log = log or ExecutionLog()
-    grid = {}
     d = shape_features(m, k, n)
-    for bm in (64, 128, 256, 512):
-        for bn in (64, 128, 256, 512):
-            bk = min(512, max(128, k))            # bk folded: fixed heuristic
-            t = matmul_tile_time(m, k, n, bm, bn, min(bk, k))
+    bms = np.array(BM_SWEEP)[:, None, None]
+    bns = np.array(BN_SWEEP)[None, :, None]
+    bks = np.array(sorted({min(b, k) for b in BK_SWEEP}))[None, None, :]
+    times = matmul_tile_times(m, k, n, bms, bns, bks)     # (bm, bn, bk)
+    best_k = np.argmin(times, axis=2)
+    grid = {}
+    for i, bm in enumerate(BM_SWEEP):
+        for j, bn in enumerate(BN_SWEEP):
+            t = float(times[i, j, best_k[i, j]])
             grid[(bm, bn)] = t
             log.add(ExecutionRecord(d, "matmul_tile", {"vmem_mb": 16},
-                                    bm, bn, t))
+                                    bm, bn, t,
+                                    {"bk": int(bks[0, 0, best_k[i, j]])}))
     return log, grid
 
 

@@ -42,6 +42,40 @@ class DistArray:
     def to_array(self) -> np.ndarray:
         return np.block(self.blocks)
 
+    def refine(self, factor_r: int = 1, factor_c: int = 1) -> "DistArray":
+        """Derive a ``(p_r*factor_r) x (p_c*factor_c)`` grid by splitting the
+        existing blocks into views -- no re-slicing of the source array and
+        no data copies.
+
+        The new edges follow the same global ``linspace`` convention as
+        ``from_array``, so a refined array is block-for-block identical to
+        one partitioned from scratch.  If a finer edge set does not nest
+        inside the current one (possible only for non-uniform factor/shape
+        combinations), falls back to re-partitioning the assembled array.
+        """
+        if factor_r == 1 and factor_c == 1:
+            return self
+        n, m = self.shape
+        new_pr, new_pc = self.p_r * factor_r, self.p_c * factor_c
+        assert 1 <= new_pr <= n and 1 <= new_pc <= m, (self.shape, new_pr,
+                                                       new_pc)
+        row_edges = np.linspace(0, n, new_pr + 1).astype(int)
+        col_edges = np.linspace(0, m, new_pc + 1).astype(int)
+        # owning coarse block of each fine block's start edge
+        ri = np.searchsorted(self.row_edges, row_edges[:-1], "right") - 1
+        cj = np.searchsorted(self.col_edges, col_edges[:-1], "right") - 1
+        nested = (np.all(self.row_edges[ri + 1] >= row_edges[1:])
+                  and np.all(self.col_edges[cj + 1] >= col_edges[1:]))
+        if not nested:                     # fine block straddles a coarse edge
+            return DistArray.from_array(self.to_array(), new_pr, new_pc)
+        blocks = [[self.blocks[ri[i]][cj[j]][
+            row_edges[i] - self.row_edges[ri[i]]:
+            row_edges[i + 1] - self.row_edges[ri[i]],
+            col_edges[j] - self.col_edges[cj[j]]:
+            col_edges[j + 1] - self.col_edges[cj[j]]]
+            for j in range(new_pc)] for i in range(new_pr)]
+        return DistArray(blocks, self.shape)
+
     # ------------------------------------------------------------ helpers
     @property
     def block_shape(self):

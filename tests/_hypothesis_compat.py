@@ -1,0 +1,45 @@
+"""Optional-hypothesis shim.
+
+The container does not ship ``hypothesis``; importing it at module scope
+used to abort collection of six test modules.  Import ``given``,
+``settings`` and ``st`` from here instead: with hypothesis installed the
+real objects pass through untouched, without it property tests collect as
+individually-skipped tests (and the example-based tests in the same module
+keep running).
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st   # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:                                            # pragma: no cover
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+
+    class _AnyStrategy:
+        """Absorbs any strategy construction (`st.integers(0, 9).map(f)`)."""
+
+        def __call__(self, *args, **kwargs):
+            return self
+
+        def __getattr__(self, name):
+            return self
+
+    st = _AnyStrategy()
+
+    def given(*args, **kwargs):
+        def deco(fn):
+            # Zero-arg replacement: hypothesis-injected parameters must not
+            # be visible to pytest's fixture resolver.
+            def _skipped():
+                pytest.skip("hypothesis not installed; property test skipped")
+            _skipped.__name__ = fn.__name__
+            _skipped.__doc__ = fn.__doc__
+            return _skipped
+        return deco
+
+    def settings(*args, **kwargs):
+        if args and callable(args[0]):
+            return args[0]
+        return lambda fn: fn

@@ -1,7 +1,7 @@
 """DistArray invariants (hypothesis): partition/reassemble identity for any
 valid (p_r, p_c), row splits, stitching."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.data.distarray import DistArray
 from repro.data.executor import Environment, TaskExecutor

@@ -1,7 +1,7 @@
 """Fault-tolerance policies: straggler detection, retries, elastic mesh
 planning (hypothesis invariants)."""
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.runtime.elastic import adapt_config, plan_mesh
 from repro.runtime.fault import (RetryPolicy, StragglerConfig,

@@ -1,0 +1,193 @@
+"""Vectorized-vs-scalar equivalence for the estimation hot paths.
+
+The perf overhaul (flat-array trees, batched prediction, pruned/reusing
+grid search, broadcast tile cost model) must be behaviour-preserving:
+bit-identical predictions against the retained scalar walker, identical
+grid-search argmin labels with pruning on, block-identical refined
+partitionings, and a batched serving path that matches the looped one.
+"""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.estimator import BlockSizeEstimator, EstimatorService
+from repro.core.gridsearch import grid_powers, grid_search, grid_stats
+from repro.core.kerneltune import (BK_SWEEP, grid_search_matmul,
+                                   matmul_tile_time, matmul_tile_times)
+from repro.core.log import ExecutionLog, ExecutionRecord
+from repro.core.trees import (DecisionTreeClassifier, DecisionTreeRegressor,
+                              RandomForestClassifier)
+from repro.data.datasets import gaussian_blobs
+from repro.data.distarray import DistArray
+from repro.data.executor import Environment
+
+
+def _random_problem(seed, n=400, m=6, k=3):
+    rng = np.random.default_rng(seed)
+    X = rng.normal(size=(n, m))
+    y = (X @ rng.normal(size=m) > 0).astype(int) + (X[:, 1] > 0.7) * (k - 2)
+    return X, y, rng.normal(size=(n, m))
+
+
+# ------------------------------------------------------------ trees
+@pytest.mark.parametrize("seed", range(5))
+def test_tree_vectorized_walk_bit_identical(seed):
+    X, y, Xq = _random_problem(seed)
+    t = DecisionTreeClassifier(max_depth=3 + 2 * seed,
+                               random_state=seed).fit(X, y)
+    leaves = t._walk_scalar(Xq)
+    assert np.array_equal(t._walk(Xq), leaves)
+    assert np.array_equal(t.predict_proba(Xq), t.leaf_value_[leaves])
+    assert np.array_equal(
+        t.predict(Xq), t.classes_[np.argmax(t.leaf_value_[leaves], axis=1)])
+
+
+@pytest.mark.parametrize("seed", range(3))
+def test_regressor_vectorized_walk_bit_identical(seed):
+    X, _, Xq = _random_problem(seed)
+    rng = np.random.default_rng(seed)
+    r = DecisionTreeRegressor(max_depth=8, random_state=seed).fit(
+        X, X @ rng.normal(size=X.shape[1]))
+    assert np.array_equal(r.predict(Xq), r.leaf_value_[r._walk_scalar(Xq)])
+
+
+@pytest.mark.parametrize("seed", range(3))
+def test_forest_batched_traversal_bit_identical(seed):
+    X, y, Xq = _random_problem(seed)
+    f = RandomForestClassifier(n_estimators=7, max_depth=6,
+                               random_state=seed).fit(X, y)
+    assert np.array_equal(f.predict_proba(Xq), f.predict_proba_scalar(Xq))
+
+
+def test_flat_arrays_mirror_node_list():
+    X, y, _ = _random_problem(0)
+    t = DecisionTreeClassifier(max_depth=6).fit(X, y)
+    for i, nd in enumerate(t.nodes):
+        assert (t.feature_[i], t.left_[i], t.right_[i]) \
+            == (nd.feature, nd.left, nd.right)
+        assert t.threshold_[i] == nd.threshold
+        np.testing.assert_array_equal(t.leaf_value_[i], nd.value)
+
+
+def test_walk_empty_and_stump():
+    X, y, _ = _random_problem(1)
+    t = DecisionTreeClassifier(max_depth=6).fit(X, y)
+    assert t.predict_proba(np.empty((0, X.shape[1]))).shape[0] == 0
+    stump = DecisionTreeClassifier(max_depth=0).fit(X, y)   # single leaf
+    assert np.array_equal(stump._walk(X), np.zeros(len(X), int))
+
+
+# ------------------------------------------------------------ grid search
+def test_grid_powers_exact_integer_log():
+    assert grid_powers(64, s=2, mult=4) == [2 ** i for i in range(9)]
+    # 243 = 3^5: float log(243, 3) truncates to 4 and drops the top power
+    assert grid_powers(243, s=3, mult=1) == [1, 3, 9, 27, 81, 243]
+    assert grid_powers(125, s=5, mult=1) == [1, 5, 25, 125]
+
+
+@pytest.mark.parametrize("n,m,p_r,p_c,f_r,f_c", [
+    (128, 16, 2, 2, 2, 2), (100, 17, 1, 1, 4, 2),
+    (57, 9, 3, 1, 3, 3), (64, 64, 4, 4, 2, 4)])
+def test_refine_matches_from_array(n, m, p_r, p_c, f_r, f_c):
+    x = np.random.default_rng(0).normal(size=(n, m))
+    fine = DistArray.from_array(x, p_r, p_c).refine(f_r, f_c)
+    ref = DistArray.from_array(x, p_r * f_r, p_c * f_c)
+    assert (fine.p_r, fine.p_c) == (ref.p_r, ref.p_c)
+    for i in range(fine.p_r):
+        for j in range(fine.p_c):
+            np.testing.assert_array_equal(fine.blocks[i][j], ref.blocks[i][j])
+    np.testing.assert_array_equal(fine.to_array(), x)
+
+
+def test_refine_is_views_not_copies():
+    x = np.arange(64.0).reshape(8, 8)
+    d = DistArray.from_array(x, 2, 1)
+    fine = d.refine(2, 2)
+    assert all(b.base is not None for row in fine.blocks for b in row)
+
+
+def test_pruned_grid_matches_exhaustive():
+    """Pruning + block reuse must reproduce the exhaustive scalar sweep:
+    same cells, same finite set, same argmin; pruned cells inf, unexecuted."""
+    X, y = gaussian_blobs(512, 16, seed=0)
+    env = Environment(n_workers=4, mem_limit_mb=0.08)
+    log_base, g_base = grid_search(X, y, "kmeans", env, mult=1,
+                                   prune_oom=False, reuse_blocks=False)
+    log_fast, g_fast = grid_search(X, y, "kmeans", env, mult=1,
+                                   prune_oom=True, reuse_blocks=True)
+    assert set(g_base) == set(g_fast)
+    assert {k for k, v in g_base.items() if math.isfinite(v)} \
+        == {k for k, v in g_fast.items() if math.isfinite(v)}
+    assert grid_stats(g_base)["best_part"] == grid_stats(g_fast)["best_part"]
+    pruned = [r for r in log_fast.records if r.meta.get("pruned")]
+    assert pruned, "config must trigger pruning"
+    assert all(math.isinf(r.time_s) and "tasks" not in r.meta for r in pruned)
+
+
+# ------------------------------------------------------------ kernel tuner
+def test_tile_cost_broadcast_matches_scalar():
+    rng = np.random.default_rng(2)
+    bms = 2 ** rng.integers(4, 12, size=(5, 1, 1))
+    bns = 2 ** rng.integers(4, 12, size=(1, 5, 1))
+    bks = 2 ** rng.integers(4, 12, size=(1, 1, 5))
+    times = matmul_tile_times(2048, 1024, 4096, bms, bns, bks)
+    for i in range(5):
+        for j in range(5):
+            for l in range(5):
+                assert times[i, j, l] == matmul_tile_time(
+                    2048, 1024, 4096,
+                    int(bms[i, 0, 0]), int(bns[0, j, 0]), int(bks[0, 0, l]))
+
+
+def test_grid_search_matmul_sweeps_bk():
+    log, grid = grid_search_matmul(4096, 4096, 4096)
+    assert {r.meta["bk"] for r in log.records} <= set(BK_SWEEP)
+    # the swept grid's best time can only improve on any fixed-bk slice
+    for bk in BK_SWEEP:
+        for (bm, bn), t in grid.items():
+            assert t <= matmul_tile_time(4096, 4096, 4096, bm, bn, bk) + 1e-12
+
+
+# ------------------------------------------------------------ serving
+def _fit_estimator():
+    log = ExecutionLog()
+    rng = np.random.default_rng(0)
+    for rows in (256, 512, 1024, 2048, 4096):
+        for algo in ("kmeans", "rf"):
+            best_pr = max(1, rows // 512)
+            best_pc = 2 if algo == "kmeans" else 1
+            for pr in (1, 2, 4, 8):
+                for pc in (1, 2, 4):
+                    t = abs(np.log2(pr) - np.log2(best_pr)) \
+                        + abs(np.log2(pc) - np.log2(best_pc)) \
+                        + 0.01 * rng.random()
+                    log.add(ExecutionRecord(
+                        {"rows": rows, "cols": 64, "log_rows": np.log2(rows)},
+                        algo, {"n_workers": 4}, pr, pc, t))
+    return BlockSizeEstimator("tree").fit(log)
+
+
+def test_batch_predict_matches_looped():
+    est = _fit_estimator()
+    rng = np.random.default_rng(1)
+    qs = [(int(2 ** rng.integers(8, 13)), 64,
+           "kmeans" if rng.random() < 0.5 else "rf", {"n_workers": 4})
+          for _ in range(100)]
+    assert est.predict_partitions_batch(qs) \
+        == [est.predict_partitions(*q) for q in qs]
+    assert est.predict_partitions_batch([]) == []
+
+
+def test_service_memo_consistent_and_bounded():
+    est = _fit_estimator()
+    svc = EstimatorService(est, maxsize=8)
+    qs = [(512 * (i % 4 + 1), 64, "kmeans", {"n_workers": 4})
+          for i in range(40)]
+    first = svc.predict_partitions_batch(qs)
+    again = svc.predict_partitions_batch(qs)
+    assert first == again
+    assert len(svc._memo) <= 8
+    assert svc.hits > 0 and svc.hit_rate > 0.5
+    # power-of-two shapes hit the exact-canonical bucket: same as unmemoized
+    assert first == est.predict_partitions_batch(qs)

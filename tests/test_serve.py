@@ -1,6 +1,8 @@
 """Decode-vs-full-forward equivalence for every architecture -- the cache
 machinery (full, ring/windowed, MLA latent, SSM state, meta-token prefix)
 must reproduce full-sequence logits token-for-token."""
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -10,13 +12,22 @@ from repro.configs import ARCH_IDS, reduced_config
 from repro.models import transformer as tf
 from repro.models.layers import init_param_tree
 
-# capacity-MoE drop boundaries differ between T-1 and T token counts
-TOL = {"mixtral-8x7b": 5e-3, "deepseek-v3-671b": 5e-3}
+# Capacity-MoE drops are batch-size dependent: a token dropped from an
+# over-capacity expert in the T-token forward is never dropped in the
+# 1-token decode step, so token-for-token equality is unattainable with
+# drops on (the gap is a whole expert contribution, not an epsilon).  The
+# cache machinery under test is orthogonal to drops, so these archs run
+# with a capacity factor that admits every routed token.
+NO_DROP = {"mixtral-8x7b", "deepseek-v3-671b"}
 
 
 @pytest.mark.parametrize("arch", ARCH_IDS)
 def test_decode_matches_forward(arch, T=40, B=2):
     cfg = reduced_config(arch)
+    if arch in NO_DROP:
+        cfg = cfg.replace(moe=dataclasses.replace(
+            cfg.moe,
+            capacity_factor=float(cfg.moe.n_experts) / cfg.moe.top_k))
     params = init_param_tree(tf.param_specs(cfg), jax.random.PRNGKey(0))
     rng = np.random.default_rng(1)
     shape = (B, cfg.n_codebooks, T) if cfg.n_codebooks > 1 else (B, T)
@@ -31,7 +42,7 @@ def test_decode_matches_forward(arch, T=40, B=2):
                           T + cfg.meta_tokens + cfg.image_tokens + 4)
     logits_dec, cache2 = tf.decode_step(cfg, params, cache,
                                         tokens[..., T - 1:T])
-    tol = TOL.get(arch, 2e-3)
+    tol = 2e-3
     err = float(jnp.max(jnp.abs(logits_full[:, -1] - logits_dec[:, 0])))
     assert err < tol, (arch, err)
     err2 = float(jnp.max(jnp.abs(logits_full[:, -2] - last[:, 0])))

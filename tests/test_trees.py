@@ -1,7 +1,7 @@
 """From-scratch CART / forest / chained-classifier correctness."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.chained import (ChainedClassifier, IndependentClassifier,
                                 RegressionBaseline)
