@@ -9,7 +9,7 @@ import argparse
 import time
 
 SUITES = ("table2", "table3", "table4", "table6", "ablation", "meshtune",
-          "kernel", "roofline", "hotpath")
+          "kernel", "roofline", "hotpath", "taskgraph")
 
 
 def main(argv=None) -> None:
@@ -50,6 +50,9 @@ def main(argv=None) -> None:
     if "hotpath" in todo:
         from benchmarks import hotpath_bench
         hotpath_bench.run(verbose=verbose)
+    if "taskgraph" in todo:
+        from benchmarks import taskgraph_bench
+        taskgraph_bench.run(verbose=verbose)
     print(f"# benchmarks done in {time.time()-t0:.1f}s")
 
 

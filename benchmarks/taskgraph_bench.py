@@ -1,0 +1,159 @@
+"""Task-graph runtime benchmarks: DAG vs per-phase barrier scheduling, and
+grid search with vs without cross-cell measurement reuse.
+
+Writes ``BENCH_taskgraph.json`` at the repo root:
+
+  * ``schedule`` -- for fine-partitioned kmeans/pca/gmm workloads, the
+    modeled makespan under the DAG list schedule vs the per-phase barrier
+    schedule the eager executor produced, computed from the SAME measured
+    task durations (one run, two schedules -- no timing-noise asymmetry);
+  * ``gridsearch_reuse`` -- wall time of a full kmeans sweep exhaustive vs
+    with ``reuse_measurements=True`` (each unique task body/signature
+    executed once, elsewhere replayed through the scheduler), with the
+    argmin label checked identical.
+
+Prints ``name,us_per_call,derived`` CSV rows (harness convention).
+"""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+from repro.algorithms import run as run_algo
+from repro.core.gridsearch import grid_search, grid_stats
+from repro.data.datasets import gaussian_blobs
+from repro.data.distarray import DistArray
+from repro.data.executor import Environment, TaskExecutor
+
+from benchmarks.common import csv_row
+
+OUT = Path(__file__).resolve().parent.parent / "BENCH_taskgraph.json"
+
+# fine partitionings on an 8-worker node: many small tasks, deep reduce
+# trees -- the regime where per-phase barriers over-serialize the graph.
+# Dispatch overhead is identical under both schedules (a serial master-side
+# sum), so the comparison environment uses a fast 10us dispatch to keep the
+# schedule difference visible rather than drowned in a common constant.
+SCHED_CASES = [
+    ("kmeans", 16384, 64, 64, 4),
+    ("kmeans", 16384, 64, 128, 2),
+    ("gmm", 8192, 32, 64, 2),
+    ("pca", 8192, 128, 64, 8),
+]
+SCHED_ENV = Environment(name="node8", n_workers=8, dispatch_overhead_s=1e-5)
+
+
+def bench_schedules(results: dict, checks: list, verbose=True):
+    rows = []
+    for algo, n, m, p_r, p_c in SCHED_CASES:
+        X, y = gaussian_blobs(n, m, seed=7)
+        ex = TaskExecutor(SCHED_ENV)
+        run_algo(algo, ex, DistArray.from_array(X, p_r, p_c), y)
+        s = ex.stats()
+        # sim_time = min(dag, barrier) + overhead enforces the never-worse
+        # guarantee by construction; this check documents it holding in the
+        # artifact.  The raw list schedule is recorded too -- greedy list
+        # scheduling is NOT dominant (pca 64x8 prices a fraction over the
+        # barrier), which is exactly why the runtime takes the min.  A
+        # genuine scheduler regression shows up in the >=10% improvement
+        # check below collapsing, not here.
+        if s["sim_time"] > s["barrier_time"] + 1e-12:
+            checks.append(f"{algo} {p_r}x{p_c}: sim_time exceeds the "
+                          "barrier schedule (never-worse guarantee broken)")
+        impr = 1.0 - s["sim_time"] / s["barrier_time"]
+        rows.append({
+            "algo": algo, "shape": [n, m], "partition": [p_r, p_c],
+            "n_tasks": s["n_tasks"], "epochs": s["epochs"],
+            "barrier_makespan_s": s["barrier_time"],
+            "dag_raw_makespan_s": s["dag_time"],
+            "dag_makespan_s": s["sim_time"],
+            "improvement": impr,
+        })
+        csv_row(f"taskgraph/sched_{algo}_{p_r}x{p_c}",
+                s["sim_time"] * 1e6,
+                f"barrier={s['barrier_time']*1e6:.0f}us;impr={impr:.0%}")
+    best = max(r["improvement"] for r in rows)
+    if best < 0.10:
+        checks.append(f"expected >=10% improvement on a fine-partitioned "
+                      f"case, best was {best:.1%}")
+    results["schedule"] = rows
+    results["schedule_best_improvement"] = best
+
+
+# The reuse and exhaustive sweeps time their cells in separate runs, so
+# the argmin-identity check needs a grid whose winner is structurally
+# separated, not decided by measurement jitter on near-tied cells.  These
+# row-only sweeps under a per-task memory budget have exactly that shape:
+# coarse cells OOM, and among the survivors the dispatch-overhead model (a
+# deterministic per-task cost) separates consecutive cells ~2x, so the
+# argmin is the coarsest memory-feasible partitioning -- the paper's
+# overhead-vs-memory tension -- by an ~80-90% margin.  best-of-3 per task
+# body additionally damps duration noise identically in both paths.
+REUSE_CASES = [("kmeans", 32768, 16, 4.0), ("gmm", 8192, 32, 2.5)]
+
+
+def bench_gridsearch_reuse(results: dict, checks: list, verbose=True):
+    rows = []
+    for algo, n, m, mem_limit in REUSE_CASES:
+        X, y = gaussian_blobs(n, m, seed=0)
+        env = Environment(name="node8", n_workers=8,
+                          dispatch_overhead_s=1e-3, mem_limit_mb=mem_limit)
+
+        t0 = time.perf_counter()
+        log_ex, g_ex = grid_search(X, y, algo, env, mult=2, row_only=True,
+                                   task_repeats=3)
+        t_ex = time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        log_re, g_re = grid_search(X, y, algo, env, mult=2, row_only=True,
+                                   task_repeats=3, reuse_measurements=True)
+        t_re = time.perf_counter() - t0
+
+        st_ex, st_re = grid_stats(g_ex), grid_stats(g_re)
+        if st_ex["best_part"] != st_re["best_part"]:
+            checks.append(f"{algo}: reuse argmin {st_re['best_part']} != "
+                          f"exhaustive argmin {st_ex['best_part']}")
+        executed = sum(r.meta.get("tasks", 0) - r.meta.get("replayed", 0)
+                       for r in log_re.records)
+        replayed = sum(r.meta.get("replayed", 0) for r in log_re.records)
+        speedup = t_ex / t_re
+        if speedup < 3.0:
+            checks.append(f"{algo}: measurement reuse only {speedup:.2f}x "
+                          "(expected >=3x)")
+        rows.append({
+            "algo": algo, "shape": [n, m], "cells": len(g_re),
+            "exhaustive_wall_s": t_ex, "reuse_wall_s": t_re,
+            "speedup_x": speedup,
+            "argmin_exhaustive": list(st_ex["best_part"]),
+            "argmin_reuse": list(st_re["best_part"]),
+            "tasks_executed": executed, "tasks_replayed": replayed,
+        })
+        csv_row(f"taskgraph/grid_exhaustive_{algo}", t_ex * 1e6,
+                f"cells={len(g_ex)}")
+        csv_row(f"taskgraph/grid_reuse_{algo}", t_re * 1e6,
+                f"speedup={speedup:.1f}x;replayed={replayed}")
+    results["gridsearch_reuse"] = rows
+
+
+def run(verbose=True):
+    """Measure, then verify: the JSON artifact is always written (all
+    measurements are recorded, plus the acceptance-check verdicts) before
+    any failed check raises, so a noisy host still yields inspectable
+    numbers."""
+    results: dict = {}
+    checks: list[str] = []
+    bench_schedules(results, checks, verbose)
+    bench_gridsearch_reuse(results, checks, verbose)
+    results["checks_failed"] = checks
+    OUT.write_text(json.dumps(results, indent=2) + "\n")
+    if verbose:
+        print(f"# wrote {OUT}")
+    if checks:
+        raise AssertionError("taskgraph bench checks failed: "
+                             + "; ".join(checks))
+    return results
+
+
+if __name__ == "__main__":
+    run()

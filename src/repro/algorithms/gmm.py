@@ -1,13 +1,15 @@
 """Data-parallel diagonal-covariance Gaussian Mixture Model (EM) -- dislib
-workload.  E-step log-densities accumulate per column block and reduce;
-M-step weighted sufficient statistics reduce over row blocks.
+workload.  E-step log-densities accumulate per column block and tree-reduce
+per row block; responsibilities chain off each row's reduction future, and
+M-step weighted sufficient statistics reduce over row blocks -- all inside
+one DAG epoch per EM iteration, so row blocks overlap freely.
 """
 from __future__ import annotations
 
 import numpy as np
 
 from repro.data.distarray import DistArray
-from repro.data.executor import TaskExecutor
+from repro.data.taskgraph import TaskGraph
 
 _EPS = 1e-6
 
@@ -39,7 +41,7 @@ def _merge3(a, b):
     return a[0] + b[0], a[1] + b[1], a[2] + b[2]
 
 
-def fit(ex: TaskExecutor, X: DistArray, *, k: int = 4, iters: int = 5,
+def fit(ex: TaskGraph, X: DistArray, *, k: int = 4, iters: int = 5,
         seed: int = 0):
     from repro.algorithms.kmeans import _gather_rows
     rng = np.random.default_rng(seed)
@@ -49,32 +51,33 @@ def fit(ex: TaskExecutor, X: DistArray, *, k: int = 4, iters: int = 5,
     pi = np.full(k, 1.0 / k)
     ce = X.col_edges
 
-    ll_total = -np.inf
     for _ in range(iters):
         mu_b = [mu[:, ce[j]:ce[j + 1]] for j in range(X.p_c)]
         var_b = [var[:, ce[j]:ce[j + 1]] for j in range(X.p_c)]
-        items = [(X.blocks[i][j], mu_b[j], var_b[j])
+        parts = [ex.submit(_partial_logpdf, X.blocks[i][j], mu_b[j], var_b[j],
+                           name="gmm_logpdf")
                  for i in range(X.p_r) for j in range(X.p_c)]
-        parts = ex.map(lambda xb, mb, vb: _partial_logpdf(xb, mb, vb), items,
-                       name="gmm_logpdf", unpack=True)
+        log_pi = np.log(pi)
         resp = []
         for i in range(X.p_r):
             row = parts[i * X.p_c:(i + 1) * X.p_c]
-            ll = row[0] if len(row) == 1 else ex.reduce(_add, row,
-                                                        name="gmm_red")
-            resp.append(ex.map(lambda L, lp=np.log(pi): _resp(L, lp), [ll],
-                               name="gmm_resp")[0])
-        items = [(X.blocks[i][j], resp[i])
+            ll = row[0] if len(row) == 1 else ex.reduce_tree(
+                _add, row, name="gmm_red")
+            resp.append(ex.submit(_resp, ll, log_pi, name="gmm_resp"))
+        stats = [ex.submit(_mstats, X.blocks[i][j], resp[i],
+                           name="gmm_mstats")
                  for i in range(X.p_r) for j in range(X.p_c)]
-        stats = ex.map(lambda xb, r: _mstats(xb, r), items, name="gmm_mstats",
-                       unpack=True)
+        sred = []
+        for j in range(X.p_c):
+            col = [stats[i * X.p_c + j] for i in range(X.p_r)]
+            sred.append(col[0] if len(col) == 1 else ex.reduce_tree(
+                _merge3, col, name="gmm_sred"))
+        # one barrier per EM iteration: the M-step update is master-side
+        vals = ex.collect(*sred)
         nk = None
         mu_new = np.zeros_like(mu)
         ex2 = np.zeros_like(var)
-        for j in range(X.p_c):
-            col = [stats[i * X.p_c + j] for i in range(X.p_r)]
-            sx, sxx, cnt = col[0] if len(col) == 1 else ex.reduce(
-                _merge3, col, name="gmm_sred")
+        for j, (sx, sxx, cnt) in enumerate(vals):
             mu_new[:, ce[j]:ce[j + 1]] = sx / np.maximum(cnt[:, None], _EPS)
             ex2[:, ce[j]:ce[j + 1]] = sxx / np.maximum(cnt[:, None], _EPS)
             nk = cnt

@@ -1,17 +1,19 @@
 """Data-parallel K-means (Lloyd) over a DistArray -- dislib workload #1.
 
-Every phase is a set of per-block tasks: partial squared distances per
-(row-block, col-block), a tree-reduce over column blocks, per-row-block
-assignment, then per-block center partial sums reduced over row blocks.
-Both p_r and p_c change the task graph, which is exactly why the paper
-tunes them.
+Every step is a set of per-block tasks submitted as futures: partial
+squared distances per (row-block, col-block), a tree-reduce over column
+blocks, per-row-block assignment, then per-block center partial sums
+reduced over row blocks.  One ``collect`` per Lloyd iteration lets the
+DAG scheduler overlap independent row blocks (one row block's reduction
+runs while another's distances are still being computed).  Both p_r and
+p_c change the task graph, which is exactly why the paper tunes them.
 """
 from __future__ import annotations
 
 import numpy as np
 
 from repro.data.distarray import DistArray
-from repro.data.executor import TaskExecutor
+from repro.data.taskgraph import TaskGraph
 
 
 def _partial_dist(xb: np.ndarray, cb: np.ndarray) -> np.ndarray:
@@ -30,7 +32,8 @@ def _assign(d: np.ndarray):
     return lab, float(np.sum(d[np.arange(len(d)), lab]))
 
 
-def _center_partial(xb: np.ndarray, lab: np.ndarray, k: int):
+def _center_partial(xb: np.ndarray, assign, k: int):
+    lab = assign[0]                        # (labels, objective) from _assign
     sums = np.zeros((k, xb.shape[1]))
     np.add.at(sums, lab, xb)
     counts = np.bincount(lab, minlength=k).astype(np.float64)
@@ -63,7 +66,7 @@ def _kmeanspp(sample: np.ndarray, k: int, rng) -> np.ndarray:
     return np.stack(centers)
 
 
-def fit(ex: TaskExecutor, X: DistArray, *, k: int = 8, iters: int = 5,
+def fit(ex: TaskGraph, X: DistArray, *, k: int = 8, iters: int = 5,
         seed: int = 0):
     rng = np.random.default_rng(seed)
     n, m = X.shape
@@ -74,35 +77,37 @@ def fit(ex: TaskExecutor, X: DistArray, *, k: int = 8, iters: int = 5,
     centers = _kmeanspp(_gather_rows(X, np.sort(samp_idx)), k, rng)
     ce = X.col_edges
 
-    inertia = np.inf
+    labels, inertia = [], np.inf
     for _ in range(iters):
         cblocks = [centers[:, ce[j]:ce[j + 1]] for j in range(X.p_c)]
-        # phase 1: partial distances for every (i, j) block
-        items = [(X.blocks[i][j], cblocks[j])
-                 for i in range(X.p_r) for j in range(X.p_c)]
-        partials = ex.map(_partial_dist, items, name="kmeans_dist",
-                          unpack=True)
-        # reduce over column blocks per row block
-        labels, inertia = [], 0.0
+        # partial distances for every (i, j) block
+        dist = [ex.submit(_partial_dist, X.blocks[i][j], cblocks[j],
+                          name="kmeans_dist")
+                for i in range(X.p_r) for j in range(X.p_c)]
+        # per row block: reduce over column blocks, then assign; new
+        # center partial sums chain off the assignment future
+        assigns = []
         for i in range(X.p_r):
-            row = partials[i * X.p_c:(i + 1) * X.p_c]
-            d = row[0] if len(row) == 1 else ex.reduce(_add, row,
-                                                       name="kmeans_red")
-            lab, obj = ex.map(_assign, [d], name="kmeans_assign")[0]
-            labels.append(lab)
-            inertia += obj
-        # phase 2: new centers
-        items = [(X.blocks[i][j], labels[i], k)
-                 for i in range(X.p_r) for j in range(X.p_c)]
-        cps = ex.map(lambda xb, lab, kk: _center_partial(xb, lab, kk), items,
-                     name="kmeans_cp", unpack=True)
-        new_cols = []
+            row = dist[i * X.p_c:(i + 1) * X.p_c]
+            d = row[0] if len(row) == 1 else ex.reduce_tree(
+                _add, row, name="kmeans_red")
+            assigns.append(ex.submit(_assign, d, name="kmeans_assign"))
+        cps = [ex.submit(_center_partial, X.blocks[i][j], assigns[i], k,
+                         name="kmeans_cp")
+               for i in range(X.p_r) for j in range(X.p_c)]
+        creds = []
         for j in range(X.p_c):
             col = [cps[i * X.p_c + j] for i in range(X.p_r)]
-            s, c = col[0] if len(col) == 1 else ex.reduce(
-                _merge_cp, col, name="kmeans_cred")
-            new_cols.append(s / np.maximum(c, 1.0)[:, None])
+            creds.append(col[0] if len(col) == 1 else ex.reduce_tree(
+                _merge_cp, col, name="kmeans_cred"))
+        # one barrier per Lloyd iteration: the next centers are needed
+        # master-side before the next round of tasks can be built
+        vals = ex.collect(*creds, *assigns)
+        new_cols = [s / np.maximum(c, 1.0)[:, None]
+                    for s, c in vals[:X.p_c]]
         centers = np.concatenate(new_cols, axis=1)
+        labels = [lab for lab, _ in vals[X.p_c:]]
+        inertia = float(sum(obj for _, obj in vals[X.p_c:]))
     return {"centers": centers, "inertia": inertia, "labels": labels}
 
 

@@ -1,16 +1,17 @@
 """Data-parallel PCA over a DistArray -- the paper's MareNostrum-4 workload.
 
-Column means and the Gram/covariance matrix are assembled from per-block
-tasks: one task per (row-block, col-block-pair), tree-reduced over row
-blocks; the final (m x m) eigendecomposition runs as a master task (as in
-dislib, whose PCA gathers the covariance).
+Column sums and the Gram/covariance matrix are per-block tasks chained by
+futures: each Gram task depends only on its two column sums, so under the
+DAG scheduler a column pair whose means are ready starts immediately while
+other columns are still reducing; the final (m x m) eigendecomposition
+runs as a master task (as in dislib, whose PCA gathers the covariance).
 """
 from __future__ import annotations
 
 import numpy as np
 
 from repro.data.distarray import DistArray
-from repro.data.executor import TaskExecutor
+from repro.data.taskgraph import TaskGraph
 
 
 def _col_sum(xb):
@@ -21,8 +22,10 @@ def _add(a, b):
     return a + b
 
 
-def _gram_pair(xa, xb, mu_a, mu_b):
-    return (xa - mu_a).T @ (xb - mu_b)
+def _gram_pair(xa, xb, sa, sb, n):
+    mu_a = sa / n
+    mu_b = sb / n
+    return (xa - mu_a[None, :]).T @ (xb - mu_b[None, :])
 
 
 def _eigh_top(cov, n_components):
@@ -31,43 +34,42 @@ def _eigh_top(cov, n_components):
     return w[order], v[:, order]
 
 
-def fit(ex: TaskExecutor, X: DistArray, *, n_components: int = 8):
+def fit(ex: TaskGraph, X: DistArray, *, n_components: int = 8):
     n, m = X.shape
-    # ---- column means ------------------------------------------------------
-    sums = ex.map(_col_sum, [X.blocks[i][j] for i in range(X.p_r)
-                             for j in range(X.p_c)], name="pca_colsum")
-    mu = []
+    # ---- column sums (means are formed inside each Gram task) -------------
+    sums = [[ex.submit(_col_sum, X.blocks[i][j], name="pca_colsum")
+             for j in range(X.p_c)] for i in range(X.p_r)]
+    colred = []
     for j in range(X.p_c):
-        col = [sums[i * X.p_c + j] for i in range(X.p_r)]
-        s = col[0] if len(col) == 1 else ex.reduce(_add, col, name="pca_mred")
-        mu.append(s / n)
+        col = [sums[i][j] for i in range(X.p_r)]
+        colred.append(col[0] if len(col) == 1 else ex.reduce_tree(
+            _add, col, name="pca_mred"))
 
     # ---- blocked covariance -----------------------------------------------
-    items, where = [], []
+    pair_parts: dict = {}
     for i in range(X.p_r):
         for j1 in range(X.p_c):
             for j2 in range(j1, X.p_c):
-                items.append((X.blocks[i][j1], X.blocks[i][j2],
-                              mu[j1][None, :], mu[j2][None, :]))
-                where.append((i, j1, j2))
-    grams = ex.map(lambda a, b, ma, mb: _gram_pair(a, b, ma, mb), items,
-                   name="pca_gram", unpack=True)
+                g = ex.submit(_gram_pair, X.blocks[i][j1], X.blocks[i][j2],
+                              colred[j1], colred[j2], n, name="pca_gram")
+                pair_parts.setdefault((j1, j2), []).append(g)
+    pair_red = {pair: (parts[0] if len(parts) == 1 else ex.reduce_tree(
+        _add, parts, name="pca_gred")) for pair, parts in pair_parts.items()}
 
-    pair_sum: dict = {}
-    for (i, j1, j2), g in zip(where, grams):
-        pair_sum.setdefault((j1, j2), []).append(g)
+    vals = ex.collect(*pair_red.values(), *colred)
+    grams = dict(zip(pair_red, vals[:len(pair_red)]))
+    mu = [s / n for s in vals[len(pair_red):]]
     ce = X.col_edges
     cov = np.zeros((m, m))
-    for (j1, j2), parts in pair_sum.items():
-        g = parts[0] if len(parts) == 1 else ex.reduce(_add, parts,
-                                                       name="pca_gred")
+    for (j1, j2), g in grams.items():
         cov[ce[j1]:ce[j1 + 1], ce[j2]:ce[j2 + 1]] = g
         if j1 != j2:
             cov[ce[j2]:ce[j2 + 1], ce[j1]:ce[j1 + 1]] = g.T
     cov /= max(n - 1, 1)
 
-    # ---- master eigendecomposition ----------------------------------------
-    w, v = ex.master(_eigh_top, cov, n_components, name="pca_eigh")
+    # ---- master eigendecomposition (serial, unwarmed: runs exactly once) --
+    f = ex.submit(_eigh_top, cov, n_components, name="pca_eigh", warm=False)
+    w, v = ex.collect(f)[0]
     return {"mean": np.concatenate(mu), "variance": w, "components": v}
 
 

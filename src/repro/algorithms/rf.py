@@ -2,7 +2,9 @@
 
 Trees distribute over row blocks (each block trains its share of the
 ensemble on local rows with feature subsampling); prediction is a
-vote-merge.  The base learner is this repo's own CART
+vote-merge.  Each block's training task chains off that block's stitch
+future, so stitching and tree-fitting of different blocks overlap in the
+DAG schedule.  The base learner is this repo's own CART
 (repro.core.trees.DecisionTreeClassifier), so the paper's model and the
 paper's workload share one tree implementation.
 """
@@ -12,7 +14,7 @@ import numpy as np
 
 from repro.core.trees import DecisionTreeClassifier
 from repro.data.distarray import DistArray
-from repro.data.executor import TaskExecutor
+from repro.data.taskgraph import TaskGraph
 
 
 def _train_block(xb, yb, n_trees, classes, max_depth, seed):
@@ -33,18 +35,17 @@ def _train_block(xb, yb, n_trees, classes, max_depth, seed):
     return trees
 
 
-def fit(ex: TaskExecutor, X: DistArray, y: np.ndarray, *, n_trees: int = 16,
+def fit(ex: TaskGraph, X: DistArray, y: np.ndarray, *, n_trees: int = 16,
         max_depth: int = 8, seed: int = 0):
     y = np.asarray(y)
     classes = np.unique(y)
-    rows = X.row_stitched(ex)
+    rows = X.row_stitched(ex, defer=True)
     yb = X.split_rows(y)
     per_block = max(1, int(np.ceil(n_trees / X.p_r)))
-    items = [(rows[i], yb[i], per_block, classes, max_depth, seed + i)
-             for i in range(X.p_r)]
-    tree_lists = ex.map(
-        lambda xb, yy, nt, cl, md, sd: _train_block(xb, yy, nt, cl, md, sd),
-        items, name="rf_fit", unpack=True)
+    fs = [ex.submit(_train_block, rows[i], yb[i], per_block, classes,
+                    max_depth, seed + i, name="rf_fit")
+          for i in range(X.p_r)]
+    tree_lists = ex.collect(*fs)
     trees = [t for lst in tree_lists for t in lst]
     return {"trees": trees, "classes": classes}
 

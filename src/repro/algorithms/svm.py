@@ -3,14 +3,16 @@ support vectors merge pairwise up a cascade, retraining at each level.
 The inner solver is Pegasos-style hinge subgradient descent (numpy).
 Column-partitioned inputs pay an explicit per-row-block "stitch" task first
 (the cost the paper's tuner sees when p_c is too large for a row-oriented
-algorithm).
+algorithm); each block's level-0 fit chains off its own stitch future, so
+training a stitched block overlaps other blocks' stitching in the DAG
+schedule.
 """
 from __future__ import annotations
 
 import numpy as np
 
 from repro.data.distarray import DistArray
-from repro.data.executor import TaskExecutor
+from repro.data.taskgraph import TaskGraph
 
 
 def _pegasos(xy, *, lam=1e-3, iters=60, cap=256, seed=0):
@@ -42,15 +44,18 @@ def _merge_train(a, b):
     return _pegasos((x, y), seed=1)
 
 
-def fit(ex: TaskExecutor, X: DistArray, y: np.ndarray, *, lam: float = 1e-3):
-    rows = X.row_stitched(ex)
+def _fit_block(xb, yy, lam):
+    return _pegasos((xb, yy), lam=lam)
+
+
+def fit(ex: TaskGraph, X: DistArray, y: np.ndarray, *, lam: float = 1e-3):
+    rows = X.row_stitched(ex, defer=True)
     yb = X.split_rows(np.where(np.asarray(y) > 0, 1.0, -1.0))
-    level0 = ex.map(lambda xb, yy: _pegasos((xb, yy), lam=lam),
-                    list(zip(rows, yb)), name="csvm_fit", unpack=True)
-    if len(level0) == 1:
-        w, b, _ = level0[0]
-    else:
-        w, b, _ = ex.reduce(_merge_train, level0, name="csvm_cascade")
+    level0 = [ex.submit(_fit_block, rows[i], yb[i], lam, name="csvm_fit")
+              for i in range(X.p_r)]
+    top = level0[0] if len(level0) == 1 else ex.reduce_tree(
+        _merge_train, level0, name="csvm_cascade")
+    w, b, _ = ex.collect(top)[0]
     return {"w": w, "b": b}
 
 

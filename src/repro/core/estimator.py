@@ -87,6 +87,16 @@ class BlockSizeEstimator:
         return int(np.ceil(n_rows / p_r)), int(np.ceil(n_cols / p_c))
 
 
+def _memo_value(v):
+    """Canonical memo-key form of an env feature value: floats unify int/
+    float spellings; non-numeric values (e.g. a cluster-name string) fall
+    back to ``repr`` instead of raising."""
+    try:
+        return float(v)
+    except (TypeError, ValueError):
+        return repr(v)
+
+
 class EstimatorService:
     """Serving front-end over a fitted estimator: shape-bucketed LRU memo.
 
@@ -110,7 +120,7 @@ class EstimatorService:
     def _bucket(n_rows: int, n_cols: int, algo: str, env: dict) -> tuple:
         br = 1 << max(0, math.ceil(math.log2(max(n_rows, 1))))
         bc = 1 << max(0, math.ceil(math.log2(max(n_cols, 1))))
-        return (br, bc, algo, tuple(sorted((k, float(v))
+        return (br, bc, algo, tuple(sorted((k, _memo_value(v))
                                            for k, v in env.items())))
 
     def predict_partitions_batch(self, queries) -> list[tuple]:

@@ -32,7 +32,11 @@ def featurize(d: dict, algo: str, e: dict) -> dict:
     f = dict(d)
     for a in ALGOS:
         f[f"algo_{a}"] = 1.0 if algo == a else 0.0
-    f.update({f"env_{k}": float(v) for k, v in e.items()})
+    for k, v in e.items():
+        try:
+            f[f"env_{k}"] = float(v)
+        except (TypeError, ValueError):
+            continue    # non-numeric env metadata (e.g. cluster name)
     return f
 
 

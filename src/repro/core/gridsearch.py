@@ -14,6 +14,14 @@ that a measured OOM at (p_r, p_c) prunes every coarser-or-equal cell
 per-task working sets at least as large, so they are recorded ``inf``
 directly (meta ``pruned: True``).  Argmin labels are provably unchanged --
 pruned cells would have scored ``inf`` anyway.
+
+Opt-in cross-cell measurement reuse (``reuse_measurements=True``): one
+:class:`MeasurementCache` is shared across the whole sweep, so each unique
+(task body, argument-signature) executes and is timed once; every other
+occurrence -- later iterations of the same cell, and cells sharing a row
+or column partitioning -- replays the measured duration through the DAG
+scheduler without re-executing.  Wall time drops several-fold while every
+cell's modeled makespan is still composed of real measured durations.
 """
 from __future__ import annotations
 
@@ -25,7 +33,8 @@ from repro.algorithms import run as run_algo
 from repro.core.features import dataset_features
 from repro.core.log import ExecutionLog, ExecutionRecord
 from repro.data.distarray import DistArray
-from repro.data.executor import Environment, TaskExecutor, TaskMemoryError
+from repro.data.executor import (Environment, MeasurementCache, TaskExecutor,
+                                 TaskMemoryError)
 
 
 def grid_powers(n_cores: int, s: int = 2, mult: int = 4,
@@ -43,8 +52,9 @@ def grid_powers(n_cores: int, s: int = 2, mult: int = 4,
 
 
 def run_cell(X: np.ndarray, y, algo: str, env: Environment, p_r: int, p_c: int,
-             *, algo_kw=None, repeats: int = 1,
-             Xd: DistArray | None = None) -> tuple[float, dict]:
+             *, algo_kw=None, repeats: int = 1, task_repeats: int = 1,
+             Xd: DistArray | None = None,
+             measure_cache: MeasurementCache | None = None) -> tuple[float, dict]:
     """One grid cell: real execution, modeled makespan; inf on OOM.
 
     ``Xd`` lets the caller supply a pre-partitioned array (grid_search
@@ -65,13 +75,16 @@ def run_cell(X: np.ndarray, y, algo: str, env: Environment, p_r: int, p_c: int,
     best = float("inf")
     info = {}
     for rep in range(repeats):
-        ex = TaskExecutor(env)
+        ex = TaskExecutor(env, repeats=task_repeats,
+                          measure_cache=measure_cache)
         try:
             run_algo(algo, ex, Xd, y)
         except TaskMemoryError as e:
             return float("inf"), {"reason": str(e), "oom": True}
         best = min(best, ex.sim_time)
         info = {"tasks": ex.n_tasks, "real_s": ex.real_time}
+        if measure_cache is not None:
+            info["replayed"] = ex.replayed_tasks
     return best, info
 
 
@@ -98,16 +111,28 @@ def _refined_cells(X: np.ndarray, ps, col_ps) -> dict:
 
 
 def grid_search(X: np.ndarray, y, algo: str, env: Environment, *, s: int = 2,
-                mult: int = 4, repeats: int = 1, log: ExecutionLog | None = None,
+                mult: int = 4, repeats: int = 1, task_repeats: int = 1,
+                log: ExecutionLog | None = None,
                 row_only: bool = False, verbose: bool = False,
-                prune_oom: bool = True, reuse_blocks: bool = True):
+                prune_oom: bool = True, reuse_blocks: bool = True,
+                reuse_measurements: bool = False):
     """Sweep the (p_r, p_c) grid; returns (log, grid dict).
 
-    ``prune_oom`` skips execution of cells coarser than a measured OOM cell
+    ``repeats`` re-runs whole cells (best-of) while ``task_repeats``
+    re-runs individual task bodies (best-of per measurement -- cheaper
+    noise damping, and the damped duration is what a measurement cache
+    stores).  Under ``reuse_measurements`` cell-level ``repeats`` is
+    inert beyond the first rep (later reps replay the shared cache and
+    re-measure nothing); use ``task_repeats`` for damping there.
+    ``prune_oom`` skips execution of cells coarser than a
+    measured OOM cell
     (recorded ``inf`` with meta ``pruned``); ``reuse_blocks`` derives each
     cell's partitioning by refining the previous one instead of re-slicing
-    ``X``.  Both default on; disabling them reproduces the exhaustive
-    scalar path cell for cell.
+    ``X``; ``reuse_measurements`` shares one cross-cell
+    :class:`MeasurementCache` over the sweep, executing each unique task
+    body/signature once and replaying its measured duration elsewhere.
+    Disabling all three reproduces the exhaustive scalar path cell for
+    cell.
     """
     log = log or ExecutionLog()
     d = dataset_features(*X.shape)
@@ -115,6 +140,7 @@ def grid_search(X: np.ndarray, y, algo: str, env: Environment, *, s: int = 2,
     ps = grid_powers(env.n_workers, s=s, mult=mult)
     col_ps = [1] if row_only else ps
     cells = _refined_cells(X, ps, col_ps) if reuse_blocks else {}
+    cache = MeasurementCache() if reuse_measurements else None
     grid = {}
     oom_cells: list[tuple[int, int]] = []
     for p_r in sorted(ps, reverse=True):
@@ -125,7 +151,9 @@ def grid_search(X: np.ndarray, y, algo: str, env: Environment, *, s: int = 2,
                                          "pruned": True}
             else:
                 t, info = run_cell(X, y, algo, env, p_r, p_c, repeats=repeats,
-                                   Xd=cells.get((p_r, p_c)))
+                                   task_repeats=task_repeats,
+                                   Xd=cells.get((p_r, p_c)),
+                                   measure_cache=cache)
                 if info.get("oom"):
                     oom_cells.append((p_r, p_c))
             grid[(p_r, p_c)] = t

@@ -11,6 +11,10 @@ from __future__ import annotations
 import numpy as np
 
 
+def _stitch(*bs):
+    return np.concatenate(bs, axis=1)
+
+
 class DistArray:
     def __init__(self, blocks, shape):
         self.blocks = blocks                 # list[list[np.ndarray]]
@@ -84,16 +88,25 @@ class DistArray:
     def block_sizes_mb(self):
         return [[b.nbytes / 2**20 for b in row] for row in self.blocks]
 
-    def row_stitched(self, executor=None):
+    def row_stitched(self, executor=None, defer: bool = False):
         """Concatenate column blocks per row block (a real task when the
-        algorithm needs whole feature rows, e.g. RF / CSVM)."""
+        algorithm needs whole feature rows, e.g. RF / CSVM).
+
+        With ``defer=True`` returns one future per row block without
+        forcing a schedule, so downstream per-block tasks chain off their
+        own stitch and overlap under the DAG scheduler.  Without it the
+        call is a barrier: the executor collects the whole pending graph
+        (including any unrelated futures submitted earlier).
+        """
         if self.p_c == 1:
             return [row[0] for row in self.blocks]
         if executor is None:
             return [np.concatenate(row, axis=1) for row in self.blocks]
-        return executor.map(lambda *bs: np.concatenate(bs, axis=1),
-                            [tuple(row) for row in self.blocks],
-                            name="stitch", unpack=True)
+        fs = [executor.submit(_stitch, *row, name="stitch")
+              for row in self.blocks]
+        if defer:
+            return fs
+        return executor.collect(*fs)
 
     def map_blocks(self, fn) -> "DistArray":
         return DistArray([[fn(b) for b in row] for row in self.blocks],

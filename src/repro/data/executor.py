@@ -1,175 +1,56 @@
-"""Task-based executor with real per-task timing and a modeled multi-worker
-makespan (the PyCOMPSs-runtime analogue; see DESIGN.md §5).
+"""Eager-looking compatibility facade over the deferred task-graph runtime
+(see taskgraph.py and DESIGN.md §5).
 
-Honesty contract:
-  * every task body really executes on this host and is individually timed
-    (median over ``repeats``, after a one-time warmup per (fn, shape) so JIT
-    compilation never pollutes measurements);
-  * the *multi-worker* makespan is composed from those measured durations by
-    a deterministic LPT (longest-processing-time-first) list schedule onto
-    ``env.n_workers`` workers, plus a per-task dispatch overhead (the
-    task-management cost the paper attributes to over-fine partitioning);
-  * a per-task memory budget models node RAM; exceeding it raises
-    ``TaskMemoryError``, which the grid search records as t = inf, exactly
-    like the paper's OOM handling.
+``TaskExecutor`` is the historical entry point: ``map`` / ``reduce`` /
+``master`` are thin shims over ``submit`` + ``collect``, so every call
+behaves as a barrier exactly like the original eager executor did -- same
+per-task timing, same memory-budget OOM semantics, same dispatch-overhead
+accounting.  Code that wants DAG-level scheduling (every algorithm in
+``repro.algorithms`` does) calls ``submit``/``reduce_tree`` and defers the
+barrier to one ``collect`` per logical step, letting independent task
+chains overlap in the modeled makespan.
 
-``sim_time`` is the modeled cluster makespan; ``real_time`` is the actual
-wall time spent on this host.  On a 1-worker environment the two coincide
-(minus dispatch overhead).
+``Environment``, ``TaskMemoryError`` and ``lpt_makespan`` are re-exported
+from taskgraph.py for backward compatibility.
 """
 from __future__ import annotations
 
-import dataclasses
-import heapq
-import time
-
-import numpy as np
-
-
-class TaskMemoryError(MemoryError):
-    pass
-
-
-@dataclasses.dataclass(frozen=True)
-class Environment:
-    """The paper's execution environment `e`."""
-    name: str = "local"
-    n_workers: int = 1
-    n_nodes: int = 1
-    mem_limit_mb: float = float("inf")      # per-task working-set budget
-    dispatch_overhead_s: float = 2e-4       # master-side per-task cost
-    ram_gb: float = 0.0
-
-    def features(self) -> dict:
-        return {"n_workers": self.n_workers, "n_nodes": self.n_nodes,
-                "mem_limit_mb": (0.0 if np.isinf(self.mem_limit_mb)
-                                 else self.mem_limit_mb),
-                "ram_gb": self.ram_gb}
+from repro.data.taskgraph import (  # noqa: F401  (re-exported API)
+    Environment,
+    Future,
+    MeasurementCache,
+    TaskGraph,
+    TaskMemoryError,
+    lpt_makespan,
+)
 
 
-def lpt_makespan(durations, n_workers: int) -> float:
-    """Greedy longest-processing-time schedule onto n_workers workers."""
-    if not durations:
-        return 0.0
-    heap = [0.0] * min(n_workers, len(durations))
-    heapq.heapify(heap)
-    for d in sorted(durations, reverse=True):
-        t = heapq.heappop(heap)
-        heapq.heappush(heap, t + d)
-    return max(heap)
+class TaskExecutor(TaskGraph):
+    """TaskGraph plus the eager phase-style API (compatibility shims).
 
-
-class TaskExecutor:
-    def __init__(self, env: Environment, repeats: int = 1,
-                 mem_multiplier: float = 3.0):
-        self.env = env
-        self.repeats = repeats
-        self.mem_multiplier = mem_multiplier   # working set ≈ k x inputs
-        self.sim_time = 0.0
-        self.real_time = 0.0
-        self.n_tasks = 0
-        self.phases: list[dict] = []
-        self._warm: set = set()
-
-    # ------------------------------------------------------------ internal
-    def _input_mb(self, args) -> float:
-        total = 0
-        for a in args:
-            if isinstance(a, np.ndarray):
-                total += a.nbytes
-            elif isinstance(a, (tuple, list)):
-                total += sum(x.nbytes for x in a if isinstance(x, np.ndarray))
-        return total / 2**20
-
-    def _check_mem(self, args, extra_mb: float):
-        need = self.mem_multiplier * self._input_mb(args) + extra_mb
-        if need > self.env.mem_limit_mb:
-            raise TaskMemoryError(
-                f"task needs ~{need:.1f} MB > limit "
-                f"{self.env.mem_limit_mb:.1f} MB")
-
-    def _run_one(self, fn, args, kwargs):
-        t0 = time.perf_counter()
-        out = fn(*args, **kwargs)
-        dt = time.perf_counter() - t0
-        return out, dt
-
-    def _timed(self, fn, args, kwargs, warm_key):
-        if warm_key not in self._warm:         # warm JIT/caches untimed
-            self._warm.add(warm_key)
-            fn(*args, **kwargs)
-        best = None
-        out = None
-        for _ in range(self.repeats):
-            out, dt = self._run_one(fn, args, kwargs)
-            best = dt if best is None else min(best, dt)
-        return out, best
-
-    @staticmethod
-    def _shape_key(args):
-        key = []
-        for a in args:
-            if isinstance(a, np.ndarray):
-                key.append(a.shape)
-            elif isinstance(a, (tuple, list)):
-                key.append(tuple(x.shape for x in a
-                                 if isinstance(x, np.ndarray)))
-        return tuple(key)
+    Each shim call collects the WHOLE pending graph -- any futures
+    submitted earlier and not yet collected are flushed into the same
+    epoch (and their values become subject to the normal epoch value
+    lifetime).  Don't interleave deferred ``submit`` chains with these
+    eager entry points unless that barrier is intended.
+    """
 
     # ----------------------------------------------------------------- api
     def map(self, fn, items, name="map", extra_args=(), extra_mb: float = 0.0,
             unpack: bool = False):
-        """Run fn over items as independent tasks (one phase)."""
-        results, durations = [], []
-        for it in items:
-            args = (tuple(it) if unpack else (it,)) + tuple(extra_args)
-            self._check_mem(args, extra_mb)
-            key = (name, getattr(fn, "__name__", id(fn)), self._shape_key(args))
-            out, dt = self._timed(fn, args, {}, key)
-            results.append(out)
-            durations.append(dt)
-        self._account(name, durations)
-        return results
+        """Run fn over items as independent tasks (one barrier phase)."""
+        fs = [self.submit(
+            fn, *((tuple(it) if unpack else (it,)) + tuple(extra_args)),
+            name=name, extra_mb=extra_mb) for it in items]
+        return self.collect(*fs)
 
     def reduce(self, fn, items, name="reduce"):
-        """Pairwise tree reduction; depth counts toward the critical path."""
-        level = list(items)
-        depth_time = 0.0
-        total = 0
-        while len(level) > 1:
-            nxt, durs = [], []
-            for i in range(0, len(level) - 1, 2):
-                key = (name, getattr(fn, "__name__", id(fn)),
-                       self._shape_key((level[i], level[i + 1])))
-                out, dt = self._timed(fn, (level[i], level[i + 1]), {}, key)
-                nxt.append(out)
-                durs.append(dt)
-            if len(level) % 2:
-                nxt.append(level[-1])
-            level = nxt
-            total += len(durs)
-            depth_time += lpt_makespan(durs, self.env.n_workers)
-            self.real_time += sum(durs)
-        self.sim_time += depth_time + total * self.env.dispatch_overhead_s
-        self.n_tasks += total
-        self.phases.append({"name": name, "tasks": total,
-                            "sim": depth_time})
-        return level[0]
+        """Pairwise tree reduction, collected immediately (one barrier)."""
+        root = self.reduce_tree(fn, items, name=name)
+        return self.collect(root)[0]
 
     def master(self, fn, *args, name="master", **kwargs):
-        """Single task on the master (e.g. final eigh); fully serial."""
-        self._check_mem(args, 0.0)
-        out, dt = self._run_one(fn, args, kwargs)
-        self.sim_time += dt
-        self.real_time += dt
-        self.n_tasks += 1
-        self.phases.append({"name": name, "tasks": 1, "sim": dt})
-        return out
-
-    def _account(self, name, durations):
-        sim = lpt_makespan(durations, self.env.n_workers) \
-            + len(durations) * self.env.dispatch_overhead_s
-        self.sim_time += sim
-        self.real_time += sum(durations)
-        self.n_tasks += len(durations)
-        self.phases.append({"name": name, "tasks": len(durations), "sim": sim})
+        """Single task on the master (e.g. final eigh); fully serial.  Not
+        warmed: master tasks run once, so first-run time is the real cost."""
+        f = self.submit(fn, *args, name=name, warm=False, **kwargs)
+        return self.collect(f)[0]

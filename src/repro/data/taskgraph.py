@@ -1,0 +1,554 @@
+"""Deferred task-graph runtime: futures, DAG-level scheduling, pluggable
+backends (the PyCOMPSs-runtime analogue; see DESIGN.md §5).
+
+``submit()`` returns a lightweight :class:`Future`; dependencies (futures
+appearing anywhere in a task's arguments) are tracked into a DAG, and
+``collect()`` schedules the *whole accumulated graph* with a
+dependency-aware LPT list schedule onto ``env.n_workers`` workers.  Unlike
+the eager per-phase executor this replaces, independent task chains overlap
+freely: a row block's reduction can run while another row block is still in
+its map stage, exactly as dislib's ds-array behaves on the real PyCOMPSs
+runtime.
+
+Honesty contract (inherited from the eager executor, still enforced):
+  * every task body really executes on this host and is individually timed
+    (median-of-``repeats`` best, after a one-time untimed warmup per
+    (fn, argument-signature) so JIT compilation never pollutes labels);
+  * the *multi-worker* makespan is composed from those measured durations
+    by a deterministic dependency-aware list schedule (LPT priority among
+    ready tasks), plus a per-task dispatch overhead (the task-management
+    cost the paper attributes to over-fine partitioning);
+  * the scheduler also evaluates the per-phase barrier schedule (tasks
+    grouped by submission order, a group ending at every name change or
+    intra-group dependency -- the schedule the eager executor produced) and
+    reports ``min(dag, barrier)``, so DAG-level scheduling is *never worse*
+    than the barrier schedule it replaces;
+  * a per-task memory budget models node RAM; exceeding it raises
+    :class:`TaskMemoryError`, which the grid search records as t = inf,
+    exactly like the paper's OOM handling.
+
+Backends: ``inline`` (default) evaluates each task body deterministically
+at submit time, deferring only the schedule; ``threadpool`` evaluates
+bodies concurrently on a thread pool (results identical, wall time lower,
+per-task timings noisier).
+
+Opt-in measurement reuse: with a shared :class:`MeasurementCache`, each
+unique (fn, argument-signature) body executes and is timed once; later
+submissions *replay* the measured duration (and cached value) through the
+scheduler without re-executing.  Grid search uses this to cut sweep wall
+time several-fold while every modeled makespan remains composed of real
+measured durations (see core/gridsearch.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import os
+import threading
+import time
+from concurrent.futures import ThreadPoolExecutor
+
+import numpy as np
+
+
+class TaskMemoryError(MemoryError):
+    pass
+
+
+@dataclasses.dataclass(frozen=True)
+class Environment:
+    """The paper's execution environment `e`."""
+    name: str = "local"
+    n_workers: int = 1
+    n_nodes: int = 1
+    mem_limit_mb: float = float("inf")      # per-task working-set budget
+    dispatch_overhead_s: float = 2e-4       # master-side per-task cost
+    ram_gb: float = 0.0
+
+    def features(self) -> dict:
+        return {"n_workers": self.n_workers, "n_nodes": self.n_nodes,
+                "mem_limit_mb": (0.0 if np.isinf(self.mem_limit_mb)
+                                 else self.mem_limit_mb),
+                "ram_gb": self.ram_gb}
+
+
+def lpt_makespan(durations, n_workers: int) -> float:
+    """Greedy longest-processing-time schedule of independent tasks."""
+    if not durations:
+        return 0.0
+    heap = [0.0] * min(n_workers, len(durations))
+    heapq.heapify(heap)
+    for d in sorted(durations, reverse=True):
+        t = heapq.heappop(heap)
+        heapq.heappush(heap, t + d)
+    return max(heap)
+
+
+def list_schedule_makespan(durations, deps, n_workers: int) -> float:
+    """Dependency-aware LPT list schedule of a DAG onto ``n_workers``.
+
+    Event-driven and work-conserving: whenever a worker is free and a task
+    is ready (all predecessors finished), the longest ready task starts.
+    ``deps[i]`` holds indices (into ``durations``) that task i waits on.
+    """
+    n = len(durations)
+    if n == 0:
+        return 0.0
+    succ: list[list[int]] = [[] for _ in range(n)]
+    indeg = [0] * n
+    for i, ds in enumerate(deps):
+        for d in ds:
+            succ[d].append(i)
+            indeg[i] += 1
+    ready = [(-durations[i], i) for i in range(n) if indeg[i] == 0]
+    heapq.heapify(ready)
+    running: list[tuple[float, int]] = []
+    free = max(1, n_workers)
+    t = 0.0
+    done = 0
+    while done < n:
+        while ready and free:
+            _, i = heapq.heappop(ready)
+            heapq.heappush(running, (t + durations[i], i))
+            free -= 1
+        t, i = heapq.heappop(running)
+        free += 1
+        done += 1
+        for s in succ[i]:
+            indeg[s] -= 1
+            if indeg[s] == 0:
+                heapq.heappush(ready, (-durations[s], s))
+    return t
+
+
+def phase_barrier_makespan(names, durations, deps, n_workers: int) -> float:
+    """The per-phase barrier schedule the eager executor produced.
+
+    Tasks are grouped in submission order; a new phase starts whenever the
+    task name changes or a task depends on a member of the current phase
+    (so each phase is internally independent and the schedule is feasible).
+    Each phase is LPT-scheduled behind a barrier; phases run serially.
+    """
+    total = 0.0
+    cur: list[float] = []
+    cur_ids: set[int] = set()
+    cur_name = None
+    for i, (name, dur, ds) in enumerate(zip(names, durations, deps)):
+        if cur and (name != cur_name or any(d in cur_ids for d in ds)):
+            total += lpt_makespan(cur, n_workers)
+            cur, cur_ids = [], set()
+        cur.append(dur)
+        cur_ids.add(i)
+        cur_name = name
+    total += lpt_makespan(cur, n_workers)
+    return total
+
+
+# --------------------------------------------------------------- signatures
+def _capture_sig(v):
+    """Signature of a value captured by a closure / default arg: immutable
+    scalars by value (a captured mode string distinguishes two same-line
+    lambdas), arrays by shape (consistent with argument signatures), and
+    mutable containers / objects by type only -- their contents may mutate
+    between submissions, and keying on them would make the body's identity
+    unstable."""
+    if isinstance(v, (bool, int, float, str, bytes, type(None))):
+        return ("val", v)
+    if isinstance(v, np.ndarray):
+        return ("nd", v.shape, v.dtype.str)
+    return ("obj", type(v).__name__)
+
+
+def _fn_key(fn):
+    """Stable identity for a task body: source location when available, so
+    a lambda recreated each loop iteration keys identically.  Captured
+    state is part of the identity -- two closures born on the same line
+    with different scalar cell contents or defaults are different bodies."""
+    code = getattr(fn, "__code__", None)
+    if code is None:
+        return (getattr(fn, "__module__", ""),
+                getattr(fn, "__qualname__", repr(fn)))
+    captured = []
+    for cell in fn.__closure__ or ():
+        try:
+            captured.append(_capture_sig(cell.cell_contents))
+        except ValueError:                     # empty cell
+            captured.append(("val", None))
+    defaults = tuple(_capture_sig(d) for d in fn.__defaults__ or ())
+    return (code.co_filename, code.co_firstlineno, tuple(captured), defaults)
+
+
+def _arg_sig(x):
+    """Structural signature of a task argument: array shapes/dtypes, scalar
+    values, recursed through tuples/lists/dicts (the paper's cost
+    drivers)."""
+    if isinstance(x, np.ndarray):
+        return ("nd", x.shape, x.dtype.str)
+    if isinstance(x, (tuple, list)):
+        return ("seq", tuple(_arg_sig(v) for v in x))
+    if isinstance(x, dict):
+        return ("map", tuple((k, _arg_sig(v)) for k, v in
+                             sorted(x.items(), key=lambda kv: repr(kv[0]))))
+    if isinstance(x, (bool, int, float, str, type(None))):
+        return ("val", x)
+    return ("obj", type(x).__name__)
+
+
+def _shape_sig(x):
+    """Shapes-only signature (scalar values ignored): the warmup key.  Two
+    calls differing only in a scalar (a seed, an objective) share compiled
+    code and caches, so warming one warms both -- keying warmup on the full
+    value signature would re-run every such body untimed."""
+    if isinstance(x, np.ndarray):
+        return ("nd", x.shape, x.dtype.str)
+    if isinstance(x, (tuple, list)):
+        return ("seq", tuple(_shape_sig(v) for v in x))
+    if isinstance(x, dict):
+        return ("map", tuple((k, _shape_sig(v)) for k, v in
+                             sorted(x.items(), key=lambda kv: repr(kv[0]))))
+    return type(x).__name__
+
+
+def _input_bytes(x) -> int:
+    if isinstance(x, np.ndarray):
+        return x.nbytes
+    if isinstance(x, (tuple, list)):
+        return sum(_input_bytes(v) for v in x)
+    if isinstance(x, dict):
+        return sum(_input_bytes(v) for v in x.values())
+    return 0
+
+
+def _input_mb(args) -> float:
+    return sum(_input_bytes(a) for a in args) / 2**20
+
+
+class MeasurementCache:
+    """Cross-cell (value, duration) memo keyed by (fn, argument signature).
+
+    Shared across the grid-search sweep: the first submission of a given
+    task body at a given signature executes and is timed for real; later
+    submissions replay the measured duration through the scheduler without
+    re-executing.  Thread-safe for the threadpool backend.
+
+    TIMING-ONLY: the signature carries array shapes/dtypes, not contents,
+    so a replayed task returns the *first* occurrence's value -- an
+    iterative fit run under a cache repeats iteration-1 numerics.  The
+    task graph's shape (and therefore its schedule) is unaffected, which
+    is exactly what grid-search labeling needs; never use a cache on a run
+    whose model output you intend to keep.
+    """
+
+    def __init__(self):
+        self._store: dict = {}
+        self._lock = threading.Lock()
+        self.hits = 0
+        self.misses = 0
+
+    def get(self, key):
+        with self._lock:
+            entry = self._store.get(key)
+            if entry is None:
+                self.misses += 1
+            else:
+                self.hits += 1
+            return entry
+
+    def put(self, key, value, duration: float):
+        with self._lock:
+            self._store[key] = (value, duration)
+
+    def __len__(self):
+        return len(self._store)
+
+
+# ------------------------------------------------------------------ futures
+class Future:
+    """Lightweight handle to a submitted task's eventual value."""
+    __slots__ = ("graph", "tid")
+
+    def __init__(self, graph: "TaskGraph", tid: int):
+        self.graph = graph
+        self.tid = tid
+
+    def result(self):
+        return self.graph._value(self.tid)
+
+    @property
+    def name(self) -> str:
+        return self.graph._tasks[self.tid].name
+
+    def __repr__(self):
+        return f"Future(#{self.tid}, {self.name!r})"
+
+
+@dataclasses.dataclass
+class _Task:
+    tid: int
+    name: str
+    deps: tuple            # tids this task waits on
+    duration: float = 0.0
+    value: object = None
+    cf: object = None      # concurrent.futures handle (threadpool backend)
+    replayed: bool = False
+    released: bool = False
+    pending_children: int = 0   # submitted-but-unresolved consumers
+
+
+def _resolve(x):
+    if isinstance(x, Future):
+        return x.result()
+    if isinstance(x, tuple):
+        return tuple(_resolve(v) for v in x)
+    if isinstance(x, list):
+        return [_resolve(v) for v in x]
+    if isinstance(x, dict):
+        return {k: _resolve(v) for k, v in x.items()}
+    return x
+
+
+def _find_deps(x, out: list):
+    if isinstance(x, Future):
+        out.append(x.tid)
+    elif isinstance(x, (tuple, list)):
+        for v in x:
+            _find_deps(v, out)
+    elif isinstance(x, dict):
+        for v in x.values():
+            _find_deps(v, out)
+
+
+class TaskGraph:
+    """Deferred task-graph runtime; see the module docstring.
+
+    ``sim_time`` is the modeled cluster makespan (DAG schedule, never worse
+    than the per-phase barrier); ``dag_time`` / ``barrier_time`` expose both
+    schedules for comparison; ``real_time`` is actual wall time spent
+    executing task bodies on this host.
+    """
+
+    def __init__(self, env: Environment, repeats: int = 1,
+                 mem_multiplier: float = 3.0, backend: str = "inline",
+                 measure_cache: MeasurementCache | None = None):
+        if backend not in ("inline", "threadpool"):
+            raise ValueError(f"unknown backend {backend!r}")
+        self.env = env
+        self.repeats = repeats
+        self.mem_multiplier = mem_multiplier   # working set ≈ k x inputs
+        self.backend = backend
+        self.measure_cache = measure_cache
+        self.sim_time = 0.0
+        self.dag_time = 0.0
+        self.barrier_time = 0.0
+        self.real_time = 0.0
+        self.n_tasks = 0
+        self.executed_tasks = 0
+        self.replayed_tasks = 0
+        self.phases: list[dict] = []
+        self._tasks: list[_Task] = []
+        self._pending: list[int] = []
+        self._live: list[int] = []             # scheduled, values retained
+        self._warm: set = set()
+        self._warm_lock = threading.Lock()
+        self._dep_lock = threading.Lock()
+        self._pool: ThreadPoolExecutor | None = None
+
+    # ------------------------------------------------------------ internal
+    def _check_mem(self, args, extra_mb: float):
+        need = self.mem_multiplier * _input_mb(args) + extra_mb
+        if need > self.env.mem_limit_mb:
+            raise TaskMemoryError(
+                f"task needs ~{need:.1f} MB > limit "
+                f"{self.env.mem_limit_mb:.1f} MB")
+
+    def _execute(self, task: _Task, fn, args, kwargs, *, check_mem: bool,
+                 extra_mb: float, warm: bool):
+        """Resolve, budget-check, (maybe) replay, else run + time a body."""
+        args = _resolve(args)
+        kwargs = {k: _resolve(v) for k, v in kwargs.items()}
+        if check_mem:
+            self._check_mem(args, extra_mb)
+        fk = _fn_key(fn)
+        key = None
+        if self.measure_cache is not None:     # full value-signature key is
+            key = (fk, _arg_sig(args),         # only built when a cache can
+                   _arg_sig(tuple(sorted(kwargs.items())))  # consume it
+                   if kwargs else ())
+            entry = self.measure_cache.get(key)
+            if entry is not None:
+                task.value, task.duration = entry
+                task.replayed = True
+                self._consume_deps(task)
+                return
+        if warm:
+            warm_key = (fk, _shape_sig(args),
+                        _shape_sig(tuple(sorted(kwargs.items())))
+                        if kwargs else ())
+            with self._warm_lock:
+                needs_warm = warm_key not in self._warm
+                self._warm.add(warm_key)
+            if needs_warm:                     # warm JIT/caches untimed
+                fn(*args, **kwargs)
+        best = None
+        out = None
+        # warm=False means "runs exactly once, first-run cost included"
+        # (master tasks); best-of-repeats would silently warm it after all
+        for _ in range(self.repeats if warm else 1):
+            t0 = time.perf_counter()
+            out = fn(*args, **kwargs)
+            dt = time.perf_counter() - t0
+            best = dt if best is None else min(best, dt)
+        task.value, task.duration = out, best
+        if key is not None:
+            self.measure_cache.put(key, out, best)
+        self._consume_deps(task)
+
+    def _consume_deps(self, task: "_Task"):
+        """This task has resolved its inputs: its dependencies have one
+        fewer pending consumer (used to decide when values can be freed)."""
+        with self._dep_lock:
+            for d in task.deps:
+                self._tasks[d].pending_children -= 1
+
+    def _value(self, tid: int):
+        task = self._tasks[tid]
+        cf = task.cf                           # local read: racing resolvers
+        if cf is not None:                     # may both call result()
+            task.value = cf.result()           # re-raises task errors
+            task.cf = None
+        if task.released:
+            raise RuntimeError(
+                f"value of task #{tid} ({task.name!r}) was freed: values "
+                "live until the next collect() schedules new work -- "
+                "collect the futures you need when you need them")
+        return task.value
+
+    # ----------------------------------------------------------------- api
+    def submit(self, fn, *args, name: str = "task", extra_mb: float = 0.0,
+               check_mem: bool = True, warm: bool = True, **kwargs) -> Future:
+        """Submit one task; returns a Future.  Futures anywhere in ``args``
+        / ``kwargs`` become DAG edges.  The inline backend evaluates the
+        body now (deterministically); scheduling is deferred to collect().
+        """
+        deps: list[int] = []
+        _find_deps(args, deps)
+        for v in kwargs.values():
+            _find_deps(v, deps)
+        task = _Task(tid=len(self._tasks), name=name, deps=tuple(deps))
+        with self._dep_lock:
+            for d in deps:
+                self._tasks[d].pending_children += 1
+        self._tasks.append(task)
+        if self.backend == "inline":
+            try:
+                self._execute(task, fn, args, kwargs, check_mem=check_mem,
+                              extra_mb=extra_mb, warm=warm)
+            except BaseException:
+                # failed tasks still consumed their inputs: balance the
+                # counters so dependency values are freeable later
+                self._consume_deps(task)
+                raise
+        else:
+            if self._pool is None:
+                self._pool = ThreadPoolExecutor(
+                    max_workers=max(1, min(self.env.n_workers,
+                                           os.cpu_count() or 1, 16)))
+
+            def _run(task=task, fn=fn, args=args, kwargs=kwargs):
+                try:
+                    self._execute(task, fn, args, kwargs,
+                                  check_mem=check_mem,
+                                  extra_mb=extra_mb, warm=warm)
+                except BaseException:
+                    self._consume_deps(task)
+                    raise
+                return task.value
+
+            task.cf = self._pool.submit(_run)
+        self._pending.append(task.tid)
+        return Future(self, task.tid)
+
+    def reduce_tree(self, fn, items, name: str = "reduce"):
+        """Pairwise tree reduction over futures/values; returns the root
+        future (or the single item) without forcing a schedule."""
+        level = list(items)
+        while len(level) > 1:
+            nxt = [self.submit(fn, level[i], level[i + 1], name=name,
+                               check_mem=False)
+                   for i in range(0, len(level) - 1, 2)]
+            if len(level) % 2:
+                nxt.append(level[-1])
+            level = nxt
+        return level[0]
+
+    def collect(self, *futures):
+        """Schedule every task submitted since the last collect as one DAG
+        epoch (accounting into ``sim_time``) and return the materialized
+        values of ``futures`` (in order).
+
+        Value lifetime: an epoch's values stay retrievable (``result()``)
+        until a *later* collect schedules new work, at which point values
+        with no unresolved consumers are freed -- peak host memory holds
+        one epoch, not the whole run.
+        """
+        epoch = self._pending
+        self._pending = []
+        if epoch:
+            index = {tid: k for k, tid in enumerate(epoch)}
+            tasks = [self._tasks[tid] for tid in epoch]
+            for task in tasks:
+                if task.cf is not None:
+                    self._value(task.tid)      # join; re-raise task errors
+            durs = [t.duration for t in tasks]
+            names = [t.name for t in tasks]
+            # edges into earlier epochs are already accounted (epochs are
+            # sequential), so only intra-epoch dependencies constrain
+            deps = [tuple(index[d] for d in t.deps if d in index)
+                    for t in tasks]
+            dag = list_schedule_makespan(durs, deps, self.env.n_workers)
+            bar = phase_barrier_makespan(names, durs, deps,
+                                         self.env.n_workers)
+            overhead = len(tasks) * self.env.dispatch_overhead_s
+            sim = min(dag, bar) + overhead
+            self.sim_time += sim
+            self.dag_time += dag + overhead
+            self.barrier_time += bar + overhead
+            executed = [t for t in tasks if not t.replayed]
+            self.real_time += sum(t.duration for t in executed)
+            self.n_tasks += len(tasks)
+            self.executed_tasks += len(executed)
+            self.replayed_tasks += len(tasks) - len(executed)
+            self.phases.append({
+                "name": names[0] if len(set(names)) == 1 else "epoch",
+                "tasks": len(tasks), "sim": sim, "dag": dag + overhead,
+                "barrier": bar + overhead})
+        # resolve requested futures BEFORE freeing: a prior-epoch future
+        # passed here is being consumed now, and its value must come back
+        out = [_resolve(f) for f in futures]
+        if epoch:
+            # free prior epochs' values (no unresolved consumers remain)
+            live = []
+            for tid in self._live:
+                t = self._tasks[tid]
+                if t.pending_children == 0:
+                    t.value = None
+                    t.released = True
+                else:
+                    live.append(tid)
+            self._live = live + epoch
+        return out
+
+    def stats(self) -> dict:
+        """Schedule/accounting summary (both schedules, task counts)."""
+        return {
+            "sim_time": self.sim_time, "dag_time": self.dag_time,
+            "barrier_time": self.barrier_time, "real_time": self.real_time,
+            "n_tasks": self.n_tasks, "executed_tasks": self.executed_tasks,
+            "replayed_tasks": self.replayed_tasks,
+            "epochs": len(self.phases), "backend": self.backend,
+        }
+
+    def shutdown(self):
+        if self._pool is not None:
+            self._pool.shutdown(wait=True)
+            self._pool = None

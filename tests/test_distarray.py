@@ -46,3 +46,30 @@ def test_block_sizes_mb():
     x = np.zeros((1024, 1024))
     d = DistArray.from_array(x, 2, 2)
     assert abs(d.block_sizes_mb()[0][0] - 2.0) < 1e-6   # 512x512 f64 = 2 MB
+
+
+def test_refine_non_nested_falls_back_to_repartition():
+    """A hand-built ragged partitioning (row heights 1 and 7) cannot nest
+    the uniform 4-way edges [0,2,4,6,8]: the fine block [2,4) straddles the
+    coarse edge at 1, so refine must re-partition from the assembled array
+    and still match ``from_array`` block for block."""
+    x = np.arange(64.0).reshape(8, 8)
+    ragged = DistArray([[x[:1].copy()], [x[1:].copy()]], (8, 8))
+    fine = ragged.refine(2, 2)
+    ref = DistArray.from_array(x, 4, 2)
+    assert (fine.p_r, fine.p_c) == (4, 2)
+    for i in range(4):
+        for j in range(2):
+            np.testing.assert_array_equal(fine.blocks[i][j], ref.blocks[i][j])
+    np.testing.assert_array_equal(fine.to_array(), x)
+
+
+def test_row_stitched_defer_returns_futures():
+    x = np.random.default_rng(1).normal(size=(9, 8))
+    d = DistArray.from_array(x, 3, 2)
+    ex = TaskExecutor(Environment(n_workers=2))
+    fs = d.row_stitched(ex, defer=True)
+    assert ex.n_tasks == 0                  # nothing scheduled yet
+    rows = ex.collect(*fs)
+    assert ex.n_tasks == 3
+    np.testing.assert_array_equal(np.concatenate(rows), x)

@@ -19,6 +19,14 @@ def test_grid_powers_paper_convention():
     assert ps3 == [1, 3, 9, 27]
 
 
+def test_grid_powers_min_power_offsets_the_sweep():
+    assert grid_powers(64, s=2, mult=4, min_power=3) \
+        == [8, 16, 32, 64, 128, 256]
+    assert grid_powers(27, s=3, mult=1, min_power=1) == [3, 9, 27]
+    # min_power beyond the cap yields an empty sweep
+    assert grid_powers(2, s=2, mult=1, min_power=2) == []
+
+
 def _mk_rec(pr, pc, t, rows=100, algo="kmeans"):
     return ExecutionRecord({"rows": rows, "cols": 10}, algo,
                            {"n_workers": 4}, pr, pc, t)
@@ -109,6 +117,28 @@ def test_estimator_all_model_variants():
         est = BlockSizeEstimator(name).fit(log)
         pr, pc = est.predict_partitions(256, 8, "pca", {"n_workers": 2})
         assert pr >= 1 and pc >= 1
+
+
+def test_service_memo_tolerates_non_numeric_env_values():
+    """Regression: ``EstimatorService._bucket`` used ``float(v)`` on every
+    env feature and raised on strings (e.g. a cluster name)."""
+    from repro.core.estimator import EstimatorService
+    log = ExecutionLog()
+    for rows in (128, 256, 512):
+        for pr in (1, 2, 4):
+            log.add(ExecutionRecord({"rows": rows, "cols": 8}, "pca",
+                                    {"n_workers": 2}, pr, 1,
+                                    abs(pr - 2) + 0.1))
+    svc = EstimatorService(BlockSizeEstimator("tree").fit(log))
+    env = {"n_workers": 2, "cluster": "mn4-login1"}
+    first = svc.predict_partitions_batch([(256, 8, "pca", env)])
+    again = svc.predict_partitions_batch([(256, 8, "pca", env)])
+    assert first == again and svc.hits == 1 and svc.misses == 1
+    assert first[0][0] >= 1 and first[0][1] >= 1
+    # distinct non-numeric values key distinct buckets
+    other = dict(env, cluster="mn4-login2")
+    svc.predict_partitions_batch([(256, 8, "pca", other)])
+    assert svc.misses == 2
 
 
 def test_stats_best_avg_worst():

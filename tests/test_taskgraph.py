@@ -1,0 +1,276 @@
+"""Deferred task-graph runtime: futures/DAG semantics, never-worse-than-
+barrier scheduling, backend equivalence, and cross-cell measurement reuse."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.algorithms import kmeans, pca
+from repro.core.gridsearch import grid_search, grid_stats
+from repro.data.datasets import gaussian_blobs
+from repro.data.distarray import DistArray
+from repro.data.executor import (Environment, Future, MeasurementCache,
+                                 TaskExecutor, TaskGraph, TaskMemoryError,
+                                 lpt_makespan)
+from repro.data.taskgraph import (list_schedule_makespan,
+                                  phase_barrier_makespan)
+
+
+def _work(a):
+    return a @ a.T
+
+
+def _add(a, b):
+    return a + b
+
+
+# ------------------------------------------------------------ futures / DAG
+def test_submit_tracks_dependencies_and_collect_returns_values():
+    g = TaskGraph(Environment(n_workers=2))
+    a = g.submit(np.negative, np.arange(4.0), name="neg")
+    b = g.submit(_add, a, 1.0, name="add")              # future as plain arg
+    c = g.submit(_add, (a, b), (a, b), name="pair")     # futures nested
+    assert g._tasks[b.tid].deps == (a.tid,)
+    assert set(g._tasks[c.tid].deps) == {a.tid, b.tid}
+    va, vb, vc = g.collect(a, b, c)
+    np.testing.assert_array_equal(va, -np.arange(4.0))
+    np.testing.assert_array_equal(vb, va + 1.0)
+    assert len(vc) == 4                      # tuple concat of resolved args
+    np.testing.assert_array_equal(vc[0], va)
+    assert g.n_tasks == 3 and g.sim_time > 0
+
+
+def test_sim_never_worse_than_barrier_schedule():
+    g = TaskExecutor(Environment(n_workers=4))
+    blocks = [np.random.default_rng(i).normal(size=(64, 64))
+              for i in range(12)]
+    outs = [g.submit(_work, b, name=f"w{i % 3}") for i, b in enumerate(blocks)]
+    g.reduce_tree(_add, outs, name="sum")
+    g.collect()
+    s = g.stats()
+    assert s["sim_time"] <= s["barrier_time"] + 1e-12
+    assert s["sim_time"] <= min(s["dag_time"], s["barrier_time"]) + 1e-12
+
+
+def test_dag_overlaps_independent_chains():
+    """Chains submitted with interleaving names fragment the barrier
+    schedule into many tiny phases; the DAG schedule overlaps them."""
+    g = TaskExecutor(Environment(n_workers=4, dispatch_overhead_s=0.0))
+    rng = np.random.default_rng(0)
+    for i in range(4):                       # 4 independent 3-task chains
+        a = g.submit(_work, rng.normal(size=(96, 96)), name=f"a{i}")
+        b = g.submit(_work, a, name=f"b{i}")
+        g.submit(_work, b, name=f"c{i}")
+    g.collect()
+    s = g.stats()
+    # barrier: 12 serial one-task phases; DAG: 4 chains on 4 workers
+    assert s["dag_time"] < s["barrier_time"]
+    assert s["sim_time"] == pytest.approx(s["dag_time"])
+
+
+def test_list_schedule_bounds():
+    durs = [3.0, 2.0, 2.0, 1.0]
+    deps = [(), (0,), (0,), (1, 2)]
+    ms = list_schedule_makespan(durs, deps, 2)
+    assert ms == pytest.approx(6.0)          # 3 -> (2 || 2) -> 1
+    # serial on one worker
+    assert list_schedule_makespan(durs, deps, 1) == pytest.approx(sum(durs))
+    # independent tasks equal the LPT schedule
+    assert list_schedule_makespan([5.0, 3.0, 3.0], [(), (), ()], 2) \
+        == pytest.approx(lpt_makespan([5.0, 3.0, 3.0], 2))
+
+
+def test_phase_barrier_groups_split_on_name_and_dependency():
+    # a,a | b (depends into current group? no -- name change) | b
+    names = ["a", "a", "b", "b"]
+    durs = [1.0, 2.0, 1.0, 1.0]
+    deps = [(), (), (0, 1), (2,)]            # task 3 depends on task 2
+    ms = phase_barrier_makespan(names, durs, deps, 4)
+    assert ms == pytest.approx(2.0 + 1.0 + 1.0)
+
+
+def test_collect_epochs_accumulate():
+    g = TaskGraph(Environment(n_workers=2))
+    g.submit(np.sum, np.ones(8), name="s")
+    g.collect()
+    t1 = g.sim_time
+    g.submit(np.sum, np.ones(8), name="s")
+    g.collect()
+    assert g.sim_time > t1 and len(g.phases) == 2
+
+
+def test_warmup_keyed_on_shapes_not_scalar_values():
+    """Bodies differing only in a scalar arg (a seed, a count) share one
+    warmup: N submits -> N+1 executions, not 2N."""
+    calls = []
+
+    def body(a, seed):
+        calls.append(seed)
+        return a * seed
+
+    g = TaskGraph(Environment(n_workers=2))
+    fs = [g.submit(body, np.ones(4), s, name="b") for s in range(4)]
+    vals = g.collect(*fs)
+    assert len(calls) == 5                   # 1 warmup + 4 timed runs
+    for s, v in enumerate(vals):
+        np.testing.assert_array_equal(v, np.ones(4) * s)
+
+
+def test_collect_returns_requested_prior_epoch_values():
+    """A prior-epoch future passed to collect() is being consumed now: its
+    value must come back even though the epoch boundary frees old values."""
+    g = TaskGraph(Environment(n_workers=2))
+    a = g.submit(np.sum, np.ones(8), name="a")
+    g.collect()
+    b = g.submit(np.sum, np.ones(3), name="b")
+    assert g.collect(a, b) == [8.0, 3.0]
+
+
+def test_old_epoch_values_freed_after_later_collect():
+    g = TaskGraph(Environment(n_workers=2))
+    a = g.submit(np.sum, np.ones(8), name="a")
+    assert g.collect(a) == [8.0]
+    assert a.result() == 8.0                 # still live after its collect
+    g.submit(np.sum, np.ones(8), name="b")
+    g.collect()                              # next epoch frees a's value
+    with pytest.raises(RuntimeError, match="freed"):
+        a.result()
+
+
+def test_memory_budget_raises_on_submit():
+    g = TaskGraph(Environment(mem_limit_mb=0.5))
+    with pytest.raises(TaskMemoryError):
+        g.submit(np.sum, np.zeros((1024, 1024)), name="big")
+    # reductions keep the historical no-check semantics
+    out = g.reduce_tree(_add, [np.zeros((1024, 1024))] * 2, name="r")
+    assert isinstance(out, Future)
+
+
+def test_failed_submit_does_not_pin_dependency_values():
+    """A consumer that OOMs at submit must not leave its dependency's
+    pending-consumer count raised, or the value could never be freed."""
+    g = TaskGraph(Environment(mem_limit_mb=0.1))
+    a = g.submit(np.ones, 64, name="a")      # tiny: passes the budget
+    with pytest.raises(TaskMemoryError):
+        g.submit(_add, (a, np.zeros((1024, 1024))), np.zeros((1024, 1024)),
+                 name="big")
+    assert g._tasks[a.tid].pending_children == 0
+    g.collect()
+    g.submit(np.ones, 8, name="later")
+    g.collect()                              # a's value is freeable now
+    assert g._tasks[a.tid].released
+
+
+# ----------------------------------------------------------------- backends
+def test_threadpool_backend_matches_inline():
+    X = np.random.default_rng(3).normal(size=(120, 18))
+    results = []
+    for backend in ("inline", "threadpool"):
+        g = TaskExecutor(Environment(n_workers=4), backend=backend)
+        m = pca.fit(g, DistArray.from_array(X, 3, 2), n_components=3)
+        assert g.stats()["backend"] == backend
+        assert g.sim_time > 0
+        g.shutdown()
+        results.append(m)
+    np.testing.assert_allclose(results[0]["variance"],
+                               results[1]["variance"], rtol=1e-12)
+    np.testing.assert_allclose(results[0]["mean"], results[1]["mean"],
+                               rtol=1e-12)
+
+
+def test_threadpool_memory_error_raised_at_collect():
+    g = TaskGraph(Environment(mem_limit_mb=0.5), backend="threadpool")
+    f = g.submit(np.sum, np.zeros((1024, 1024)), name="big")
+    with pytest.raises(TaskMemoryError):
+        g.collect(f)
+    g.shutdown()
+
+
+# -------------------------------------------------------- measurement reuse
+def test_measurement_cache_executes_each_signature_once():
+    cache = MeasurementCache()
+    g = TaskGraph(Environment(n_workers=4), measure_cache=cache)
+    a = np.ones((32, 8))
+    fs = [g.submit(_work, a, name="w") for _ in range(6)]
+    vals = g.collect(*fs)
+    assert g.executed_tasks == 1 and g.replayed_tasks == 5
+    for v in vals:
+        np.testing.assert_array_equal(v, a @ a.T)
+    # a second graph sharing the cache replays everything
+    g2 = TaskGraph(Environment(n_workers=4), measure_cache=cache)
+    g2.submit(_work, a, name="w")
+    g2.collect()
+    assert g2.executed_tasks == 0 and g2.replayed_tasks == 1
+    # replayed durations still drive the modeled makespan
+    assert g2.sim_time > 0
+
+
+def test_measurement_cache_distinguishes_shapes_and_scalars():
+    cache = MeasurementCache()
+    g = TaskGraph(Environment(), measure_cache=cache)
+    g.collect(g.submit(np.full, 3, 1.0, name="f"),
+              g.submit(np.full, 4, 1.0, name="f"))
+    assert g.executed_tasks == 2             # different scalar args
+
+
+def test_measurement_cache_distinguishes_same_line_closures():
+    """Two bodies born on the same source line with different captured
+    scalar state are different tasks -- neither may replay the other
+    (default-arg binding, so each lambda holds its own value)."""
+    cache = MeasurementCache()
+    g = TaskGraph(Environment(), measure_cache=cache)
+    fns = [lambda a, s=scale: a * s for scale in (2.0, 5.0)]
+    vals = g.collect(*[g.submit(f, np.ones(3), name="c") for f in fns])
+    assert g.executed_tasks == 2 and g.replayed_tasks == 0
+    np.testing.assert_array_equal(vals[0], np.full(3, 2.0))
+    np.testing.assert_array_equal(vals[1], np.full(3, 5.0))
+
+
+def test_futures_inside_dict_args_are_tracked_and_resolved():
+    g = TaskGraph(Environment(n_workers=2))
+    a = g.submit(np.sum, np.ones(4), name="a")
+    b = g.submit(lambda d: d["x"] + 1.0, {"x": a}, name="b")
+    assert g._tasks[b.tid].deps == (a.tid,)
+    assert g.collect(b) == [5.0]
+
+
+def test_kmeans_iterations_replay_under_cache():
+    X, _ = gaussian_blobs(256, 16, seed=0)
+    cache = MeasurementCache()
+    g = TaskExecutor(Environment(n_workers=4), measure_cache=cache)
+    kmeans.fit(g, DistArray.from_array(X, 4, 2), k=3, iters=4, seed=1)
+    # from iteration 2 on every body signature repeats
+    assert g.replayed_tasks > g.executed_tasks
+
+
+def test_grid_search_reuse_measurements_same_labels_fewer_executions():
+    X, y = gaussian_blobs(256, 16, seed=0)
+    env = Environment(n_workers=4, dispatch_overhead_s=5e-4)
+    log_ex, g_ex = grid_search(X, y, "kmeans", env, mult=1)
+    log_re, g_re = grid_search(X, y, "kmeans", env, mult=1,
+                               reuse_measurements=True)
+    assert set(g_ex) == set(g_re)
+    assert grid_stats(g_ex)["best_part"] == grid_stats(g_re)["best_part"]
+    assert all(math.isfinite(t) for t in g_re.values())
+    replayed = sum(r.meta.get("replayed", 0) for r in log_re.records)
+    assert replayed > 0
+
+
+def test_grid_search_reuse_keeps_oom_cells_inf():
+    X, y = gaussian_blobs(128, 16, seed=0)
+    env = Environment(n_workers=4, mem_limit_mb=0.02)
+    _, grid = grid_search(X, y, "kmeans", env, mult=1,
+                          reuse_measurements=True)
+    assert any(math.isinf(t) for t in grid.values())
+    assert any(math.isfinite(t) for t in grid.values())
+
+
+# -------------------------------------------------------------- compat shims
+def test_shim_map_reduce_master_still_eager():
+    ex = TaskExecutor(Environment(n_workers=2))
+    outs = ex.map(np.sum, [np.ones(4), np.ones(5)], name="m")
+    assert [float(o) for o in outs] == [4.0, 5.0]
+    assert ex.reduce(_add, [1.0, 2.0, 3.0, 4.0], name="r") == 10.0
+    assert ex.master(np.dot, np.ones(3), np.ones(3), name="mm") == 3.0
+    assert ex.n_tasks == 2 + 3 + 1
+    assert len(ex.phases) == 3               # each shim call is one barrier
