@@ -9,16 +9,21 @@ import argparse
 import time
 
 SUITES = ("table2", "table3", "table4", "table6", "ablation", "meshtune",
-          "kernel", "roofline", "hotpath", "taskgraph")
+          "kernel", "roofline", "hotpath", "taskgraph", "tuner")
+# fast suites with built-in correctness asserts -- CI runs these on every
+# push so bench modules can't silently rot between full runs
+SMOKE_SUITES = ("hotpath", "taskgraph", "tuner")
 
 
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", nargs="*", default=None,
                     choices=SUITES, help="subset of suites")
+    ap.add_argument("--smoke", action="store_true",
+                    help=f"run only the fast smoke suites {SMOKE_SUITES}")
     ap.add_argument("--quiet", action="store_true")
     args = ap.parse_args(argv)
-    todo = args.only or SUITES
+    todo = args.only or (SMOKE_SUITES if args.smoke else SUITES)
     verbose = not args.quiet
 
     print("name,us_per_call,derived")
@@ -53,6 +58,9 @@ def main(argv=None) -> None:
     if "taskgraph" in todo:
         from benchmarks import taskgraph_bench
         taskgraph_bench.run(verbose=verbose)
+    if "tuner" in todo:
+        from benchmarks import tuner_bench
+        tuner_bench.run(verbose=verbose)
     print(f"# benchmarks done in {time.time()-t0:.1f}s")
 
 

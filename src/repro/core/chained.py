@@ -27,6 +27,28 @@ def _chain(X: np.ndarray, target) -> np.ndarray:
     return Xc
 
 
+def make_model(name: str, *, s: int = 2, max_depth: int = 10):
+    """Cascade-model registry shared by every tuner (``core/tuner.py``):
+    "tree" is the paper-faithful chained DT cascade, the rest are the
+    ablations/upgrades benchmarked in benchmarks/ablation_models.py.
+    ``s`` reaches the regression baseline, whose snap-to-class step is the
+    only model that depends on the partition base."""
+    from repro.core.trees import RandomForestClassifier
+    if name == "tree":
+        return ChainedClassifier(
+            lambda: DecisionTreeClassifier(max_depth=max_depth))
+    if name == "forest":
+        return ChainedClassifier(
+            lambda: RandomForestClassifier(n_estimators=30,
+                                           max_depth=max_depth))
+    if name == "independent":
+        return IndependentClassifier(
+            lambda: DecisionTreeClassifier(max_depth=max_depth))
+    if name == "regression":
+        return RegressionBaseline(s=s)
+    raise KeyError(f"unknown cascade model {name!r}")
+
+
 class ChainedClassifier:
     def __init__(self, base_factory=None):
         self.base_factory = base_factory or (

@@ -5,57 +5,63 @@ fit():   execution log -> group by <d,a,e> -> argmin labels -> chained
 predict(): (dataset, algorithm, environment) -> (p_r*, p_c*) and the block
          size S = (n/p_r*, m/p_c*).
 
-The estimator is model-agnostic (`model="tree"|"forest"|"independent"|
-"regression"`): "tree" is the paper-faithful cascade of two decision trees;
-the others are the ablations/upgrades benchmarked in
-benchmarks/ablation_models.py.
-The serving path is batched end to end: ``predict_partitions_batch``
-featurizes and classifies any number of queries in one model pass (the
-chained cascade in core/chained.py is row-batched throughout), and
-``EstimatorService`` fronts a fitted estimator with a shape-bucketed LRU
-memo for repeat traffic.
+Since the tuning-subsystem refactor this module is a compat facade (like
+``data/executor.py`` is for the task-graph runtime): the pipeline itself is
+``core/tuner.py``'s shared :class:`~repro.core.tuner.Tuner`, which
+``BlockSizeEstimator`` instantiates with the paper's power-of-``s`` search
+space and the model registry in ``core/chained.py`` (``"tree"`` is the
+paper-faithful cascade; the others are the ablations benchmarked in
+benchmarks/ablation_models.py).  The public API is unchanged and the
+predictions are bit-identical to the pre-refactor module (parity asserted
+in tests/test_tuner.py).  New: ``refit(new_records)`` folds fresh log
+records incrementally, retraining only when some group's argmin label
+moved.
+
+``EstimatorService`` is the block-size instantiation of the generic
+``TunerService``: a shape-bucketed LRU memo with model-version-aware
+invalidation, so serving a refit estimator never replays stale memos.
 """
 from __future__ import annotations
 
 import math
-from collections import OrderedDict
 
 import numpy as np
 
-from repro.core.chained import (
-    ChainedClassifier,
-    IndependentClassifier,
-    RegressionBaseline,
-)
-from repro.core.features import dataset_features, featurize, vectorize
-from repro.core.log import ExecutionLog
-from repro.core.trees import DecisionTreeClassifier, RandomForestClassifier
+from repro.core.features import dataset_features
+from repro.core.log import canon_value
+from repro.core.tuner import SearchSpace, Tuner, TuneQuery, TunerService
 
-_MODELS = {
-    "tree": lambda: ChainedClassifier(
-        lambda: DecisionTreeClassifier(max_depth=10)),
-    "forest": lambda: ChainedClassifier(
-        lambda: RandomForestClassifier(n_estimators=30, max_depth=10)),
-    "independent": lambda: IndependentClassifier(
-        lambda: DecisionTreeClassifier(max_depth=10)),
-    "regression": lambda: RegressionBaseline(),
-}
+_memo_value = canon_value        # compat alias (pre-refactor name)
 
 
 class BlockSizeEstimator:
     def __init__(self, model: str = "tree", s: int = 2):
         self.model_name = model
         self.s = s
-        self.model = _MODELS[model]()
-        self.feature_order = None
+        self._tuner = Tuner(space=SearchSpace(s=s), model=model)
 
-    def fit(self, log: ExecutionLog):
-        feats, yr, yc = log.training_set()
-        if not feats:
-            raise ValueError("log has no finite-time groups")
-        X, self.feature_order = vectorize(feats)
-        self.model.fit(X, yr, yc)
+    # shared-subsystem internals, exposed read-only for introspection
+    @property
+    def model(self):
+        return self._tuner.model
+
+    @property
+    def feature_order(self):
+        return self._tuner.feature_order
+
+    @property
+    def model_version(self) -> int:
+        return self._tuner.model_version
+
+    def fit(self, log):
+        self._tuner.fit(log)
         return self
+
+    def refit(self, new_records) -> bool:
+        """Incremental refit on fresh records (see ``Tuner.refit``); True
+        iff the model changed -- services watching ``model_version`` drop
+        their memos then."""
+        return self._tuner.refit(new_records)
 
     # ------------------------------------------------------------- predict
     def predict_partitions(self, n_rows: int, n_cols: int, algo: str,
@@ -66,19 +72,10 @@ class BlockSizeEstimator:
     def predict_partitions_batch(self, queries) -> list[tuple]:
         """Vectorized serving path: one featurize + one model pass for many
         ``(n_rows, n_cols, algo, env_features)`` queries."""
-        queries = list(queries)
-        if not queries:
-            return []
-        feats = [featurize(dataset_features(nr, nc), algo, env)
-                 for nr, nc, algo, env in queries]
-        X, _ = vectorize(feats, self.feature_order)
-        E = self.model.predict(X)
-        out = []
-        for (nr, nc, _, _), (er, ec) in zip(queries, E):
-            p_r = int(self.s ** max(int(er), 0))
-            p_c = int(self.s ** max(int(ec), 0))
-            out.append((min(p_r, nr), min(p_c, nc)))
-        return out
+        return self._tuner.predict_batch(
+            TuneQuery(dataset_features(nr, nc), algo, env,
+                      cap_r=nr, cap_c=nc)
+            for nr, nc, algo, env in queries)
 
     def predict_block_size(self, n_rows: int, n_cols: int, algo: str,
                            env_features: dict) -> tuple:
@@ -87,17 +84,7 @@ class BlockSizeEstimator:
         return int(np.ceil(n_rows / p_r)), int(np.ceil(n_cols / p_c))
 
 
-def _memo_value(v):
-    """Canonical memo-key form of an env feature value: floats unify int/
-    float spellings; non-numeric values (e.g. a cluster-name string) fall
-    back to ``repr`` instead of raising."""
-    try:
-        return float(v)
-    except (TypeError, ValueError):
-        return repr(v)
-
-
-class EstimatorService:
+class EstimatorService(TunerService):
     """Serving front-end over a fitted estimator: shape-bucketed LRU memo.
 
     Partition classes are powers of ``s``, so queries are canonicalized to
@@ -107,56 +94,34 @@ class EstimatorService:
     ``predict_partitions_batch`` pass on the canonical shapes.  Results are
     clamped to each query's true shape on the way out, matching
     ``predict_partitions`` whenever the raw class fits the bucket shape.
+    Inherited from ``TunerService``: post-``refit`` memo invalidation and
+    the ``submit()``/``flush()`` micro-batching path.
     """
 
     def __init__(self, estimator: BlockSizeEstimator, maxsize: int = 4096):
+        super().__init__(estimator, maxsize)
         self.estimator = estimator
-        self.maxsize = maxsize
-        self._memo: OrderedDict[tuple, tuple] = OrderedDict()
-        self.hits = 0
-        self.misses = 0
 
     @staticmethod
     def _bucket(n_rows: int, n_cols: int, algo: str, env: dict) -> tuple:
         br = 1 << max(0, math.ceil(math.log2(max(n_rows, 1))))
         bc = 1 << max(0, math.ceil(math.log2(max(n_cols, 1))))
-        return (br, bc, algo, tuple(sorted((k, _memo_value(v))
+        return (br, bc, algo, tuple(sorted((k, canon_value(v))
                                            for k, v in env.items())))
 
-    def predict_partitions_batch(self, queries) -> list[tuple]:
-        """Batch predict with memoization; accepts the same query tuples as
-        ``BlockSizeEstimator.predict_partitions_batch``."""
-        queries = list(queries)
-        keys = [self._bucket(*q) for q in queries]
-        resolved: dict[tuple, tuple] = {}
-        missing: list[tuple] = []
-        for key in keys:
-            if key in resolved:
-                self.hits += 1
-            elif key in self._memo:
-                self._memo.move_to_end(key)
-                resolved[key] = self._memo[key]
-                self.hits += 1
-            else:
-                resolved[key] = ()                 # placeholder; filled below
-                missing.append(key)
-                self.misses += 1
-        if missing:
-            canon = [(br, bc, algo, dict(env))
-                     for br, bc, algo, env in missing]
-            preds = self.estimator.predict_partitions_batch(canon)
-            for key, pred in zip(missing, preds):
-                resolved[key] = pred
-                self._memo[key] = pred
-                if len(self._memo) > self.maxsize:
-                    self._memo.popitem(last=False)
-        out = []
-        for (nr, nc, _, _), key in zip(queries, keys):
-            p_r, p_c = resolved[key]
-            out.append((min(p_r, nr), min(p_c, nc)))
-        return out
+    # --- TunerService hooks: queries are (n_rows, n_cols, algo, env) ---
+    def _key(self, query) -> tuple:
+        return self._bucket(*query)
 
-    @property
-    def hit_rate(self) -> float:
-        total = self.hits + self.misses
-        return self.hits / total if total else 0.0
+    def _canon_query(self, key, query):
+        br, bc, algo, env = key
+        return (br, bc, algo, dict(env))
+
+    def _predict(self, queries):
+        return self.estimator.predict_partitions_batch(queries)
+
+    def _finalize(self, query, pred):
+        p_r, p_c = pred
+        return (min(p_r, query[0]), min(p_c, query[1]))
+
+    predict_partitions_batch = TunerService.predict_batch

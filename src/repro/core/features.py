@@ -40,7 +40,10 @@ def featurize(d: dict, algo: str, e: dict) -> dict:
     return f
 
 
-FEATURE_ORDER: list[str] | None = None
+def featurize_batch(triples) -> list[dict]:
+    """``featurize`` over many ``(dataset_dict, algo, env_dict)`` triples —
+    the single entry point every tuner's serving path funnels through."""
+    return [featurize(d, algo, e) for d, algo, e in triples]
 
 
 def vectorize(feature_dicts: list[dict], order: list[str] | None = None):

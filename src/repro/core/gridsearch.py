@@ -115,7 +115,7 @@ def grid_search(X: np.ndarray, y, algo: str, env: Environment, *, s: int = 2,
                 log: ExecutionLog | None = None,
                 row_only: bool = False, verbose: bool = False,
                 prune_oom: bool = True, reuse_blocks: bool = True,
-                reuse_measurements: bool = False):
+                reuse_measurements: bool = False, store=None):
     """Sweep the (p_r, p_c) grid; returns (log, grid dict).
 
     ``repeats`` re-runs whole cells (best-of) while ``task_repeats``
@@ -132,9 +132,11 @@ def grid_search(X: np.ndarray, y, algo: str, env: Environment, *, s: int = 2,
     :class:`MeasurementCache` over the sweep, executing each unique task
     body/signature once and replaying its measured duration elsewhere.
     Disabling all three reproduces the exhaustive scalar path cell for
-    cell.
+    cell.  ``store`` (a ``data/logstore.py`` LogStore) persists the
+    sweep's records alongside the returned in-memory log.
     """
-    log = log or ExecutionLog()
+    log = log or ExecutionLog(s=s)
+    n0 = len(log.records)
     d = dataset_features(*X.shape)
     e = env.features()
     ps = grid_powers(env.n_workers, s=s, mult=mult)
@@ -161,6 +163,8 @@ def grid_search(X: np.ndarray, y, algo: str, env: Environment, *, s: int = 2,
             if verbose:
                 print(f"  grid {algo} ({p_r},{p_c}): "
                       f"{t if math.isfinite(t) else 'OOM':>8} s", flush=True)
+    if store is not None:
+        store.append(log.records[n0:], source="grid_search")
     return log, grid
 
 

@@ -16,10 +16,9 @@ import math
 
 import numpy as np
 
-from repro.core.chained import ChainedClassifier
 from repro.core.log import ExecutionLog, ExecutionRecord
 from repro.core.roofline import V5E, Hardware
-from repro.core.trees import DecisionTreeClassifier
+from repro.core.tuner import SearchSpace, Tuner, TuneQuery
 from repro.kernels.matmul_blocked import vmem_bytes as mm_vmem
 
 VMEM_BUDGET = 16 * 2**20          # ~16 MiB usable VMEM per core (v5e)
@@ -78,16 +77,18 @@ BK_SWEEP = (128, 256, 512)
 
 
 def grid_search_matmul(m: int, k: int, n: int,
-                       log: ExecutionLog | None = None):
+                       log: ExecutionLog | None = None, *, store=None):
     """Sweep power-of-2 tiles; record modeled times (inf on VMEM OOM).
 
     The whole (bm, bn, bk) cube is scored in a single broadcast evaluation
     of the cost model, and -- unlike the old fixed ``bk`` heuristic -- the
     reduction dimension is swept too.  The grid stays keyed by (bm, bn)
     (the tuner's two predicted exponents) with the best time over bk; the
-    winning bk lands in the record meta.
+    winning bk lands in the record meta.  ``store`` (a
+    ``data/logstore.py`` LogStore) persists the sweep's records.
     """
     log = log or ExecutionLog()
+    n0 = len(log.records)
     d = shape_features(m, k, n)
     bms = np.array(BM_SWEEP)[:, None, None]
     bns = np.array(BN_SWEEP)[None, :, None]
@@ -102,39 +103,46 @@ def grid_search_matmul(m: int, k: int, n: int,
             log.add(ExecutionRecord(d, "matmul_tile", {"vmem_mb": 16},
                                     bm, bn, t,
                                     {"bk": int(bks[0, 0, best_k[i, j]])}))
+    if store is not None:
+        store.append(log.records[n0:], source="kernel_grid")
     return log, grid
 
 
+def _tile_query(m: int, k: int, n: int) -> TuneQuery:
+    return TuneQuery(shape_features(m, k, n), "matmul_tile",
+                     {"vmem_mb": 16}, cap_r=m, cap_c=n)
+
+
 class KernelTuner:
-    """Chained DT over tile exponents (block_m -> block_n)."""
+    """Chained DT over tile exponents (block_m -> block_n) -- a thin
+    instantiation of the shared ``core/tuner.py`` subsystem."""
 
     def __init__(self):
-        self.model = ChainedClassifier(
-            lambda: DecisionTreeClassifier(max_depth=10))
-        self.feature_order = None
+        self.tuner = Tuner(space=SearchSpace(s=2, row="block_m",
+                                             col="block_n"))
 
     def fit(self, log: ExecutionLog):
-        from repro.core.features import vectorize
-        feats, yr, yc = log.training_set()
-        X, self.feature_order = vectorize(feats)
-        self.model.fit(X, yr, yc)
+        self.tuner.fit(log)
         return self
 
+    def refit(self, new_records) -> bool:
+        return self.tuner.refit(new_records)
+
     def predict(self, m: int, k: int, n: int):
-        from repro.core.features import featurize, vectorize
-        f = featurize(shape_features(m, k, n), "matmul_tile",
-                      {"vmem_mb": 16})
-        X, _ = vectorize([f], self.feature_order)
-        er, ec = self.model.predict(X)[0]
-        return min(2 ** int(er), m), min(2 ** int(ec), n)
+        return self.tuner.predict(_tile_query(m, k, n))
+
+    def predict_batch(self, shapes) -> list[tuple[int, int]]:
+        """Tiles for many ``(m, k, n)`` shapes in one cascade pass."""
+        return self.tuner.predict_batch(_tile_query(*s) for s in shapes)
 
 
-def build_training_log(seed: int = 0, n_shapes: int = 40) -> ExecutionLog:
+def build_training_log(seed: int = 0, n_shapes: int = 40, *,
+                       store=None) -> ExecutionLog:
     rng = np.random.default_rng(seed)
     log = ExecutionLog()
     for _ in range(n_shapes):
         m = 2 ** rng.integers(7, 14)
         k = 2 ** rng.integers(7, 13)
         n = 2 ** rng.integers(7, 14)
-        log, _ = grid_search_matmul(int(m), int(k), int(n), log)
+        log, _ = grid_search_matmul(int(m), int(k), int(n), log, store=store)
     return log

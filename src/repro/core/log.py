@@ -3,6 +3,12 @@
 L is a collection of tuples <d, a, e, p_r, p_c, t>.  Grouping by the triple
 <d, a, e> and taking the argmin-time partitioning per group yields the
 training set D = {<features(d,a,e), (p_r*, p_c*)>}.
+
+Serialization is schema-versioned JSONL: ``save`` writes a header line
+(schema version plus the log's partition base ``s``) followed by one record
+per line; ``load`` round-trips the header and still accepts legacy
+headerless files.  The persistent multi-source store built on this format
+lives in ``data/logstore.py``.
 """
 from __future__ import annotations
 
@@ -14,6 +20,31 @@ from pathlib import Path
 import numpy as np
 
 from repro.core.features import featurize
+
+SCHEMA_VERSION = 1
+
+
+def parse_header(obj: dict, path="<log>"):
+    """``None`` if ``obj`` is a record line; otherwise the header's
+    partition base ``s`` (after validating the schema version).  Shared by
+    ``ExecutionLog.load`` and ``data/logstore.py`` so the two readers can
+    never disagree on which files they accept."""
+    if "algo" in obj:
+        return None
+    if obj.get("schema", SCHEMA_VERSION) > SCHEMA_VERSION:
+        raise ValueError(f"log schema {obj['schema']} newer than supported "
+                         f"{SCHEMA_VERSION}: {path}")
+    return int(obj.get("s", 2))
+
+
+def canon_value(v):
+    """Canonical hashable form of a dataset/env feature value: floats unify
+    int/float spellings; non-numeric values (e.g. a cluster-name string)
+    fall back to ``repr`` instead of raising."""
+    try:
+        return round(float(v), 9)
+    except (TypeError, ValueError):
+        return repr(v)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -27,15 +58,32 @@ class ExecutionRecord:
     meta: dict = dataclasses.field(default_factory=dict)
 
     def triple_key(self):
-        d = tuple(sorted((k, round(float(v), 9))
-                         for k, v in self.dataset.items()))
-        e = tuple(sorted((k, round(float(v), 9)) for k, v in self.env.items()))
+        d = tuple(sorted((k, canon_value(v)) for k, v in self.dataset.items()))
+        e = tuple(sorted((k, canon_value(v)) for k, v in self.env.items()))
         return (d, self.algo, e)
+
+    def record_key(self):
+        """Dedup identity of one grid cell: the <d, a, e> group plus the
+        partitioning tried there (``LogStore`` keys appends by this)."""
+        return (*self.triple_key(), self.p_r, self.p_c)
+
+    def to_obj(self) -> dict:
+        return {"dataset": self.dataset, "algo": self.algo, "env": self.env,
+                "p_r": self.p_r, "p_c": self.p_c,
+                "time_s": ("inf" if math.isinf(self.time_s) else self.time_s),
+                "meta": self.meta}
+
+    @classmethod
+    def from_obj(cls, o: dict) -> "ExecutionRecord":
+        t = float("inf") if o["time_s"] == "inf" else float(o["time_s"])
+        return cls(o["dataset"], o["algo"], o["env"],
+                   int(o["p_r"]), int(o["p_c"]), t, o.get("meta", {}))
 
 
 class ExecutionLog:
-    def __init__(self, records=None):
+    def __init__(self, records=None, s: int = 2):
         self.records: list[ExecutionRecord] = list(records or [])
+        self.s = s                # partition base: classes are powers of s
 
     def add(self, rec: ExecutionRecord):
         self.records.append(rec)
@@ -45,12 +93,9 @@ class ExecutionLog:
         path = Path(path)
         path.parent.mkdir(parents=True, exist_ok=True)
         with path.open("w") as f:
+            f.write(json.dumps({"schema": SCHEMA_VERSION, "s": self.s}) + "\n")
             for r in self.records:
-                f.write(json.dumps({
-                    "dataset": r.dataset, "algo": r.algo, "env": r.env,
-                    "p_r": r.p_r, "p_c": r.p_c,
-                    "time_s": ("inf" if math.isinf(r.time_s) else r.time_s),
-                    "meta": r.meta}) + "\n")
+                f.write(json.dumps(r.to_obj()) + "\n")
 
     @classmethod
     def load(cls, path):
@@ -59,10 +104,11 @@ class ExecutionLog:
             if not line.strip():
                 continue
             o = json.loads(line)
-            t = float("inf") if o["time_s"] == "inf" else float(o["time_s"])
-            out.add(ExecutionRecord(o["dataset"], o["algo"], o["env"],
-                                    int(o["p_r"]), int(o["p_c"]), t,
-                                    o.get("meta", {})))
+            s = parse_header(o, path)
+            if s is not None:
+                out.s = s
+                continue
+            out.add(ExecutionRecord.from_obj(o))
         return out
 
     # --------------------------------------------------------- extraction
@@ -81,11 +127,15 @@ class ExecutionLog:
             out.append(min(finite, key=lambda r: r.time_s))
         return out
 
-    def training_set(self):
-        """-> (feature_dicts, y_r exponents, y_c exponents, s)."""
+    def training_set(self, s: int | None = None):
+        """-> ``(feature_dicts, y_r, y_c)``: one entry per finite-time
+        group, labels as log-base-``s`` exponents of the argmin partition
+        counts (``s`` defaults to the log's own base)."""
+        s = self.s if s is None else s
         feats, yr, yc = [], [], []
+        logs = math.log(s)
         for r in self.best_per_group():
             feats.append(featurize(r.dataset, r.algo, r.env))
-            yr.append(int(round(np.log2(r.p_r))))
-            yc.append(int(round(np.log2(r.p_c))))
+            yr.append(int(round(np.log(r.p_r) / logs)))
+            yc.append(int(round(np.log(r.p_c) / logs)))
         return feats, np.array(yr), np.array(yc)

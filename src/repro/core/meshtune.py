@@ -22,6 +22,7 @@ from repro.core.chained import ChainedClassifier
 from repro.core.log import ExecutionLog, ExecutionRecord
 from repro.core.roofline import V5E, cell_roofline
 from repro.core.trees import DecisionTreeClassifier
+from repro.core.tuner import SearchSpace, Tuner, TuneQuery
 
 
 def arch_features(cfg: ModelConfig, shape: ShapeConfig) -> dict:
@@ -59,9 +60,11 @@ def mesh_grid(chips: int = 256, s: int = 2):
 
 def grid_search_cell(cfg: ModelConfig, shape: ShapeConfig, *,
                      chips: int = 256, log: ExecutionLog | None = None,
-                     algo_name: str = "meshtune"):
-    """Roofline-modeled grid over (dp, mb); infeasible cells score inf."""
+                     algo_name: str = "meshtune", store=None):
+    """Roofline-modeled grid over (dp, mb); infeasible cells score inf.
+    ``store`` (a ``data/logstore.py`` LogStore) persists the sweep."""
     log = log or ExecutionLog()
+    n0 = len(log.records)
     dps, mbs = mesh_grid(chips)
     d_feat = arch_features(cfg, shape)
     env = {"chips": chips}
@@ -83,33 +86,35 @@ def grid_search_cell(cfg: ModelConfig, shape: ShapeConfig, *,
             log.add(ExecutionRecord(d_feat, algo_name, env,
                                     dp, max(mb, 1), t,
                                     {"tp": tp, "dominant": r["dominant"]}))
+    if store is not None:
+        store.append(log.records[n0:], source="mesh_grid")
     return log, grid
 
 
 class MeshTuner:
-    """Chained DT_r(dp) -> DT_c(mb), exactly the paper's cascade."""
+    """Chained DT_r(dp) -> DT_c(mb), exactly the paper's cascade -- a thin
+    instantiation of the shared ``core/tuner.py`` subsystem (deeper trees
+    via a custom model factory); the deployment-side feasibility snap stays
+    here, outside the protocol."""
 
     def __init__(self, chips: int = 256):
         self.chips = chips
-        self.model = ChainedClassifier(
-            lambda: DecisionTreeClassifier(max_depth=12))
-        self.feature_order = None
+        self.tuner = Tuner(
+            space=SearchSpace(s=2, row="dp", col="microbatch"),
+            model_factory=lambda: ChainedClassifier(
+                lambda: DecisionTreeClassifier(max_depth=12)))
 
     def fit(self, log: ExecutionLog):
-        from repro.core.features import vectorize
-        feats, yr, yc = log.training_set()
-        X, self.feature_order = vectorize(feats)
-        self.model.fit(X, yr, yc)
+        self.tuner.fit(log)
         return self
 
+    def refit(self, new_records) -> bool:
+        return self.tuner.refit(new_records)
+
     def predict(self, cfg: ModelConfig, shape: ShapeConfig):
-        from repro.core.features import featurize, vectorize
-        f = featurize(arch_features(cfg, shape), "meshtune",
-                      {"chips": self.chips})
-        X, _ = vectorize([f], self.feature_order)
-        er, ec = self.model.predict(X)[0]
-        dp = min(2 ** max(int(er), 0), self.chips)
-        mb = 2 ** max(int(ec), 0)
+        dp, mb = self.tuner.predict(
+            TuneQuery(arch_features(cfg, shape), "meshtune",
+                      {"chips": self.chips}, cap_r=self.chips))
         if shape.kind != "train":
             mb = 1
         # snap to the nearest *feasible* cell (batch divisibility + the
@@ -142,7 +147,7 @@ class MeshTuner:
 
 
 def tune_all(archs, shapes=("train_4k", "prefill_32k", "decode_32k"),
-             chips: int = 256):
+             chips: int = 256, *, store=None):
     """Build the full modeled execution log over the assigned cells."""
     log = ExecutionLog()
     grids = {}
@@ -152,6 +157,6 @@ def tune_all(archs, shapes=("train_4k", "prefill_32k", "decode_32k"),
             if sn in cfg.skip_shapes:
                 continue
             log, grid = grid_search_cell(cfg, SHAPES[sn], chips=chips,
-                                         log=log)
+                                         log=log, store=store)
             grids[(arch, sn)] = grid
     return log, grids

@@ -1,0 +1,104 @@
+"""Persistent execution-log store: append-only, schema-versioned JSONL.
+
+One ``LogStore`` accumulates training data from every sweep family —
+``core/gridsearch.py`` ds-array sweeps, ``core/kerneltune.py`` tile
+cost-model grids, ``core/meshtune.py`` roofline mesh grids — into a single
+file under ``artifacts/`` (all three sweeps take a ``store=`` argument).
+Appends are deduplicated by :meth:`ExecutionRecord.record_key` (the
+<d, a, e> group plus the partitioning tried), so re-running a sweep is
+idempotent and merging overlapping logs never double-counts a cell.
+Records for one tuner are pulled back out with ``load(algos=...)``;
+``Tuner.refit`` consumes the same record stream incrementally.
+
+File layout: a header line ``{"schema": 1, "kind": "logstore", "s": 2}``
+followed by one record object per line, each carrying the ``source`` tag
+it was appended under.  Legacy headerless ``ExecutionLog.save`` files are
+readable (treated as schema 1, ``s=2``).
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from repro.core.log import (SCHEMA_VERSION, ExecutionLog, ExecutionRecord,
+                            parse_header)
+
+
+class LogStore:
+    def __init__(self, path, s: int = 2):
+        self.path = Path(path)
+        self.s = s
+        self._records: list[ExecutionRecord] = []
+        self._sources: list[str | None] = []
+        self._keys: set = set()
+        if self.path.exists():
+            self._read_existing()
+        else:
+            self.path.parent.mkdir(parents=True, exist_ok=True)
+            self.path.write_text(json.dumps(
+                {"schema": SCHEMA_VERSION, "kind": "logstore",
+                 "s": self.s}) + "\n")
+
+    def _read_existing(self):
+        for line in self.path.read_text().splitlines():
+            if not line.strip():
+                continue
+            o = json.loads(line)
+            s = parse_header(o, self.path)
+            if s is not None:                        # header line
+                self.s = s
+                continue
+            rec = ExecutionRecord.from_obj(o)
+            key = rec.record_key()
+            if key in self._keys:                    # duplicate on disk
+                continue
+            self._keys.add(key)
+            self._records.append(rec)
+            self._sources.append(o.get("source"))
+
+    # ------------------------------------------------------------- append
+    def append(self, records, source: str | None = None) -> int:
+        """Append records not already present (by ``record_key``); returns
+        the number of newly persisted records."""
+        if isinstance(records, ExecutionLog):
+            records = records.records
+        fresh = []
+        for rec in records:
+            key = rec.record_key()
+            if key in self._keys:
+                continue
+            self._keys.add(key)
+            fresh.append(rec)
+        if fresh:
+            with self.path.open("a") as f:
+                for rec in fresh:
+                    obj = rec.to_obj()
+                    if source is not None:
+                        obj["source"] = source
+                    f.write(json.dumps(obj) + "\n")
+            self._records.extend(fresh)
+            self._sources.extend([source] * len(fresh))
+        return len(fresh)
+
+    merge = append                       # merging a log IS a deduped append
+
+    # --------------------------------------------------------------- read
+    def load(self, algos=None, source: str | None = None) -> ExecutionLog:
+        """Materialize an ``ExecutionLog`` view, optionally filtered to a
+        set of algorithm names and/or one append source."""
+        if isinstance(algos, str):
+            algos = (algos,)
+        recs = [r for r, src in zip(self._records, self._sources)
+                if (algos is None or r.algo in algos)
+                and (source is None or src == source)]
+        return ExecutionLog(recs, s=self.s)
+
+    def sources(self) -> dict:
+        """source tag -> record count (None = untagged appends)."""
+        out: dict = {}
+        for src in self._sources:
+            out[src] = out.get(src, 0) + 1
+        return out
+
+    def __len__(self) -> int:
+        return len(self._records)

@@ -1,0 +1,135 @@
+"""One CLI driving all three tuners through the shared tuning subsystem.
+
+A dry run of the whole pipeline at small scale: each tuner family sweeps
+its grid (ds-array task-graph runs, kernel tile cost-model cubes, roofline
+mesh cells), persists the records into ONE schema-versioned ``LogStore``
+under ``artifacts/``, fits through the shared ``Tuner`` protocol, and
+reports predictions.  ``--refit-demo`` then appends label-shifting records
+and shows the incremental-refit + service-invalidation contract end to
+end (DESIGN.md §8).
+
+    python -m repro.launch.tune                    # all three tuners
+    python -m repro.launch.tune --skip mesh        # subset
+    python -m repro.launch.tune --refit-demo
+
+Re-running is idempotent: the store dedups records by (group, partition)
+key, so repeated sweeps append nothing.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from pathlib import Path
+
+import numpy as np
+
+ART = Path(__file__).resolve().parents[3] / "artifacts"
+
+
+def _banner(msg: str):
+    print(f"\n== {msg}", flush=True)
+
+
+def tune_dsarray(store, *, refit_demo: bool = False):
+    """Paper pipeline: real (modeled-makespan) grid searches -> store ->
+    BlockSizeEstimator -> EstimatorService."""
+    from repro.core.estimator import BlockSizeEstimator, EstimatorService
+    from repro.core.gridsearch import grid_search
+    from repro.data.datasets import gaussian_blobs
+    from repro.data.executor import Environment
+
+    _banner("ds-array block sizes (core/estimator.py)")
+    env = Environment(n_workers=4, mem_limit_mb=64.0)
+    t0 = time.time()
+    for i, (n, m, algo) in enumerate([(512, 32, "kmeans"), (1024, 16, "rf"),
+                                      (2048, 8, "kmeans"), (256, 64, "pca")]):
+        X, y = gaussian_blobs(n, m, seed=10 + i)
+        grid_search(X, y, algo, env, mult=1, store=store)
+    log = store.load(algos=("kmeans", "rf", "pca"))
+    est = BlockSizeEstimator("tree").fit(log)
+    svc = EstimatorService(est)
+    print(f"  swept+fit in {time.time()-t0:.1f}s on "
+          f"{len(log.records)} records")
+    for nr, nc in ((1024, 32), (4096, 8)):
+        pr, pc = svc.predict((nr, nc, "kmeans", env.features()))
+        print(f"  kmeans {nr}x{nc}: p=({pr},{pc}) "
+              f"block={int(np.ceil(nr/pr))}x{int(np.ceil(nc/pc))}")
+
+    if refit_demo:
+        from repro.core.log import ExecutionRecord
+        _banner("refit demo: shifted labels invalidate the service memo")
+        before = svc.predict((1024, 32, "kmeans", env.features()))
+        # a new, much faster measurement at a different partitioning for
+        # every kmeans group -> argmin labels move -> retrain
+        shifted = [ExecutionRecord(r.dataset, r.algo, r.env,
+                                   4 if r.p_r == 1 else 1, r.p_c, 1e-9)
+                   for r in log.best_per_group() if r.algo == "kmeans"]
+        retrained = est.refit(shifted)
+        after = svc.predict((1024, 32, "kmeans", env.features()))
+        print(f"  retrained={retrained} version={est.model_version} "
+              f"invalidations={svc.invalidations}")
+        print(f"  prediction before={before} after={after}")
+    return est
+
+
+def tune_kernel(store):
+    """Tile exponents from the broadcast cost-model grids."""
+    from repro.core.kerneltune import KernelTuner, build_training_log
+
+    _banner("Pallas matmul tiles (core/kerneltune.py)")
+    t0 = time.time()
+    build_training_log(n_shapes=12, store=store)
+    tun = KernelTuner().fit(store.load(algos="matmul_tile"))
+    print(f"  swept+fit in {time.time()-t0:.1f}s on "
+          f"{len(store.load(algos='matmul_tile').records)} records")
+    batch = tun.predict_batch([(4096, 4096, 4096), (8192, 1024, 2048),
+                               (512, 512, 512)])
+    for (m, k, n), (bm, bn) in zip(
+            [(4096, 4096, 4096), (8192, 1024, 2048), (512, 512, 512)], batch):
+        print(f"  matmul {m}x{k}x{n}: block_m={bm} block_n={bn}")
+    return tun
+
+
+def tune_mesh(store, chips: int):
+    """(dp, microbatch) cells from the roofline grids."""
+    from repro.configs import SHAPES, get_config
+    from repro.core.meshtune import MeshTuner, tune_all
+
+    _banner(f"mesh (dp, microbatch) over {chips} chips (core/meshtune.py)")
+    t0 = time.time()
+    tune_all(["yi-6b", "mamba2-370m", "mixtral-8x7b"], shapes=("train_4k",),
+             chips=chips, store=store)
+    tun = MeshTuner(chips).fit(store.load(algos="meshtune"))
+    print(f"  swept+fit in {time.time()-t0:.1f}s on "
+          f"{len(store.load(algos='meshtune').records)} records")
+    for arch in ("deepseek-7b",):
+        dp, tp, mb = tun.predict(get_config(arch), SHAPES["train_4k"])
+        print(f"  {arch} train_4k: dp={dp} tp={tp} microbatches={mb}")
+    return tun
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(
+        description="drive all three tuners through the shared subsystem")
+    ap.add_argument("--store", default=str(ART / "tune_store.jsonl"),
+                    help="LogStore path (shared by every tuner family)")
+    ap.add_argument("--skip", nargs="*", default=[],
+                    choices=["ds", "kernel", "mesh"])
+    ap.add_argument("--chips", type=int, default=64)
+    ap.add_argument("--refit-demo", action="store_true")
+    args = ap.parse_args(argv)
+
+    from repro.data.logstore import LogStore
+    store = LogStore(args.store)
+    if "ds" not in args.skip:
+        tune_dsarray(store, refit_demo=args.refit_demo)
+    if "kernel" not in args.skip:
+        tune_kernel(store)
+    if "mesh" not in args.skip:
+        tune_mesh(store, args.chips)
+    _banner(f"store {store.path}: {len(store)} records by source "
+            f"{store.sources()}")
+
+
+if __name__ == "__main__":
+    main()

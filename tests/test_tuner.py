@@ -1,0 +1,405 @@
+"""Shared tuning subsystem: protocol parity with the pre-refactor modules,
+LogStore persistence, incremental refit, and refit-aware serving."""
+import json
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.chained import ChainedClassifier, make_model
+from repro.core.estimator import BlockSizeEstimator, EstimatorService
+from repro.core.features import dataset_features, featurize, vectorize
+from repro.core.log import ExecutionLog, ExecutionRecord
+from repro.core.trees import DecisionTreeClassifier
+from repro.core.tuner import (ArgminLabeler, SearchSpace, Tuner, TuneQuery,
+                              TunerService)
+from repro.data.logstore import LogStore
+
+
+def synthetic_log(algos=("kmeans", "rf"), sizes=(256, 512, 1024, 2048, 4096),
+                  seed=0):
+    log = ExecutionLog()
+    rng = np.random.default_rng(seed)
+    for rows in sizes:
+        for algo in algos:
+            best_pr = max(1, rows // 512)
+            best_pc = 2 if algo == "kmeans" else 1
+            for pr in (1, 2, 4, 8):
+                for pc in (1, 2, 4):
+                    t = abs(np.log2(pr) - np.log2(best_pr)) \
+                        + abs(np.log2(pc) - np.log2(best_pc)) \
+                        + 0.01 * rng.random()
+                    log.add(ExecutionRecord(
+                        {"rows": rows, "cols": 64, "log_rows": np.log2(rows)},
+                        algo, {"n_workers": 4}, pr, pc, t))
+    return log
+
+
+def _old_cascade_fit(log, max_depth=10):
+    """The exact pipeline all three pre-refactor tuners hand-rolled."""
+    feats, yr, yc = log.training_set()
+    X, order = vectorize(feats)
+    model = ChainedClassifier(
+        lambda: DecisionTreeClassifier(max_depth=max_depth)).fit(X, yr, yc)
+    return model, order
+
+
+# ------------------------------------------------------------------ parity
+def test_estimator_parity_with_prerefactor_module():
+    log = synthetic_log()
+    model, order = _old_cascade_fit(log)
+    rng = np.random.default_rng(1)
+    qs = [(int(2 ** rng.integers(8, 14)), 64,
+           "kmeans" if rng.random() < 0.5 else "rf", {"n_workers": 4})
+          for _ in range(200)]
+    feats = [featurize(dataset_features(nr, nc), a, e) for nr, nc, a, e in qs]
+    E = model.predict(vectorize(feats, order)[0])
+    old = [(min(int(2 ** max(int(er), 0)), nr),
+            min(int(2 ** max(int(ec), 0)), nc))
+           for (nr, nc, _, _), (er, ec) in zip(qs, E)]
+    assert BlockSizeEstimator("tree").fit(log) \
+        .predict_partitions_batch(qs) == old
+
+
+def test_kernel_parity_with_prerefactor_module():
+    from repro.core.kerneltune import (KernelTuner, build_training_log,
+                                       shape_features)
+    log = build_training_log(n_shapes=8)
+    model, order = _old_cascade_fit(log)
+    rng = np.random.default_rng(2)
+    shapes = [(int(2 ** rng.integers(7, 13)), int(2 ** rng.integers(7, 12)),
+               int(2 ** rng.integers(7, 13))) for _ in range(40)]
+    feats = [featurize(shape_features(m, k, n), "matmul_tile",
+                       {"vmem_mb": 16}) for m, k, n in shapes]
+    E = model.predict(vectorize(feats, order)[0])
+    old = [(min(int(2 ** int(er)), m), min(int(2 ** int(ec)), n))
+           for (m, k, n), (er, ec) in zip(shapes, E)]
+    tun = KernelTuner().fit(log)
+    assert tun.predict_batch(shapes) == old
+    assert tun.predict(*shapes[0]) == old[0]
+
+
+def test_mesh_parity_with_prerefactor_cascade():
+    from repro.configs import SHAPES, get_config
+    from repro.core.meshtune import MeshTuner, arch_features, tune_all
+    log, _ = tune_all(["yi-6b", "mamba2-370m"], shapes=("train_4k",),
+                      chips=64)
+    model, order = _old_cascade_fit(log, max_depth=12)
+    tun = MeshTuner(64).fit(log)
+    for arch in ("deepseek-7b", "mixtral-8x7b"):
+        f = featurize(arch_features(get_config(arch), SHAPES["train_4k"]),
+                      "meshtune", {"chips": 64})
+        old_e = model.predict(vectorize([f], order)[0])
+        new_e = tun.tuner.model.predict(
+            vectorize([f], tun.tuner.feature_order)[0])
+        assert np.array_equal(old_e, new_e)
+
+
+def test_labeler_pairs_match_training_set():
+    log = synthetic_log()
+    lab = ArgminLabeler(SearchSpace(s=2))
+    lab.observe(log.records)
+    feats, yr, yc = lab.pairs()
+    feats0, yr0, yc0 = log.training_set()
+    assert feats == feats0
+    assert np.array_equal(yr, yr0) and np.array_equal(yc, yc0)
+
+
+# ---------------------------------------------------------- log satellites
+def test_triple_key_tolerates_non_numeric_values():
+    """Regression: ``float(v)`` raised on e.g. cluster-name strings."""
+    r1 = ExecutionRecord({"rows": 128, "name": "census"}, "pca",
+                         {"n_workers": 2, "cluster": "mn4-login1"}, 2, 1, 1.0)
+    r2 = ExecutionRecord({"rows": 128, "name": "census"}, "pca",
+                         {"n_workers": 2, "cluster": "mn4-login2"}, 2, 1, 2.0)
+    k1, k2 = r1.triple_key(), r2.triple_key()
+    assert k1 != k2                        # distinct strings, distinct groups
+    assert r1.triple_key() == ExecutionRecord(
+        dict(r1.dataset), "pca", dict(r1.env), 4, 1, 9.0).triple_key()
+    log = ExecutionLog([r1, r2])
+    assert len(log.groups()) == 2 and len(log.best_per_group()) == 2
+
+
+def test_training_set_threads_the_partition_base():
+    log = ExecutionLog(s=3)
+    for rows, best in ((100, 3), (200, 9)):
+        for pr in (1, 3, 9, 27):
+            log.add(ExecutionRecord({"rows": rows, "cols": 8}, "pca",
+                                    {"n_workers": 3}, pr, 1,
+                                    abs(pr - best) + 0.1))
+    feats, yr, yc = log.training_set()            # base from the log itself
+    assert sorted(yr.tolist()) == [1, 2] and yc.tolist() == [0, 0]
+    _, yr2, _ = log.training_set(s=9)             # explicit override
+    assert sorted(yr2.tolist()) == [0, 1]
+
+
+def test_log_save_load_roundtrips_s(tmp_path):
+    log = ExecutionLog([ExecutionRecord({"rows": 9}, "pca", {}, 3, 1, 1.0)],
+                       s=3)
+    p = tmp_path / "log.jsonl"
+    log.save(p)
+    back = ExecutionLog.load(p)
+    assert back.s == 3 and back.records == log.records
+    header = json.loads(p.read_text().splitlines()[0])
+    assert header["schema"] == 1 and header["s"] == 3
+
+
+def test_log_load_accepts_legacy_headerless_files(tmp_path):
+    p = tmp_path / "legacy.jsonl"
+    p.write_text(json.dumps({"dataset": {"rows": 4}, "algo": "rf", "env": {},
+                             "p_r": 2, "p_c": 1, "time_s": "inf"}) + "\n")
+    back = ExecutionLog.load(p)
+    assert back.s == 2 and math.isinf(back.records[0].time_s)
+
+
+def test_estimator_respects_log_base_s():
+    log = ExecutionLog(s=3)
+    for rows, best in ((100, 3), (200, 9), (400, 27)):
+        for pr in (1, 3, 9, 27):
+            log.add(ExecutionRecord({"rows": rows, "cols": 8}, "pca",
+                                    {"n_workers": 3}, pr, 1,
+                                    abs(math.log(pr / best)) + 0.1))
+    est = BlockSizeEstimator("tree", s=3).fit(log)
+    pr, pc = est.predict_partitions(200, 8, "pca", {"n_workers": 3})
+    assert pr == 9 and pc == 1             # a power of 3, not of 2
+
+
+# ----------------------------------------------------------------- LogStore
+def _mk_rec(pr, pc, t, rows=100, algo="kmeans"):
+    return ExecutionRecord({"rows": rows, "cols": 10}, algo,
+                           {"n_workers": 4}, pr, pc, t)
+
+
+def test_logstore_appends_and_dedups(tmp_path):
+    store = LogStore(tmp_path / "store.jsonl")
+    assert store.append([_mk_rec(1, 1, 5.0), _mk_rec(2, 1, 1.0)]) == 2
+    # same cells again (even with different times): deduped by record key
+    assert store.append([_mk_rec(1, 1, 7.0), _mk_rec(2, 1, 0.5)]) == 0
+    assert store.append([_mk_rec(4, 1, 3.0)]) == 1
+    assert len(store) == 3
+    # file is append-only JSONL with one header line
+    lines = (tmp_path / "store.jsonl").read_text().splitlines()
+    assert json.loads(lines[0])["kind"] == "logstore"
+    assert len(lines) == 4
+
+
+def test_logstore_merges_sources_and_filters(tmp_path):
+    store = LogStore(tmp_path / "store.jsonl")
+    store.append([_mk_rec(1, 1, 5.0, algo="kmeans")], source="grid_search")
+    store.append([_mk_rec(64, 64, 2.0, algo="matmul_tile")],
+                 source="kernel_grid")
+    store.append([_mk_rec(8, 2, 3.0, algo="meshtune")], source="mesh_grid")
+    assert store.sources() == {"grid_search": 1, "kernel_grid": 1,
+                               "mesh_grid": 1}
+    assert [r.algo for r in store.load(algos="matmul_tile").records] \
+        == ["matmul_tile"]
+    assert len(store.load(source="mesh_grid").records) == 1
+    assert len(store.load().records) == 3
+
+
+def test_logstore_reload_preserves_dedup_state(tmp_path):
+    path = tmp_path / "store.jsonl"
+    LogStore(path).append([_mk_rec(1, 1, 5.0)], source="grid_search")
+    store = LogStore(path)                        # fresh handle, same file
+    assert len(store) == 1
+    assert store.append([_mk_rec(1, 1, 5.0)]) == 0      # still deduped
+    assert store.append([_mk_rec(2, 2, 1.0)]) == 1
+    assert store.sources() == {"grid_search": 1, None: 1}
+
+
+def test_logstore_rejects_newer_schema(tmp_path):
+    path = tmp_path / "store.jsonl"
+    path.write_text(json.dumps({"schema": 99, "kind": "logstore"}) + "\n")
+    with pytest.raises(ValueError, match="schema 99"):
+        LogStore(path)
+
+
+def test_gridsearch_sweeps_persist_into_one_store(tmp_path):
+    from repro.core.gridsearch import grid_search
+    from repro.core.kerneltune import grid_search_matmul
+    from repro.data.datasets import gaussian_blobs
+    from repro.data.executor import Environment
+    store = LogStore(tmp_path / "store.jsonl")
+    X, y = gaussian_blobs(128, 16, seed=0)
+    _, grid = grid_search(X, y, "kmeans", Environment(n_workers=2), mult=1,
+                          store=store)
+    grid_search_matmul(1024, 1024, 1024, store=store)
+    srcs = store.sources()
+    assert srcs["grid_search"] == len(grid) and srcs["kernel_grid"] > 0
+    # re-running the identical sweep appends nothing (dedup by record key)
+    n = len(store)
+    grid_search_matmul(1024, 1024, 1024, store=store)
+    assert len(store) == n
+    # and the per-tuner views train fine
+    assert BlockSizeEstimator("tree").fit(store.load(algos="kmeans"))
+
+
+# ------------------------------------------------------------------- refit
+def test_refit_skips_retrain_when_labels_unchanged():
+    est = BlockSizeEstimator("tree").fit(synthetic_log())
+    v0 = est.model_version
+    log = synthetic_log()
+    # noisier re-measurements of the argmin cells: labels cannot move
+    same = [ExecutionRecord(r.dataset, r.algo, r.env, r.p_r, r.p_c,
+                            r.time_s * 2.0) for r in log.best_per_group()]
+    assert est.refit(same) is False
+    assert est.model_version == v0
+    # a better time at the SAME partitioning is not a label change either
+    better = [ExecutionRecord(r.dataset, r.algo, r.env, r.p_r, r.p_c,
+                              r.time_s / 2) for r in log.best_per_group()]
+    assert est.refit(better) is False and est.model_version == v0
+    # an all-OOM group adds no label
+    assert est.refit([_mk_rec(1, 1, float("inf"), rows=7777)]) is False
+
+
+def test_refit_retrains_on_label_shift_and_changes_predictions():
+    est = BlockSizeEstimator("tree").fit(synthetic_log())
+    q = (1024, 64, "kmeans", {"n_workers": 4})
+    before = est.predict_partitions(*q)
+    v0 = est.model_version
+    shifted = [ExecutionRecord(r.dataset, r.algo, r.env, 8, 4, 1e-9)
+               for r in synthetic_log().best_per_group()]
+    assert est.refit(shifted) is True
+    assert est.model_version == v0 + 1
+    after = est.predict_partitions(*q)
+    assert after == (8, 4) and after != before
+
+
+def test_fit_resets_prior_state_like_prerefactor_modules():
+    """fit() trains on the given log alone (refit accumulates): fitting A
+    then B must equal fitting B from scratch, and refitting an empty log
+    after a fit must still raise."""
+    log_a = synthetic_log(algos=("kmeans",), seed=0)
+    log_b = synthetic_log(algos=("rf",), sizes=(256, 512, 1024), seed=1)
+    refit_twice = BlockSizeEstimator("tree").fit(log_a).fit(log_b)
+    fresh = BlockSizeEstimator("tree").fit(log_b)
+    qs = [(r, 64, "rf", {"n_workers": 4}) for r in (256, 512, 1024)]
+    assert refit_twice.predict_partitions_batch(qs) \
+        == fresh.predict_partitions_batch(qs)
+    with pytest.raises(ValueError, match="no finite-time groups"):
+        refit_twice.fit(ExecutionLog())
+
+
+def test_service_flush_failure_keeps_queue_for_retry():
+    tun = Tuner()
+    svc = TunerService(tun)
+    q = TuneQuery({"rows": 1024, "cols": 64, "log_rows": 10.0}, "kmeans",
+                  {"n_workers": 4})
+    handle = svc.submit(q)
+    with pytest.raises(RuntimeError, match="before fit"):
+        svc.flush()                       # unfitted backend: flush fails...
+    assert svc.pending == 1               # ...but the submission survives
+    tun.fit(synthetic_log())
+    assert svc.flush() == [tun.predict(q)]
+    assert handle.result() == tun.predict(q)
+
+
+def test_tuner_refit_before_fit_trains():
+    tun = Tuner(space=SearchSpace(s=2))
+    assert tun.refit(synthetic_log().records) is True
+    assert tun.model is not None and tun.model_version == 1
+
+
+def test_tuner_incremental_equals_full_fit():
+    """Folding the log in chunks yields the same model as one fit."""
+    log = synthetic_log()
+    full = Tuner().fit(ExecutionLog(log.records))
+    inc = Tuner()
+    third = len(log.records) // 3
+    inc.refit(log.records[:third])
+    inc.refit(log.records[third:2 * third])
+    inc.refit(log.records[2 * third:])
+    qs = [TuneQuery({"rows": r, "cols": 64, "log_rows": np.log2(r)},
+                    "kmeans", {"n_workers": 4}) for r in (256, 1024, 4096)]
+    assert full.predict_batch(qs) == inc.predict_batch(qs)
+
+
+# ----------------------------------------------------------- TunerService
+def _service(maxsize=4096):
+    est = BlockSizeEstimator("tree").fit(synthetic_log())
+    return est, EstimatorService(est, maxsize=maxsize)
+
+
+def test_service_lru_evicts_at_maxsize():
+    est, svc = _service(maxsize=2)
+    qs = [(256, 64, "kmeans", {"n_workers": 4}),
+          (512, 64, "kmeans", {"n_workers": 4}),
+          (1024, 64, "kmeans", {"n_workers": 4})]
+    for q in qs:
+        svc.predict_partitions_batch([q])
+    assert len(svc._memo) == 2 and svc.misses == 3 and svc.hits == 0
+    # qs[0] was evicted (LRU): asking again is a miss...
+    svc.predict_partitions_batch([qs[0]])
+    assert svc.misses == 4
+    # ...which in turn evicted qs[1]; qs[2] is still memoized
+    svc.predict_partitions_batch([qs[2]])
+    assert svc.hits == 1 and svc.misses == 4
+
+
+def test_service_hit_rate_accounting():
+    est, svc = _service()
+    q = (256, 64, "kmeans", {"n_workers": 4})
+    assert svc.hit_rate == 0.0                      # no traffic yet
+    svc.predict_partitions_batch([q])
+    assert (svc.hits, svc.misses) == (0, 1) and svc.hit_rate == 0.0
+    svc.predict_partitions_batch([q, q, q])
+    # one memo hit + two duplicate-in-batch hits
+    assert (svc.hits, svc.misses) == (3, 1)
+    assert svc.hit_rate == pytest.approx(0.75)
+    assert svc.predict_partitions_batch([q]) \
+        == est.predict_partitions_batch([q])
+
+
+def test_service_refit_invalidates_memo():
+    """The acceptance-criterion test: predict -> refit on shifted labels ->
+    predict must return the new label, never the stale memo."""
+    est, svc = _service()
+    q = (1024, 64, "kmeans", {"n_workers": 4})
+    before = svc.predict_partitions_batch([q])[0]
+    shifted = [ExecutionRecord(r.dataset, r.algo, r.env, 8, 4, 1e-9)
+               for r in synthetic_log().best_per_group()]
+    assert est.refit(shifted) is True
+    after = svc.predict_partitions_batch([q])[0]
+    assert after == (8, 4) and after != before
+    assert after == est.predict_partitions(*q)      # not the memo
+    assert svc.invalidations == 1
+    # a no-op refit does NOT flush the memo
+    hits0 = svc.hits
+    svc.predict_partitions_batch([q])
+    assert svc.hits == hits0 + 1 and svc.invalidations == 1
+
+
+def test_service_submit_flush_micro_batching():
+    est, svc = _service()
+    qs = [(256 * (i % 3 + 1), 64, "kmeans", {"n_workers": 4})
+          for i in range(9)]
+    handles = [svc.submit(q) for q in qs]
+    assert svc.pending == 9
+    with pytest.raises(RuntimeError, match="pending"):
+        handles[0].result()
+    results = svc.flush()
+    assert svc.pending == 0 and svc.flush() == []
+    assert [h.result() for h in handles] == results
+    assert results == est.predict_partitions_batch(qs)
+
+
+def test_generic_tuner_service_over_tune_queries():
+    tun = Tuner().fit(synthetic_log())
+    svc = TunerService(tun, maxsize=8)
+    q = TuneQuery({"rows": 1024, "cols": 64, "log_rows": 10.0}, "kmeans",
+                  {"n_workers": 4}, cap_r=1024, cap_c=64)
+    assert svc.predict(q) == tun.predict(q)
+    assert svc.predict(q) == svc.predict(q) and svc.hits >= 2
+
+
+# ------------------------------------------------------------- registry
+def test_make_model_registry_covers_all_variants():
+    log = synthetic_log()
+    X, _ = vectorize(log.training_set()[0])
+    _, yr, yc = log.training_set()
+    for name in ("tree", "forest", "independent", "regression"):
+        model = make_model(name)
+        preds = model.fit(X, yr, yc).predict(X)
+        assert preds.shape == (len(X), 2)
+    with pytest.raises(KeyError):
+        make_model("boosted")
