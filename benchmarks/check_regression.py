@@ -1,0 +1,142 @@
+"""CI benchmark-regression gate.
+
+Compares a fresh ``python -m benchmarks.run --smoke`` output
+(``BENCH_hotpath.json`` / ``BENCH_taskgraph.json`` / ``BENCH_tuner.json``
+/ ``BENCH_eval.json`` at the repo root) against the committed baselines in
+``benchmarks/baselines/`` and exits non-zero on any regression.
+
+Each baseline metric carries the recorded value plus a rule, because CI
+runners differ wildly in absolute speed: structural metrics (task counts,
+pruned cells, parity booleans, invalidation counts) must match exactly;
+rates get an absolute tolerance; measured speedup ratios only need to
+retain a fraction of the baseline.  Raw wall-clock metrics are never
+gated.
+
+Rules (``b`` = recorded baseline value, ``f`` = fresh value):
+
+  exact            f == b
+  abs_tol: t       |f - b| <= t
+  min_frac: x      f >= b * x          (higher-is-better ratio)
+  max_frac: x      f <= b * x          (lower-is-better ratio)
+  min: v / max: v  absolute bound, b kept for reference only
+
+Usage:
+  python benchmarks/check_regression.py             # gate (CI)
+  python benchmarks/check_regression.py --update    # re-record baselines
+
+Stdlib-only on purpose: the gate must run even when the package under
+test is broken enough not to import.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+BASELINE_DIR = Path(__file__).resolve().parent / "baselines"
+
+
+def get_path(obj, dotted: str):
+    """Resolve ``a.0.b``-style paths through dicts and lists."""
+    cur = obj
+    for part in dotted.split("."):
+        if isinstance(cur, list):
+            cur = cur[int(part)]
+        else:
+            cur = cur[part]
+    return cur
+
+
+def check_metric(name: str, spec: dict, fresh) -> str | None:
+    """None when within band, else a human-readable failure."""
+    base = spec["baseline"]
+    rule = spec.get("rule", "exact")
+    if rule == "exact":
+        if fresh != base:
+            return f"{name}: expected exactly {base!r}, got {fresh!r}"
+        return None
+    if not isinstance(fresh, (int, float)) or isinstance(fresh, bool):
+        return f"{name}: expected a number, got {fresh!r}"
+    if "abs_tol" in rule:
+        if abs(fresh - base) > rule["abs_tol"]:
+            return (f"{name}: {fresh:.4g} outside {base:.4g} "
+                    f"± {rule['abs_tol']}")
+    if "min_frac" in rule:
+        floor = base * rule["min_frac"]
+        if fresh < floor:
+            return (f"{name}: {fresh:.4g} < {floor:.4g} "
+                    f"(= {rule['min_frac']} x baseline {base:.4g})")
+    if "max_frac" in rule:
+        cap = base * rule["max_frac"]
+        if fresh > cap:
+            return (f"{name}: {fresh:.4g} > {cap:.4g} "
+                    f"(= {rule['max_frac']} x baseline {base:.4g})")
+    if "min" in rule and fresh < rule["min"]:
+        return f"{name}: {fresh:.4g} < floor {rule['min']:.4g}"
+    if "max" in rule and fresh > rule["max"]:
+        return f"{name}: {fresh:.4g} > ceiling {rule['max']:.4g}"
+    return None
+
+
+def run_gate(bench_dir: Path, baseline_dir: Path, update: bool = False) -> int:
+    failures: list[str] = []
+    checked = 0
+    for bfile in sorted(baseline_dir.glob("BENCH_*.json")):
+        baseline = json.loads(bfile.read_text())
+        fresh_path = bench_dir / bfile.name
+        if not fresh_path.exists():
+            failures.append(f"{bfile.name}: fresh copy missing at "
+                            f"{fresh_path} (did --smoke run?)")
+            continue
+        fresh = json.loads(fresh_path.read_text())
+        for name, spec in baseline["metrics"].items():
+            try:
+                value = get_path(fresh, name)
+            except (KeyError, IndexError, TypeError, ValueError):
+                failures.append(f"{bfile.name}:{name}: metric missing "
+                                "from fresh run")
+                continue
+            checked += 1
+            if update:
+                spec["baseline"] = value
+                continue
+            err = check_metric(name, spec, value)
+            if err:
+                failures.append(f"{bfile.name}:{err}")
+            else:
+                print(f"  ok {bfile.name}:{name} = {value!r}")
+        if update:
+            bfile.write_text(json.dumps(baseline, indent=2) + "\n")
+            print(f"# re-recorded {bfile}")
+    if update:
+        # missing files/metrics are failures even when re-recording: a
+        # stale baseline key would otherwise survive silently
+        for f in failures:
+            print(f"  FAIL {f}", file=sys.stderr)
+        return 1 if failures else 0
+    if failures:
+        print(f"\nBENCHMARK REGRESSION: {len(failures)} of {checked} "
+              "gated metrics out of band", file=sys.stderr)
+        for f in failures:
+            print(f"  FAIL {f}", file=sys.stderr)
+        return 1
+    print(f"# benchmark gate passed: {checked} metrics within band")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description="benchmark regression gate")
+    ap.add_argument("--bench-dir", default=str(ROOT),
+                    help="directory holding the fresh BENCH_*.json files")
+    ap.add_argument("--baselines", default=str(BASELINE_DIR))
+    ap.add_argument("--update", action="store_true",
+                    help="re-record baseline values from the fresh files "
+                         "(rules are kept)")
+    args = ap.parse_args(argv)
+    return run_gate(Path(args.bench_dir), Path(args.baselines), args.update)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -7,7 +7,6 @@ import math
 import time
 from pathlib import Path
 
-import numpy as np
 
 from repro.core.estimator import BlockSizeEstimator
 from repro.core.gridsearch import grid_search, grid_stats

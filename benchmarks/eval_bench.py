@@ -1,0 +1,87 @@
+"""Benchmark + correctness asserts for the closed-loop evaluation
+subsystem (src/repro/eval/).
+
+Writes ``BENCH_eval.json`` at the repo root:
+
+  * harness metrics — exact-hit rate, exponent distance, and modeled
+    speedup vs the default ds-array blocking over the smoke dataset grid
+    (all five algorithms, three environment profiles);
+  * ``closed_loop`` — the predict → execute → log → refit → invalidate
+    audit trail, asserted on every run: the first run of an unseen
+    algorithm falls back to the default heuristic, its record refits the
+    model, the serving memo is flushed, and the second run is answered by
+    the model.
+
+Prints ``name,us_per_call,derived`` CSV rows (harness convention).
+"""
+from __future__ import annotations
+
+import json
+import math
+import tempfile
+import time
+from pathlib import Path
+
+from repro.data.logstore import LogStore
+from repro.eval.autorun import closed_loop_demo
+from repro.eval.harness import ALGOS, bench_payload, evaluate
+
+from benchmarks.common import csv_row
+
+OUT = Path(__file__).resolve().parent.parent / "BENCH_eval.json"
+
+
+def run(verbose=True):
+    t0 = time.time()
+    report = evaluate(smoke=True, verbose=False)
+    t_harness = time.time() - t0
+
+    overall = report["overall"]
+    # the harness must produce a labeled, predicted group for every one of
+    # the paper's five workloads in every environment profile
+    for algo in ALGOS:
+        m = report["per_algo"][algo]
+        assert m["groups"] > 0, f"no evaluation groups for {algo}"
+        assert "mean_speedup_vs_default" in m, \
+            f"no feasible speedup measurement for {algo}"
+    assert 0.0 <= overall["exact_hit_rate"] <= 1.0
+    assert math.isfinite(overall["mean_exp_distance"])
+    # in-sample predictions come from the argmin labels themselves: the
+    # predicted cell must not run slower than the default blocking overall
+    assert overall["mean_speedup_vs_default"] >= 1.0, \
+        f"predicted partitionings slower than default: {overall}"
+
+    with tempfile.TemporaryDirectory() as tmp:
+        t1 = time.time()
+        store = LogStore(Path(tmp) / "loop_store.jsonl")
+        trail = closed_loop_demo(store)
+        t_loop = time.time() - t1
+    assert trail["first_chosen_by"] == "default", trail
+    assert trail["second_chosen_by"] == "model", trail
+    assert trail["first_retrained"] is True, trail
+    assert trail["versions"][1] > trail["versions"][0], trail
+    assert trail["invalidations"] >= 1, trail
+    assert trail["appended"][0] is True, trail
+    assert trail["store_sources"].get("autorun", 0) >= 1, trail
+    report["closed_loop"] = trail
+
+    results = bench_payload(report)
+    results["harness_wall_s"] = t_harness
+    results["closed_loop_wall_s"] = t_loop
+    OUT.write_text(json.dumps(results, indent=2) + "\n")
+
+    csv_row("eval/harness", t_harness * 1e6,
+            f"hit={overall['exact_hit_rate']:.2f};"
+            f"expdist={overall['mean_exp_distance']:.2f};"
+            f"speedup_vs_default={overall['mean_speedup_vs_default']:.2f}x")
+    csv_row("eval/closed_loop", t_loop * 1e6,
+            f"first={trail['first_chosen_by']};"
+            f"second={trail['second_chosen_by']};"
+            f"invalidations={trail['invalidations']}")
+    if verbose:
+        print(f"# wrote {OUT}")
+    return results
+
+
+if __name__ == "__main__":
+    run()

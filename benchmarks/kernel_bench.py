@@ -12,7 +12,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.kerneltune import (KernelTuner, build_training_log,
-                                   grid_search_matmul, matmul_tile_time)
+                                   grid_search_matmul)
 from repro.kernels import ops
 from repro.kernels.ref import flash_attention_ref, matmul_ref
 

@@ -9,7 +9,6 @@ import math
 import numpy as np
 
 from repro.configs import ARCH_IDS, SHAPES, get_config
-from repro.core.log import ExecutionLog
 from repro.core.meshtune import MeshTuner, grid_search_cell, tune_all
 
 from benchmarks.common import csv_row

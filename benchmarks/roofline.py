@@ -11,7 +11,7 @@ import json
 from pathlib import Path
 
 from repro.configs import SHAPES, get_config
-from repro.core.roofline import V5E, cell_roofline
+from repro.core.roofline import cell_roofline
 
 ART = Path(__file__).resolve().parent.parent / "artifacts"
 

@@ -9,10 +9,10 @@ import argparse
 import time
 
 SUITES = ("table2", "table3", "table4", "table6", "ablation", "meshtune",
-          "kernel", "roofline", "hotpath", "taskgraph", "tuner")
+          "kernel", "roofline", "hotpath", "taskgraph", "tuner", "eval")
 # fast suites with built-in correctness asserts -- CI runs these on every
 # push so bench modules can't silently rot between full runs
-SMOKE_SUITES = ("hotpath", "taskgraph", "tuner")
+SMOKE_SUITES = ("hotpath", "taskgraph", "tuner", "eval")
 
 
 def main(argv=None) -> None:
@@ -61,6 +61,9 @@ def main(argv=None) -> None:
     if "tuner" in todo:
         from benchmarks import tuner_bench
         tuner_bench.run(verbose=verbose)
+    if "eval" in todo:
+        from benchmarks import eval_bench
+        eval_bench.run(verbose=verbose)
     print(f"# benchmarks done in {time.time()-t0:.1f}s")
 
 

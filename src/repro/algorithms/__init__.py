@@ -1,5 +1,17 @@
-"""Registry of data-parallel workloads (the paper's algorithms `a`)."""
+"""Registry of data-parallel workloads (the paper's algorithms `a`).
+
+Every module exposes the uniform entry point ``run(executor, X, y=None,
+**kw)`` (unsupervised workloads ignore ``y``), so callers — the grid
+search, the closed-loop driver, the evaluation harness — never
+special-case supervised algorithms.  ``partition_and_run`` additionally
+accepts a raw array plus an externally chosen partitioning ``(p_r, p_c)``
+(an estimator prediction or the default heuristic) and builds the
+``DistArray`` itself, clamping to the array's shape.
+"""
+import numpy as np
+
 from repro.algorithms import gmm, kmeans, pca, rf, svm
+from repro.data.distarray import DistArray
 
 ALGORITHMS = {
     "kmeans": kmeans,
@@ -13,7 +25,16 @@ SUPERVISED = {"csvm", "rf"}
 
 
 def run(name: str, executor, X, y=None, **kw):
-    mod = ALGORITHMS[name]
-    if name in SUPERVISED:
-        return mod.fit(executor, X, y, **kw)
-    return mod.fit(executor, X, **kw)
+    return ALGORITHMS[name].run(executor, X, y, **kw)
+
+
+def partition_and_run(name: str, executor, X: np.ndarray, y=None, *,
+                      p_r: int, p_c: int, **kw):
+    """Partition ``X`` into the externally chosen ``p_r x p_c`` grid and
+    run the workload; returns ``(result, DistArray)``.  Partition counts
+    are clamped to the array's shape (a 64-way row split of a 32-row array
+    degrades to 32), mirroring how every tuner's decode caps to dims."""
+    n, m = X.shape
+    Xd = DistArray.from_array(X, max(1, min(int(p_r), n)),
+                              max(1, min(int(p_c), m)))
+    return run(name, executor, Xd, y, **kw), Xd

@@ -91,3 +91,8 @@ def fit(ex: TaskGraph, X: DistArray, *, k: int = 4, iters: int = 5,
 def predict(model, X: np.ndarray) -> np.ndarray:
     ll = _partial_logpdf(X, model["mu"], model["var"])
     return np.argmax(ll + np.log(model["pi"])[None, :], axis=1)
+
+
+def run(ex: TaskGraph, X: DistArray, y=None, **kw):
+    """Uniform registry entry point (unsupervised: ``y`` is ignored)."""
+    return fit(ex, X, **kw)

@@ -114,3 +114,8 @@ def fit(ex: TaskGraph, X: DistArray, *, k: int = 8, iters: int = 5,
 def predict(model, X: np.ndarray) -> np.ndarray:
     d = _partial_dist(X, model["centers"])
     return np.argmin(d, axis=1)
+
+
+def run(ex: TaskGraph, X: DistArray, y=None, **kw):
+    """Uniform registry entry point (unsupervised: ``y`` is ignored)."""
+    return fit(ex, X, **kw)

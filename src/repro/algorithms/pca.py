@@ -75,3 +75,8 @@ def fit(ex: TaskGraph, X: DistArray, *, n_components: int = 8):
 
 def transform(model, X: np.ndarray) -> np.ndarray:
     return (X - model["mean"][None, :]) @ model["components"]
+
+
+def run(ex: TaskGraph, X: DistArray, y=None, **kw):
+    """Uniform registry entry point (unsupervised: ``y`` is ignored)."""
+    return fit(ex, X, **kw)

@@ -53,3 +53,10 @@ def fit(ex: TaskGraph, X: DistArray, y: np.ndarray, *, n_trees: int = 16,
 def predict(model, X: np.ndarray) -> np.ndarray:
     proba = np.mean([t.predict_proba(X) for t in model["trees"]], axis=0)
     return model["classes"][np.argmax(proba, axis=1)]
+
+
+def run(ex: TaskGraph, X: DistArray, y=None, **kw):
+    """Uniform registry entry point (supervised: ``y`` is required)."""
+    if y is None:
+        raise ValueError("rf is supervised: y is required")
+    return fit(ex, X, y, **kw)

@@ -61,3 +61,10 @@ def fit(ex: TaskGraph, X: DistArray, y: np.ndarray, *, lam: float = 1e-3):
 
 def predict(model, X: np.ndarray) -> np.ndarray:
     return (X @ model["w"] + model["b"] >= 0).astype(int)
+
+
+def run(ex: TaskGraph, X: DistArray, y=None, **kw):
+    """Uniform registry entry point (supervised: ``y`` is required)."""
+    if y is None:
+        raise ValueError("csvm is supervised: y is required")
+    return fit(ex, X, y, **kw)

@@ -1,0 +1,24 @@
+"""Artifacts-directory resolution, shared by the launch CLIs, the
+evaluation harness, and tests.
+
+Historically ``launch/tune.py`` hard-coded ``<checkout>/artifacts`` from
+its own ``__file__``, so CI and tests wrote into the source tree.  The
+precedence is now: an explicit path argument > the ``REPRO_ARTIFACTS``
+environment variable > the checkout-relative default.
+"""
+from __future__ import annotations
+
+import os
+from pathlib import Path
+
+_DEFAULT = Path(__file__).resolve().parents[2] / "artifacts"
+
+
+def artifacts_dir(override=None) -> Path:
+    """Resolve the artifacts root (not created here — callers mkdir)."""
+    if override is not None:
+        return Path(override)
+    env = os.environ.get("REPRO_ARTIFACTS")
+    if env:
+        return Path(env)
+    return _DEFAULT

@@ -8,7 +8,7 @@ CPU smoke tests.  Input shapes are ``ShapeConfig``s; the cross product
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional
 
 

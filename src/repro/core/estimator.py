@@ -28,7 +28,7 @@ import math
 import numpy as np
 
 from repro.core.features import dataset_features
-from repro.core.log import canon_value
+from repro.core.log import canon_items, canon_value
 from repro.core.tuner import SearchSpace, Tuner, TuneQuery, TunerService
 
 _memo_value = canon_value        # compat alias (pre-refactor name)
@@ -52,6 +52,21 @@ class BlockSizeEstimator:
     @property
     def model_version(self) -> int:
         return self._tuner.model_version
+
+    @property
+    def is_fit(self) -> bool:
+        return self._tuner.is_fit
+
+    @property
+    def known_algos(self) -> frozenset:
+        return self._tuner.known_algos
+
+    def abstains(self, algo: str) -> bool:
+        """True when the estimator declines to predict for ``algo`` (unfit,
+        or no labeled training group for it).  The closed-loop driver
+        (``eval/autorun.py``) falls back to the ds-array default square
+        heuristic then."""
+        return self._tuner.abstains(algo)
 
     def fit(self, log):
         self._tuner.fit(log)
@@ -106,8 +121,7 @@ class EstimatorService(TunerService):
     def _bucket(n_rows: int, n_cols: int, algo: str, env: dict) -> tuple:
         br = 1 << max(0, math.ceil(math.log2(max(n_rows, 1))))
         bc = 1 << max(0, math.ceil(math.log2(max(n_cols, 1))))
-        return (br, bc, algo, tuple(sorted((k, canon_value(v))
-                                           for k, v in env.items())))
+        return (br, bc, algo, canon_items(env))
 
     # --- TunerService hooks: queries are (n_rows, n_cols, algo, env) ---
     def _key(self, query) -> tuple:

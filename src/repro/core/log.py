@@ -47,6 +47,15 @@ def canon_value(v):
         return repr(v)
 
 
+def canon_items(d: dict) -> tuple:
+    """Canonical hashable view of a feature dict: sorted
+    ``(key, canon_value)`` pairs.  The one grouping identity shared by
+    record keys, serving-memo keys, and the eval harness's environment
+    matching — so the subsystems can never disagree on what "the same
+    group" means."""
+    return tuple(sorted((k, canon_value(v)) for k, v in d.items()))
+
+
 @dataclasses.dataclass(frozen=True)
 class ExecutionRecord:
     dataset: dict                 # dataset features (rows, cols, size_mb, ...)
@@ -58,9 +67,7 @@ class ExecutionRecord:
     meta: dict = dataclasses.field(default_factory=dict)
 
     def triple_key(self):
-        d = tuple(sorted((k, canon_value(v)) for k, v in self.dataset.items()))
-        e = tuple(sorted((k, canon_value(v)) for k, v in self.env.items()))
-        return (d, self.algo, e)
+        return (canon_items(self.dataset), self.algo, canon_items(self.env))
 
     def record_key(self):
         """Dedup identity of one grid cell: the <d, a, e> group plus the

@@ -14,13 +14,12 @@ from __future__ import annotations
 
 import math
 
-import numpy as np
 
 from repro.configs import SHAPES, get_config
 from repro.configs.base import ModelConfig, ShapeConfig
 from repro.core.chained import ChainedClassifier
 from repro.core.log import ExecutionLog, ExecutionRecord
-from repro.core.roofline import V5E, cell_roofline
+from repro.core.roofline import cell_roofline
 from repro.core.trees import DecisionTreeClassifier
 from repro.core.tuner import SearchSpace, Tuner, TuneQuery
 

@@ -20,7 +20,6 @@ from __future__ import annotations
 import dataclasses
 
 from repro.configs.base import ModelConfig, ShapeConfig
-from repro.models.transformer import build_stages
 
 
 @dataclasses.dataclass(frozen=True)

@@ -33,7 +33,7 @@ import numpy as np
 
 from repro.core.chained import make_model
 from repro.core.features import featurize, featurize_batch, vectorize
-from repro.core.log import ExecutionLog, canon_value
+from repro.core.log import ExecutionLog, canon_items
 from repro.data.logstore import LogStore
 
 __all__ = ["SearchSpace", "TuneQuery", "ArgminLabeler", "Tuner",
@@ -77,9 +77,8 @@ class TuneQuery:
     cap_c: int | None = None
 
     def key(self) -> tuple:
-        d = tuple(sorted((k, canon_value(v)) for k, v in self.dataset.items()))
-        e = tuple(sorted((k, canon_value(v)) for k, v in self.env.items()))
-        return (d, self.algo, e, self.cap_r, self.cap_c)
+        return (canon_items(self.dataset), self.algo, canon_items(self.env),
+                self.cap_r, self.cap_c)
 
 
 class ArgminLabeler:
@@ -132,6 +131,11 @@ class ArgminLabeler:
     def n_labeled(self) -> int:
         return sum(1 for v in self._best.values() if v is not None)
 
+    def algos(self) -> set:
+        """Algorithm names with at least one finite-time (labeled) group —
+        what the tuner has actually seen argmin evidence for."""
+        return {key[1] for key, v in self._best.items() if v is not None}
+
 
 class Tuner:
     """The shared tuner: log -> labels -> cascade -> batched predictions.
@@ -153,6 +157,7 @@ class Tuner:
         self.model = None
         self.feature_order = None
         self.model_version = 0
+        self._known_algos: frozenset = frozenset()
 
     # ----------------------------------------------------------- training
     def fit(self, log) -> "Tuner":
@@ -185,9 +190,28 @@ class Tuner:
         X, self.feature_order = vectorize(feats)
         self.model = self._factory()
         self.model.fit(X, yr, yc)
+        self._known_algos = frozenset(self.labeler.algos())
         self.model_version += 1
 
     # ------------------------------------------------------------ serving
+    @property
+    def is_fit(self) -> bool:
+        return self.model is not None
+
+    @property
+    def known_algos(self) -> frozenset:
+        """Algorithms the current model was trained on (labeled groups at
+        the last (re)train).  Empty before ``fit``."""
+        return self._known_algos
+
+    def abstains(self, algo: str) -> bool:
+        """True when the tuner declines to predict for ``algo``: either no
+        model is fitted yet, or the training log contained no labeled group
+        for that algorithm (the one-hot column is all-zero, so the cascade
+        would answer from unrelated workloads).  Callers fall back to their
+        domain default — see ``eval/autorun.py``'s closed loop."""
+        return not self.is_fit or algo not in self._known_algos
+
     def predict_batch(self, queries) -> list[tuple[int, int]]:
         """One featurize + one cascade pass for any number of
         :class:`TuneQuery`; decoded through the search space's clamps."""

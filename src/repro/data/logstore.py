@@ -93,6 +93,17 @@ class LogStore:
                 and (source is None or src == source)]
         return ExecutionLog(recs, s=self.s)
 
+    def iter_records(self):
+        """Yield ``(record, source)`` pairs in append order — the
+        run-provenance view: closed-loop runs are tagged ``"autorun"``,
+        sweeps ``"grid_search"`` etc., so an audit can tell which training
+        rows came from live executions versus offline sweeps."""
+        yield from zip(self._records, self._sources)
+
+    def last(self, n: int = 1) -> list:
+        """The ``n`` most recently appended ``(record, source)`` pairs."""
+        return list(zip(self._records[-n:], self._sources[-n:]))
+
     def sources(self) -> dict:
         """source tag -> record count (None = untagged appends)."""
         out: dict = {}

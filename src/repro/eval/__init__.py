@@ -1,0 +1,17 @@
+"""Closed-loop autotuning + paper-§V evaluation subsystem (DESIGN.md §9).
+
+* ``eval/autorun.py`` — :class:`AutoTunedRun`: predict a partitioning (or
+  fall back to the ds-array default square heuristic when the estimator
+  abstains), execute on the task-graph runtime, persist the measured
+  record, and refit the estimator incrementally — every run makes the
+  next prediction better.
+* ``eval/harness.py`` — paper-§V-style evaluation: exact-hit rate and
+  exponent distance of predictions vs. grid-search argmin labels, modeled
+  speedup of predicted vs. default partitioning, and leave-one-out
+  generalization splits over algorithms and environments.
+"""
+from repro.eval.autorun import AutoTunedRun, default_partitioning
+from repro.eval.harness import evaluate, write_report
+
+__all__ = ["AutoTunedRun", "default_partitioning", "evaluate",
+           "write_report"]

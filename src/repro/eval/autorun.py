@@ -1,0 +1,188 @@
+"""Closed-loop autotuned execution (DESIGN.md §9).
+
+The paper's deployment story, end to end: an application hands
+``AutoTunedRun`` a ``<dataset, algorithm, environment>`` triple; the
+driver asks the serving estimator for a partitioning ``(p_r, p_c)``
+(falling back to the ds-array-style default square heuristic when the
+model abstains — unfit, or no labeled group for the algorithm), builds
+the ``DistArray``, executes the real workload on the task-graph runtime,
+appends the measured record to the persistent ``LogStore`` under the
+``"autorun"`` provenance tag, and triggers an incremental
+``Tuner.refit`` — so every live run becomes training data and the next
+prediction is at least as informed.  The §8 invalidation contract is what
+makes this safe to serve through: a refit that moves any argmin label
+bumps ``model_version``, and the ``EstimatorService`` memo flushes before
+the next prediction.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import numpy as np
+
+from repro.algorithms import partition_and_run
+from repro.core.estimator import BlockSizeEstimator, EstimatorService
+from repro.core.log import ExecutionRecord
+from repro.core.features import dataset_features
+from repro.data.executor import Environment, TaskExecutor, TaskMemoryError
+
+
+def default_partitioning(n_rows: int, n_cols: int, env: Environment,
+                         s: int = 2) -> tuple[int, int]:
+    """The ds-array-style default square-blocking heuristic the paper
+    compares against: the smallest power-of-``s`` grid with at least one
+    block per worker, grown as square as the shape allows (rows split
+    first on ties — "partitioning along the rows is generally more
+    relevant", §III-C), with each axis capped by the array's extent."""
+    target = max(int(env.n_workers), 1)
+    p_r = p_c = 1
+    while p_r * p_c < target and (p_r * s <= n_rows or p_c * s <= n_cols):
+        if p_r * s <= n_rows and (p_r <= p_c or p_c * s > n_cols):
+            p_r *= s
+        else:
+            p_c *= s
+    return p_r, p_c
+
+
+@dataclasses.dataclass
+class AutoRunResult:
+    """Outcome of one closed-loop run."""
+    algo: str
+    shape: tuple
+    p_r: int
+    p_c: int
+    chosen_by: str             # "model" | "default"
+    time_s: float              # modeled makespan; inf on OOM
+    record: ExecutionRecord
+    appended: bool             # False when the store already had this cell
+    retrained: bool            # did refit actually move a label / retrain?
+    model_version: int
+    output: object = None      # the workload's result (None on OOM)
+
+
+class AutoTunedRun:
+    """Predict → partition → execute → log → refit, as one driver.
+
+    ``service`` is an :class:`EstimatorService` (or a bare
+    :class:`BlockSizeEstimator`, which gets wrapped); ``store`` is a
+    ``data/logstore.py`` ``LogStore`` — pass ``None`` to run without
+    persistence (records still feed the in-process refit).  ``refit=False``
+    turns the learning half of the loop off (pure serving).
+    """
+
+    def __init__(self, service, store=None, *, refit: bool = True,
+                 source: str = "autorun"):
+        if isinstance(service, BlockSizeEstimator):
+            service = EstimatorService(service)
+        self.service = service
+        self.estimator = service.estimator
+        self.store = store
+        self.refit = refit
+        self.source = source
+        self.history: list[AutoRunResult] = []
+
+    # ----------------------------------------------------------- choosing
+    def choose(self, n_rows: int, n_cols: int, algo: str,
+               env: Environment) -> tuple[int, int, str]:
+        """The abstain-aware serving decision: ``(p_r, p_c, chosen_by)``."""
+        if self.estimator.abstains(algo):
+            p_r, p_c = default_partitioning(n_rows, n_cols, env)
+            return p_r, p_c, "default"
+        p_r, p_c = self.service.predict(
+            (n_rows, n_cols, algo, env.features()))
+        return p_r, p_c, "model"
+
+    # ------------------------------------------------------------ running
+    def run(self, X: np.ndarray, y, algo: str, env: Environment, *,
+            algo_kw: dict | None = None) -> AutoRunResult:
+        """One closed-loop execution of ``algo`` on ``X`` under ``env``."""
+        n, m = X.shape
+        p_r, p_c, chosen_by = self.choose(n, m, algo, env)
+        ex = TaskExecutor(env)
+        output = None
+        try:
+            output, Xd = partition_and_run(algo, ex, X, y, p_r=p_r, p_c=p_c,
+                                           **(algo_kw or {}))
+            t = ex.sim_time
+            meta = {"chosen_by": chosen_by, "tasks": ex.n_tasks,
+                    "real_s": ex.real_time}
+        except TaskMemoryError as e:
+            t = float("inf")
+            meta = {"chosen_by": chosen_by, "reason": str(e), "oom": True}
+        record = ExecutionRecord(dataset_features(n, m), algo,
+                                 env.features(), p_r, p_c, t, meta)
+        appended = bool(self.store.append([record], source=self.source)) \
+            if self.store is not None else False
+        retrained = False
+        if self.refit and math.isfinite(t):
+            if self.estimator.is_fit:
+                retrained = self.estimator.refit([record])
+            else:
+                # first evidence ever: a one-group log is enough to stand
+                # the model up; later runs keep folding in incrementally
+                self.estimator.fit([record])
+                retrained = True
+        result = AutoRunResult(algo, (n, m), p_r, p_c, chosen_by, t, record,
+                               appended, retrained,
+                               self.estimator.model_version, output)
+        self.history.append(result)
+        return result
+
+    def run_many(self, workloads) -> list[AutoRunResult]:
+        """Sequence of ``(X, y, algo, env)`` tuples through the loop — the
+        estimator refits between runs, so later identical triples are
+        answered by the model instead of the default heuristic."""
+        return [self.run(X, y, algo, env) for X, y, algo, env in workloads]
+
+
+def closed_loop_demo(store=None, *, verbose: bool = False) -> dict:
+    """The full predict → execute → log → refit → invalidate chain on a
+    small live scenario; returns the audit trail the bench and tests
+    assert on.
+
+    An estimator is trained on grid-search records for kmeans only; the
+    first gmm run therefore *abstains* and executes under the default
+    square heuristic, but its measured record refits the estimator, so the
+    second gmm run is answered by the model — and the serving memo is
+    provably flushed in between (``invalidations`` bumps).
+    """
+    from repro.core.gridsearch import grid_search
+    from repro.data.datasets import gaussian_blobs
+
+    env = Environment(name="laptop", n_workers=4, n_nodes=1,
+                      mem_limit_mb=2048.0, dispatch_overhead_s=1e-4,
+                      ram_gb=16)
+    Xk, yk = gaussian_blobs(256, 16, seed=7)
+    log, _ = grid_search(Xk, yk, "kmeans", env, mult=1,
+                         reuse_measurements=True, store=store)
+    est = BlockSizeEstimator("tree").fit(log)
+    service = EstimatorService(est)
+    loop = AutoTunedRun(service, store)
+    # prime the serving memo so the post-refit flush is observable
+    primed = service.predict((256, 16, "kmeans", env.features()))
+
+    Xg, yg = gaussian_blobs(192, 12, seed=8)
+    v0 = est.model_version
+    first = loop.run(Xg, yg, "gmm", env)
+    second = loop.run(Xg, yg, "gmm", env)
+    trail = {
+        "primed_kmeans": list(primed),
+        "first_chosen_by": first.chosen_by,          # "default" (abstained)
+        "second_chosen_by": second.chosen_by,        # "model" (refit took)
+        "first_retrained": first.retrained,
+        "versions": [v0, first.model_version, second.model_version],
+        "invalidations": service.invalidations,
+        "appended": [first.appended, second.appended],
+        "partitions": [[first.p_r, first.p_c], [second.p_r, second.p_c]],
+        "times_s": [first.time_s, second.time_s],
+        "store_sources": store.sources() if store is not None else None,
+    }
+    if verbose:
+        print(f"  closed loop: run1 by {first.chosen_by} "
+              f"({first.p_r},{first.p_c}) {first.time_s:.4f}s -> refit "
+              f"(v{v0}->v{first.model_version}) -> run2 by "
+              f"{second.chosen_by} ({second.p_r},{second.p_c}) "
+              f"{second.time_s:.4f}s; service invalidations="
+              f"{service.invalidations}", flush=True)
+    return trail

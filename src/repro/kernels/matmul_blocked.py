@@ -10,7 +10,6 @@ an fp32 VMEM scratch tile that is written out on the last K step.
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

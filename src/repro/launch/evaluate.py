@@ -1,0 +1,88 @@
+"""CLI fronting the closed-loop + evaluation subsystem (DESIGN.md §9).
+
+    python -m repro.launch.evaluate --smoke     # fast CPU run (CI)
+    python -m repro.launch.evaluate             # full dataset grid
+    python -m repro.launch.evaluate --skip-loop # harness only
+
+Runs the paper-§V evaluation harness (exact-hit rate, exponent distance,
+modeled speedup vs the default ds-array blocking, leave-one-out splits)
+and the closed-loop autorun demo (predict → execute → log → refit →
+invalidate), then writes ``<artifacts>/eval_report.json`` and
+``BENCH_eval.json``.  ``--artifacts PATH`` / ``$REPRO_ARTIFACTS`` move
+the artifacts root; ``--store PATH`` persists every executed record into
+a LogStore as well.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+
+def _fmt(m: dict) -> str:
+    if m.get("groups", 0) == 0:
+        return "no groups"
+    parts = [f"hit={m['exact_hit_rate']:.2f}",
+             f"expdist={m['mean_exp_distance']:.2f}"]
+    if "mean_speedup_vs_default" in m:
+        parts.append(f"speedup_vs_default={m['mean_speedup_vs_default']:.2f}x")
+    return " ".join(parts)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(
+        description="closed-loop autotuning + paper-style evaluation")
+    ap.add_argument("--smoke", action="store_true",
+                    help="small dataset grid (seconds on CPU; what CI runs)")
+    ap.add_argument("--artifacts", default=None,
+                    help="artifacts root (default: $REPRO_ARTIFACTS or the "
+                         "checkout's artifacts/)")
+    ap.add_argument("--store", default=None,
+                    help="optional LogStore path; measured records persist "
+                         "there with run-provenance source tags")
+    ap.add_argument("--bench-out", default=None,
+                    help="BENCH_eval.json path (default: <repo>/"
+                         "BENCH_eval.json)")
+    ap.add_argument("--model", default="tree",
+                    help="cascade registry entry (see core/chained.py)")
+    ap.add_argument("--skip-loop", action="store_true",
+                    help="skip the closed-loop demo (harness only)")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    from repro.data.logstore import LogStore
+    from repro.eval.autorun import closed_loop_demo
+    from repro.eval.harness import bench_payload, evaluate, write_report
+
+    store = LogStore(args.store) if args.store else None
+
+    print("== paper-§V evaluation harness", flush=True)
+    report = evaluate(smoke=args.smoke, model=args.model, seed=args.seed,
+                      store=store, verbose=True)
+    for algo, m in report["per_algo"].items():
+        print(f"  {algo:>7}: {_fmt(m)}", flush=True)
+    print(f"  overall: {_fmt(report['overall'])}  "
+          f"({report['config']['n_groups']} groups, "
+          f"{report['wall_s']:.1f}s)", flush=True)
+
+    if not args.skip_loop:
+        print("== closed loop: predict -> execute -> log -> refit -> "
+              "invalidate", flush=True)
+        report["closed_loop"] = closed_loop_demo(store, verbose=True)
+
+    path = write_report(report, args.artifacts)
+    print(f"# wrote {path}", flush=True)
+
+    bench_out = Path(args.bench_out) if args.bench_out else \
+        Path(__file__).resolve().parents[3] / "BENCH_eval.json"
+    bench_out.write_text(json.dumps(bench_payload(report), indent=2) + "\n")
+    print(f"# wrote {bench_out}", flush=True)
+
+    if store is not None:
+        print(f"# store {store.path}: {len(store)} records by source "
+              f"{store.sources()}", flush=True)
+    return report
+
+
+if __name__ == "__main__":
+    main()

@@ -13,17 +13,19 @@ end (DESIGN.md §8).
     python -m repro.launch.tune --refit-demo
 
 Re-running is idempotent: the store dedups records by (group, partition)
-key, so repeated sweeps append nothing.
+key, so repeated sweeps append nothing.  The store location is
+``--store PATH`` > ``$REPRO_ARTIFACTS/tune_store.jsonl`` > the checkout's
+``artifacts/`` (see ``repro/artifacts.py``), so CI and tests never write
+into the source tree.
 """
 from __future__ import annotations
 
 import argparse
 import time
-from pathlib import Path
 
 import numpy as np
 
-ART = Path(__file__).resolve().parents[3] / "artifacts"
+from repro.artifacts import artifacts_dir
 
 
 def _banner(msg: str):
@@ -111,8 +113,10 @@ def tune_mesh(store, chips: int):
 def main(argv=None):
     ap = argparse.ArgumentParser(
         description="drive all three tuners through the shared subsystem")
-    ap.add_argument("--store", default=str(ART / "tune_store.jsonl"),
-                    help="LogStore path (shared by every tuner family)")
+    ap.add_argument("--store", default=None,
+                    help="LogStore path (shared by every tuner family); "
+                         "defaults to <artifacts>/tune_store.jsonl where "
+                         "<artifacts> honors $REPRO_ARTIFACTS")
     ap.add_argument("--skip", nargs="*", default=[],
                     choices=["ds", "kernel", "mesh"])
     ap.add_argument("--chips", type=int, default=64)
@@ -120,7 +124,8 @@ def main(argv=None):
     args = ap.parse_args(argv)
 
     from repro.data.logstore import LogStore
-    store = LogStore(args.store)
+    store_path = args.store or artifacts_dir() / "tune_store.jsonl"
+    store = LogStore(store_path)
     if "ds" not in args.skip:
         tune_dsarray(store, refit_demo=args.refit_demo)
     if "kernel" not in args.skip:

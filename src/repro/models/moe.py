@@ -70,7 +70,6 @@ def moe_apply(cfg: ModelConfig, p, x: jax.Array, router_mode: str = "softmax"):
     routed per-group (local routing with per-group capacity -- the standard
     device-local MoE semantics).
     """
-    mo = cfg.moe
     b, t, d = x.shape
     nt = b * t
     if nt > MAX_DISPATCH_TOKENS and nt % MAX_DISPATCH_TOKENS == 0:

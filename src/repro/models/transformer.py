@@ -14,7 +14,6 @@ dry-run can lower against ``jax.ShapeDtypeStruct`` trees.
 """
 from __future__ import annotations
 
-import functools
 from dataclasses import dataclass
 
 import jax

@@ -16,7 +16,6 @@ property that compressed-SGD still drives a quadratic to its optimum.
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -11,7 +11,6 @@ exists because a 671B-parameter model cannot hold Adam moments in
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
 
 import jax
 import jax.numpy as jnp

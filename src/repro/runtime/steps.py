@@ -8,7 +8,6 @@ allocation** -- which is what the multi-pod dry-run feeds to
 from __future__ import annotations
 
 import dataclasses
-import functools
 
 import jax
 import jax.numpy as jnp

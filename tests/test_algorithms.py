@@ -2,7 +2,6 @@
 partitioning-invariance property -- the result must not depend on
 (p_r, p_c), only the execution time does (that is the paper's premise)."""
 import numpy as np
-import pytest
 
 from repro.algorithms import gmm, kmeans, pca, rf, svm
 from repro.data.datasets import gaussian_blobs, trajectory_like

@@ -2,7 +2,7 @@
 published sizes, reduced-config invariants, cell enumeration."""
 import pytest
 
-from repro.configs import ARCH_IDS, SHAPES, cells, get_config, reduced_config
+from repro.configs import ARCH_IDS, cells, get_config, reduced_config
 
 # published parameter counts (billions) with tolerance
 PUBLISHED_B = {

@@ -1,0 +1,240 @@
+"""Closed-loop autotuning + evaluation harness (src/repro/eval/).
+
+The load-bearing test is the closed-loop chain: predict → execute → log →
+refit → invalidate, asserted step by step against a live store.
+"""
+import json
+import math
+
+import pytest
+
+from repro.artifacts import artifacts_dir
+from repro.algorithms import partition_and_run
+from repro.core.estimator import BlockSizeEstimator, EstimatorService
+from repro.core.gridsearch import grid_search
+from repro.data.datasets import gaussian_blobs
+from repro.data.executor import Environment, TaskExecutor
+from repro.data.logstore import LogStore
+from repro.eval.autorun import (AutoTunedRun, closed_loop_demo,
+                                default_partitioning)
+from repro.eval.harness import (ALGOS, bench_payload, evaluate,
+                                write_report)
+
+ENV4 = Environment(name="t4", n_workers=4, n_nodes=1, mem_limit_mb=2048.0,
+                   dispatch_overhead_s=1e-4, ram_gb=16)
+
+
+@pytest.fixture(scope="module")
+def kmeans_log():
+    X, y = gaussian_blobs(256, 16, seed=7)
+    log, _ = grid_search(X, y, "kmeans", ENV4, mult=1,
+                         reuse_measurements=True)
+    return log
+
+
+# ------------------------------------------------------------ default
+def test_default_partitioning_square_power_of_two():
+    # one block per worker, square on a square-ish shape
+    assert default_partitioning(1024, 1024, ENV4) == (2, 2)
+    env16 = Environment(n_workers=16)
+    assert default_partitioning(1024, 1024, env16) == (4, 4)
+    # rows split first on ties
+    env8 = Environment(n_workers=8)
+    p_r, p_c = default_partitioning(1024, 1024, env8)
+    assert (p_r, p_c) == (4, 2)
+
+
+def test_default_partitioning_respects_shape_caps():
+    # a narrow matrix cannot split columns: everything goes to rows
+    assert default_partitioning(1024, 1, ENV4) == (4, 1)
+    # a short matrix pushes splits to columns
+    assert default_partitioning(1, 1024, ENV4) == (1, 4)
+    # degenerate 1x1 cannot split at all
+    assert default_partitioning(1, 1, ENV4) == (1, 1)
+
+
+# ------------------------------------------------------------- abstain
+def test_estimator_abstains_before_fit_and_on_unknown_algos(kmeans_log):
+    est = BlockSizeEstimator("tree")
+    assert not est.is_fit and est.abstains("kmeans")
+    est.fit(kmeans_log)
+    assert est.is_fit
+    assert not est.abstains("kmeans")
+    assert est.abstains("gmm")          # never trained on gmm
+    assert est.known_algos == frozenset({"kmeans"})
+
+
+def test_refit_extends_known_algos(kmeans_log):
+    from repro.core.log import ExecutionRecord
+    est = BlockSizeEstimator("tree").fit(kmeans_log)
+    rec = ExecutionRecord({"rows": 64.0, "cols": 8.0}, "gmm",
+                          {"n_workers": 4}, 2, 1, 0.5)
+    assert est.refit([rec]) is True
+    assert not est.abstains("gmm")
+
+
+# ----------------------------------------------------- uniform entry points
+def test_partition_and_run_uniform_and_clamped():
+    X, y = gaussian_blobs(64, 8, seed=3)
+    for algo in ALGOS:
+        ex = TaskExecutor(ENV4)
+        out, Xd = partition_and_run(algo, ex, X, y, p_r=4, p_c=2)
+        assert out is not None and (Xd.p_r, Xd.p_c) == (4, 2)
+    # partition counts beyond the shape clamp instead of raising
+    ex = TaskExecutor(ENV4)
+    _, Xd = partition_and_run("kmeans", ex, X, y, p_r=512, p_c=99)
+    assert (Xd.p_r, Xd.p_c) == (64, 8)
+
+
+def test_supervised_run_requires_labels():
+    from repro.algorithms import rf, svm
+    from repro.data.distarray import DistArray
+    X, _ = gaussian_blobs(32, 8, seed=4)
+    Xd = DistArray.from_array(X, 2, 1)
+    for mod in (rf, svm):
+        with pytest.raises(ValueError, match="supervised"):
+            mod.run(TaskExecutor(ENV4), Xd)
+
+
+# --------------------------------------------------------- closed loop
+def test_closed_loop_predict_execute_log_refit_invalidate(tmp_path,
+                                                          kmeans_log):
+    store = LogStore(tmp_path / "store.jsonl")
+    est = BlockSizeEstimator("tree").fit(kmeans_log)
+    svc = EstimatorService(est)
+    loop = AutoTunedRun(svc, store)
+    # prime the memo so the refit-driven flush is observable
+    svc.predict((256, 16, "kmeans", ENV4.features()))
+    assert svc.invalidations == 0
+
+    X, y = gaussian_blobs(192, 12, seed=8)
+    v0 = est.model_version
+
+    # 1) predict: estimator abstains on gmm -> default square heuristic
+    first = loop.run(X, y, "gmm", ENV4)
+    assert first.chosen_by == "default"
+    assert (first.p_r, first.p_c) == default_partitioning(192, 12, ENV4)
+    # 2) execute: a real modeled makespan came back
+    assert math.isfinite(first.time_s) and first.time_s > 0
+    # 3) log: the record is in the store under the autorun provenance tag
+    assert first.appended
+    rec, src = store.last(1)[0]
+    assert src == "autorun" and rec.algo == "gmm"
+    assert rec.meta["chosen_by"] == "default"
+    # 4) refit: the new group retrained the model
+    assert first.retrained and est.model_version == v0 + 1
+    assert not est.abstains("gmm")
+
+    # 5) invalidate: next prediction flushes the primed memo...
+    second = loop.run(X, y, "gmm", ENV4)
+    assert svc.invalidations == 1
+    # ...and is answered by the model, landing on the learned cell
+    assert second.chosen_by == "model"
+    assert (second.p_r, second.p_c) == (first.p_r, first.p_c)
+    # the duplicate cell dedups in the store
+    assert not second.appended and len(store) == 1
+    assert store.sources()["autorun"] == 1
+
+
+def test_closed_loop_from_nothing(tmp_path):
+    """With no training data at all the loop still runs (default heuristic)
+    and the very first record stands the model up."""
+    store = LogStore(tmp_path / "cold.jsonl")
+    loop = AutoTunedRun(BlockSizeEstimator("tree"), store)
+    X, y = gaussian_blobs(96, 8, seed=9)
+    r = loop.run(X, y, "kmeans", ENV4)
+    assert r.chosen_by == "default" and r.retrained
+    assert loop.estimator.is_fit
+    r2 = loop.run(X, y, "kmeans", ENV4)
+    assert r2.chosen_by == "model"
+
+
+def test_closed_loop_demo_trail(tmp_path):
+    trail = closed_loop_demo(LogStore(tmp_path / "demo.jsonl"))
+    assert trail["first_chosen_by"] == "default"
+    assert trail["second_chosen_by"] == "model"
+    assert trail["first_retrained"] is True
+    assert trail["invalidations"] >= 1
+    assert trail["store_sources"]["autorun"] >= 1
+
+
+def test_oom_run_logged_as_inf_without_refit(tmp_path, kmeans_log):
+    store = LogStore(tmp_path / "oom.jsonl")
+    est = BlockSizeEstimator("tree").fit(kmeans_log)
+    v0 = est.model_version
+    loop = AutoTunedRun(EstimatorService(est), store)
+    tiny = Environment(name="tiny", n_workers=4, mem_limit_mb=1e-6)
+    X, y = gaussian_blobs(128, 16, seed=11)
+    r = loop.run(X, y, "gmm", tiny)
+    assert math.isinf(r.time_s) and r.record.meta.get("oom")
+    assert r.appended                        # failures are evidence too
+    assert not r.retrained and est.model_version == v0
+
+
+# ------------------------------------------------------------- harness
+@pytest.fixture(scope="module")
+def tiny_report():
+    envs = {"laptop": ENV4,
+            "cluster8": Environment(name="cluster8", n_workers=8,
+                                    n_nodes=2, mem_limit_mb=1024.0,
+                                    dispatch_overhead_s=2e-4, ram_gb=32)}
+    return evaluate(smoke=True, envs=envs, seed=1, verbose=False)
+
+
+def test_harness_covers_all_five_algorithms(tiny_report):
+    for algo in ALGOS:
+        m = tiny_report["per_algo"][algo]
+        assert m["groups"] > 0
+        assert 0.0 <= m["exact_hit_rate"] <= 1.0
+        assert math.isfinite(m["mean_exp_distance"])
+        assert m["mean_speedup_vs_default"] > 0
+
+
+def test_harness_in_sample_predictions_recover_argmin(tiny_report):
+    # trained on the full grid, the cascade memorizes the argmin labels,
+    # so predicted cells can never lose to the default blocking
+    o = tiny_report["overall"]
+    assert o["exact_hit_rate"] >= 0.9
+    assert o["mean_speedup_vs_default"] >= 1.0
+    assert o["mean_regret_vs_best"] >= 1.0   # regret is bounded below by 1
+
+
+def test_harness_holdout_splits_present(tiny_report):
+    assert set(tiny_report["holdout_algo"]) == set(ALGOS)
+    assert set(tiny_report["holdout_env"]) == set(tiny_report["per_env"])
+    for m in tiny_report["holdout_algo"].values():
+        assert m["groups"] > 0
+
+
+def test_report_roundtrip_and_bench_payload(tiny_report, tmp_path):
+    path = write_report(tiny_report, tmp_path)
+    assert path == tmp_path / "eval_report.json"
+    loaded = json.loads(path.read_text())
+    assert loaded["overall"]["exact_hit_rate"] == \
+        tiny_report["overall"]["exact_hit_rate"]
+    payload = bench_payload(tiny_report)
+    assert set(payload["per_algo"]) == set(ALGOS)
+    assert payload["groups"] == tiny_report["config"]["n_groups"]
+
+
+def test_artifacts_dir_precedence(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_ARTIFACTS", str(tmp_path / "env_root"))
+    assert artifacts_dir() == tmp_path / "env_root"
+    assert artifacts_dir(tmp_path / "explicit") == tmp_path / "explicit"
+    monkeypatch.delenv("REPRO_ARTIFACTS")
+    assert artifacts_dir().name == "artifacts"
+
+
+# ------------------------------------------------------------ logstore
+def test_logstore_provenance_views(tmp_path):
+    from repro.core.log import ExecutionRecord
+    store = LogStore(tmp_path / "prov.jsonl")
+    a = ExecutionRecord({"rows": 1.0}, "kmeans", {"w": 1}, 1, 1, 0.5)
+    b = ExecutionRecord({"rows": 2.0}, "gmm", {"w": 1}, 2, 1, 0.3)
+    store.append([a], source="grid_search")
+    store.append([b], source="autorun")
+    pairs = list(store.iter_records())
+    assert [(r.algo, s) for r, s in pairs] == \
+        [("kmeans", "grid_search"), ("gmm", "autorun")]
+    assert store.last(1) == [(b, "autorun")]
+    assert store.load(source="autorun").records == [b]

@@ -138,10 +138,10 @@ def test_tile_cost_broadcast_matches_scalar():
     times = matmul_tile_times(2048, 1024, 4096, bms, bns, bks)
     for i in range(5):
         for j in range(5):
-            for l in range(5):
-                assert times[i, j, l] == matmul_tile_time(
+            for k in range(5):
+                assert times[i, j, k] == matmul_tile_time(
                     2048, 1024, 4096,
-                    int(bms[i, 0, 0]), int(bns[0, j, 0]), int(bks[0, 0, l]))
+                    int(bms[i, 0, 0]), int(bns[0, j, 0]), int(bks[0, 0, k]))
 
 
 def test_grid_search_matmul_sweeps_bk():

@@ -1,0 +1,61 @@
+"""Smoke coverage for the ``repro.launch.tune`` CLI (previously untested):
+all three tuner families against a tmp store, idempotent re-run, the
+``--refit-demo`` invalidation walkthrough, and the artifacts-root
+resolution (``--store`` / ``$REPRO_ARTIFACTS``)."""
+import json
+
+import pytest
+
+from repro.launch import tune
+
+
+@pytest.fixture(scope="module")
+def store_path(tmp_path_factory):
+    return tmp_path_factory.mktemp("tune") / "store.jsonl"
+
+
+@pytest.fixture(scope="module")
+def first_run(store_path):
+    """One full CLI run (all three tuners) against the tmp store."""
+    tune.main(["--store", str(store_path), "--chips", "16"])
+    return store_path.read_text()
+
+
+def test_cli_drives_all_three_tuners(first_run, store_path, capsys):
+    from repro.data.logstore import LogStore
+    store = LogStore(store_path)
+    srcs = store.sources()
+    assert set(srcs) == {"grid_search", "kernel_grid", "mesh_grid"}
+    assert all(n > 0 for n in srcs.values())
+    # every line after the header is valid JSON with a source tag
+    lines = first_run.strip().splitlines()
+    assert json.loads(lines[0])["kind"] == "logstore"
+    assert all("source" in json.loads(ln) for ln in lines[1:])
+
+
+def test_cli_rerun_is_idempotent(first_run, store_path, capsys):
+    n_before = len(store_path.read_text().splitlines())
+    tune.main(["--store", str(store_path), "--chips", "16"])
+    out = capsys.readouterr().out
+    assert len(store_path.read_text().splitlines()) == n_before
+    # the rerun still fits and predicts from the deduped store
+    assert "kmeans 1024x32" in out and "deepseek-7b train_4k" in out
+
+
+def test_cli_refit_demo_invalidates_service(first_run, store_path, capsys):
+    tune.main(["--store", str(store_path), "--skip", "kernel", "mesh",
+               "--refit-demo"])
+    out = capsys.readouterr().out
+    assert "refit demo" in out
+    assert "retrained=True" in out
+    assert "invalidations=1" in out
+    # the demo prints the before/after predictions of the shifted model
+    assert "prediction before=" in out and "after=" in out
+
+
+def test_cli_store_defaults_to_repro_artifacts(tmp_path, monkeypatch,
+                                               capsys):
+    monkeypatch.setenv("REPRO_ARTIFACTS", str(tmp_path))
+    tune.main(["--skip", "kernel", "mesh"])
+    capsys.readouterr()
+    assert (tmp_path / "tune_store.jsonl").exists()

@@ -3,7 +3,6 @@ on the paper's chained-DT cascade."""
 import math
 
 import numpy as np
-import pytest
 
 from repro.configs import SHAPES, get_config
 from repro.core.kerneltune import (KernelTuner, build_training_log,

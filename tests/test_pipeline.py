@@ -28,7 +28,8 @@ def test_determinism_same_seed():
 
 def test_restore_resumes_stream():
     p1 = mk(seed=3)
-    batches = [np.asarray(next(p1)["tokens"]) for _ in range(4)]
+    for _ in range(4):
+        next(p1)                       # advance the stream
     state = p1.state()
     after = [np.asarray(next(p1)["tokens"]) for _ in range(2)]
     p2 = mk(seed=3)

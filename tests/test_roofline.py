@@ -6,12 +6,10 @@ the layer scans on reduced configs so XLA counts everything, then require
 the analytic model to agree within tolerance."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
-from repro.configs import SHAPES, ShapeConfig, reduced_config, get_config
-from repro.core.roofline import (V5E, cell_roofline, forward_flops,
-                                 model_flops)
+from repro.configs import SHAPES, reduced_config, get_config
+from repro.core.roofline import cell_roofline, forward_flops, model_flops
 from repro.models import transformer as tf
 from repro.models.layers import spec_tree_to_sds
 

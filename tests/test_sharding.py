@@ -114,6 +114,7 @@ def test_subprocess_8dev_mini_dryrun():
     proc = subprocess.run([sys.executable, "-c", code], env=env,
                           capture_output=True, text=True, timeout=900)
     assert proc.returncode == 0, proc.stderr[-2000:]
-    line = [l for l in proc.stdout.splitlines() if l.startswith("RESULT:")][0]
+    line = [ln for ln in proc.stdout.splitlines()
+            if ln.startswith("RESULT:")][0]
     result = json.loads(line[len("RESULT:"):])
     assert all(result.values()), result
