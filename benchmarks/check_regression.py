@@ -2,8 +2,13 @@
 
 Compares a fresh ``python -m benchmarks.run --smoke`` output
 (``BENCH_hotpath.json`` / ``BENCH_taskgraph.json`` / ``BENCH_tuner.json``
-/ ``BENCH_eval.json`` at the repo root) against the committed baselines in
-``benchmarks/baselines/`` and exits non-zero on any regression.
+/ ``BENCH_eval.json`` / ``BENCH_serving.json`` at the repo root) against
+the committed baselines in ``benchmarks/baselines/`` and exits non-zero
+on any regression.  Every ``benchmarks/baselines/BENCH_*.json`` is
+checked, so adding a suite = committing its baseline file; the serving
+baseline gates the concurrency contracts exactly (shard counts, zero
+staleness violations across refit swaps, zero drops under capacity) and
+bands the memo hit rate.
 
 Each baseline metric carries the recorded value plus a rule, because CI
 runners differ wildly in absolute speed: structural metrics (task counts,

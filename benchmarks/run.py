@@ -9,10 +9,11 @@ import argparse
 import time
 
 SUITES = ("table2", "table3", "table4", "table6", "ablation", "meshtune",
-          "kernel", "roofline", "hotpath", "taskgraph", "tuner", "eval")
+          "kernel", "roofline", "hotpath", "taskgraph", "tuner", "eval",
+          "serving")
 # fast suites with built-in correctness asserts -- CI runs these on every
 # push so bench modules can't silently rot between full runs
-SMOKE_SUITES = ("hotpath", "taskgraph", "tuner", "eval")
+SMOKE_SUITES = ("hotpath", "taskgraph", "tuner", "eval", "serving")
 
 
 def main(argv=None) -> None:
@@ -64,6 +65,9 @@ def main(argv=None) -> None:
     if "eval" in todo:
         from benchmarks import eval_bench
         eval_bench.run(verbose=verbose)
+    if "serving" in todo:
+        from benchmarks import serving_bench
+        serving_bench.run(verbose=verbose)
     print(f"# benchmarks done in {time.time()-t0:.1f}s")
 
 

@@ -1,0 +1,215 @@
+"""Load test + correctness asserts for the online serving subsystem
+(src/repro/serve/): sharded router, background refit daemon, closed-loop
+load generator.
+
+Writes ``BENCH_serving.json`` at the repo root:
+
+  * structural counts the CI gate checks exactly — shard count, requests
+    served, zero rejected-under-capacity, zero staleness violations, the
+    deterministic set of traffic-active shards;
+  * banded metrics — memo hit rate, refit swaps, invalidations;
+  * recorded-only wall-clock — throughput and p50/p95/p99 latency
+    (never gated; CI runners vary wildly in absolute speed).
+
+The scenario is the paper's deployment story under concurrency: warm the
+estimator from a grid-swept store, serve round 1 of a seeded hot/zipf/
+uniform/cold query mix from K client threads (the cold algorithm
+abstains to the default heuristic), then sweep the cold algorithm into
+the store so the refit daemon folds it and atomically swaps the model
+in, and serve later rounds — with a concurrent writer churning the store
+mid-round — asserting that **no request enqueued after a swap is ever
+served by the old model** and that the previously-cold algorithm is now
+answered by the model.
+
+Usage:
+  python -m benchmarks.serving_bench --smoke     # what CI runs (default)
+  python -m benchmarks.serving_bench --full      # nightly multi-round run
+
+Prints ``name,us_per_call,derived`` CSV rows (harness convention).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import tempfile
+import threading
+import time
+from pathlib import Path
+
+import numpy as np
+
+from repro.core.estimator import BlockSizeEstimator
+from repro.core.gridsearch import grid_search
+from repro.data.datasets import gaussian_blobs
+from repro.data.executor import Environment
+from repro.data.logstore import LogStore
+from repro.serve import RefitDaemon, ShardRouter, make_trace, run_load
+
+from benchmarks.common import csv_row
+
+OUT = Path(__file__).resolve().parent.parent / "BENCH_serving.json"
+
+ENV = Environment(name="laptop", n_workers=4, n_nodes=1, mem_limit_mb=2048.0,
+                  dispatch_overhead_s=1e-4, ram_gb=16)
+# shapes chosen to land on distinct power-of-two memo buckets, so the
+# consistent-hash ring spreads the keys over several shards
+SHAPES = ((256, 16), (512, 16), (1024, 32), (192, 12), (96, 24), (48, 8))
+COLD_ALGO = "pca"            # swept into the store between rounds 1 and 2
+LATE_COLD_ALGO = "rf"        # never swept: keeps the abstain path live
+
+
+def _sweep(store, algo, n, m, seed):
+    X, y = gaussian_blobs(n, m, seed=seed)
+    grid_search(X, y, algo, ENV, mult=1, reuse_measurements=True,
+                store=store)
+
+
+def _universe(algos):
+    feats = ENV.features()
+    return [(n, m, a, feats) for a in algos for n, m in SHAPES]
+
+
+def run(verbose=True, *, rounds=2, requests_per_round=240, n_clients=4,
+        n_shards=4, seed=0):
+    assert rounds >= 2, "need a pre-swap and a post-swap round"
+    t0 = time.time()
+    with tempfile.TemporaryDirectory() as tmp:
+        store = LogStore(Path(tmp) / "serve_store.jsonl")
+        _sweep(store, "kmeans", 256, 16, seed=7)
+        _sweep(store, "gmm", 192, 12, seed=8)
+        est = BlockSizeEstimator("tree").fit(store.load())
+        router = ShardRouter(est, n_shards=n_shards, queue_depth=256,
+                             admission="reject", window_s=0.001)
+        daemon = RefitDaemon(router, store, interval_s=0.02).start()
+        try:
+            feats = ENV.features()
+            reports = []
+
+            # ---- round 1: COLD_ALGO unknown -> abstain/default everywhere
+            trace = make_trace(requests_per_round, _universe(("kmeans",
+                                                              "gmm")),
+                               seed=seed,
+                               cold_queries=[(256, 16, COLD_ALGO, feats)])
+            reports.append(run_load(router, trace, n_clients=n_clients,
+                                    include_latencies=True))
+            assert reports[0]["by_kind"]["cold"]["default_frac"] == 1.0, \
+                f"cold algo served by the model pre-refit: {reports[0]}"
+
+            # ---- churn: sweep the cold algo; the daemon folds + swaps
+            _sweep(store, COLD_ALGO, 256, 16, seed=9)
+            deadline = time.time() + 30
+            while daemon.swaps < 1 and time.time() < deadline:
+                time.sleep(0.01)
+            assert daemon.swaps >= 1, \
+                f"refit daemon never swapped (last_error={daemon.last_error})"
+            res = router.request((256, 16, COLD_ALGO, feats))
+            assert res.chosen_by == "model", \
+                f"{COLD_ALGO} still abstains after the swap: {res}"
+
+            # ---- rounds 2..N: swapped model serves; a concurrent writer
+            # keeps churning the store mid-round
+            uni2 = _universe(("kmeans", "gmm", COLD_ALGO))
+            for ri in range(1, rounds):
+                writer = threading.Thread(
+                    target=_sweep,
+                    args=(store, "csvm", 128 + 64 * ri, 8, 20 + ri),
+                    daemon=True)
+                writer.start()
+                trace = make_trace(
+                    requests_per_round, uni2, seed=seed + ri,
+                    cold_queries=[(256, 16, LATE_COLD_ALGO, feats)])
+                reports.append(run_load(router, trace, n_clients=n_clients,
+                                        include_latencies=True))
+                writer.join()
+            swaps = daemon.swaps
+        finally:
+            daemon.stop()
+            router.close()
+        stats = router.stats()
+
+    # ---------------------------------------------------------- aggregate
+    lat_ms = np.concatenate([r["latencies_ms"] for r in reports])
+    requests = sum(r["requests"] for r in reports)
+    served = sum(r["served"] for r in reports)
+    rejected = sum(r["rejected"] for r in reports)
+    stale = sum(r["staleness_violations"] for r in reports)
+    wall = sum(r["wall_s"] for r in reports)
+    active = sorted(p["shard"] for p in stats["per_shard"] if p["served"])
+
+    # the asserts the smoke suite (and --smoke CLI) lives or dies on
+    assert stale == 0, f"{stale} staleness violations across refit swaps"
+    assert rejected == 0, \
+        f"{rejected} requests dropped under capacity (depth 256)"
+    errors = [r["first_error"] for r in reports if r["errors"]]
+    assert not errors, f"serving errors during load: {errors}"
+    assert served == requests, (served, requests)
+    assert stats["invalidations"] >= 1, \
+        f"swap never flushed a serving memo: {stats}"
+    p99 = float(np.percentile(lat_ms, 99))
+    throughput = served / wall
+    assert math.isfinite(p99) and p99 > 0.0
+    assert throughput > 0.0
+
+    results = {
+        "n_shards": n_shards,
+        "n_shards_active": len(active),
+        "active_shards": active,
+        "rounds": rounds,
+        "requests": requests,
+        "served": served,
+        "rejected": rejected,
+        "staleness_violations": stale,
+        "refit_swaps": swaps,
+        "invalidations": stats["invalidations"],
+        "hit_rate": stats["hit_rate"],
+        "abstained": stats["abstained"],
+        "cold_round1_default_frac":
+            reports[0]["by_kind"]["cold"]["default_frac"],
+        "cold_after_swap_chosen_by": res.chosen_by,
+        "throughput_rps": throughput,
+        "p50_ms": float(np.percentile(lat_ms, 50)),
+        "p95_ms": float(np.percentile(lat_ms, 95)),
+        "p99_ms": p99,
+        "wall_s": time.time() - t0,
+        "per_shard": stats["per_shard"],
+        "per_round": [{k: r[k] for k in
+                       ("requests", "served", "rejected", "throughput_rps",
+                        "p50_ms", "p99_ms", "staleness_violations")}
+                      for r in reports],
+    }
+    OUT.write_text(json.dumps(results, indent=2) + "\n")
+
+    csv_row("serving/load", wall / max(served, 1) * 1e6,
+            f"rps={throughput:.0f};p99={p99:.2f}ms;"
+            f"hit={stats['hit_rate']:.2f};stale={stale};swaps={swaps}")
+    csv_row("serving/refit_swap", results["wall_s"] * 1e6,
+            f"shards={n_shards};invalidations={stats['invalidations']};"
+            f"cold={COLD_ALGO}:{res.chosen_by}")
+    if verbose:
+        print(f"# wrote {OUT}")
+    return results
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description="serving-tier load test")
+    ap.add_argument("--smoke", action="store_true",
+                    help="the fast CI configuration (this is the default)")
+    ap.add_argument("--full", action="store_true",
+                    help="nightly scale: more rounds, requests, clients")
+    ap.add_argument("--rounds", type=int, default=None)
+    ap.add_argument("--requests", type=int, default=None)
+    ap.add_argument("--clients", type=int, default=None)
+    ap.add_argument("--shards", type=int, default=4)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+    rounds = args.rounds or (4 if args.full else 2)
+    requests = args.requests or (1000 if args.full else 240)
+    clients = args.clients or (8 if args.full else 4)
+    print("name,us_per_call,derived")
+    return run(rounds=rounds, requests_per_round=requests,
+               n_clients=clients, n_shards=args.shards, seed=args.seed)
+
+
+if __name__ == "__main__":
+    main()

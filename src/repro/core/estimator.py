@@ -23,6 +23,7 @@ invalidation, so serving a refit estimator never replays stale memos.
 """
 from __future__ import annotations
 
+import copy
 import math
 
 import numpy as np
@@ -78,6 +79,13 @@ class BlockSizeEstimator:
         their memos then."""
         return self._tuner.refit(new_records)
 
+    def snapshot(self) -> "BlockSizeEstimator":
+        """Deep copy for off-request-path refits (see ``Tuner.snapshot``):
+        the serving tier's refit daemon folds new records into a snapshot
+        and swaps it in, so the live estimator is never mutated while a
+        shard is mid-predict."""
+        return copy.deepcopy(self)
+
     # ------------------------------------------------------------- predict
     def predict_partitions(self, n_rows: int, n_cols: int, algo: str,
                            env_features: dict) -> tuple:
@@ -116,6 +124,10 @@ class EstimatorService(TunerService):
     def __init__(self, estimator: BlockSizeEstimator, maxsize: int = 4096):
         super().__init__(estimator, maxsize)
         self.estimator = estimator
+
+    def swap_backend(self, backend) -> None:
+        super().swap_backend(backend)
+        self.estimator = backend
 
     @staticmethod
     def _bucket(n_rows: int, n_cols: int, algo: str, env: dict) -> tuple:

@@ -25,6 +25,7 @@ instantiations; persistent multi-sweep log storage is
 """
 from __future__ import annotations
 
+import copy
 import dataclasses
 import math
 from collections import OrderedDict
@@ -37,7 +38,24 @@ from repro.core.log import ExecutionLog, canon_items
 from repro.data.logstore import LogStore
 
 __all__ = ["SearchSpace", "TuneQuery", "ArgminLabeler", "Tuner",
-           "TunerService", "LogStore"]
+           "TunerService", "LogStore", "fold_records"]
+
+
+def fold_records(model, records) -> bool:
+    """Fold measured records into a tuner-like ``model`` (anything with
+    ``is_fit``/``refit``/``fit``): incremental ``refit`` when fitted, a
+    first-evidence ``fit`` otherwise (a one-group log is enough to stand a
+    model up).  Returns True iff the model changed; False also covers the
+    all-OOM case where no finite-time group exists yet.  The one learning
+    decision shared by ``ShardRouter.refit``, the ``serve/refit.py``
+    daemon, and ``eval/autorun.py``'s in-place path."""
+    if model.is_fit:
+        return bool(model.refit(records))
+    try:
+        model.fit(records)
+    except ValueError:                    # no finite-time groups yet
+        return False
+    return True
 
 
 @dataclasses.dataclass(frozen=True)
@@ -229,6 +247,14 @@ class Tuner:
     def predict(self, query: TuneQuery) -> tuple[int, int]:
         return self.predict_batch([query])[0]
 
+    def snapshot(self) -> "Tuner":
+        """Deep copy of the whole tuner (labeler state, model, version) for
+        off-request-path refits: fold and retrain the copy while the
+        original keeps serving, then atomically swap the copy in
+        (``TunerService.swap_backend``).  ``model_version`` carries over,
+        so a retrained snapshot invalidates serving memos for free."""
+        return copy.deepcopy(self)
+
 
 class _Pending:
     """Handle returned by ``TunerService.submit``; resolved at ``flush``."""
@@ -287,6 +313,23 @@ class TunerService:
         return pred
 
     # ------------------------------------------------------------ serving
+    def swap_backend(self, backend) -> None:
+        """Point the service at a new backend (typically a refit
+        ``Tuner.snapshot``).  The memo is not cleared here: the next entry
+        point's version check flushes it iff the versions differ.  When a
+        *different* backend object arrives carrying the version the memo
+        was filled under (two refitters racing from the same snapshot),
+        the memo is flushed eagerly — version equality would otherwise
+        mask the swap.  Callers must serialize this with in-flight
+        predictions (the shard router holds its per-shard lock across
+        both; see ``serve/router.py``)."""
+        if backend is not self.backend and \
+                getattr(backend, "model_version", None) == self._seen_version:
+            if self._memo:
+                self.invalidations += 1
+            self._memo.clear()
+        self.backend = backend
+
     def _check_version(self):
         v = getattr(self.backend, "model_version", None)
         if v != self._seen_version:
@@ -348,6 +391,16 @@ class TunerService:
             p._result = r
             p.done = True
         return results
+
+    def discard_pending(self) -> int:
+        """Drop every queued submission (handles stay unresolved); the
+        recovery path for callers that answer each request exactly once —
+        e.g. a shard worker failing a batch — where ``flush``'s
+        keep-for-retry contract would replay dead queries.  Returns the
+        number discarded."""
+        n = len(self._queue)
+        self._queue.clear()
+        return n
 
     @property
     def pending(self) -> int:

@@ -25,6 +25,7 @@ from repro.algorithms import partition_and_run
 from repro.core.estimator import BlockSizeEstimator, EstimatorService
 from repro.core.log import ExecutionRecord
 from repro.core.features import dataset_features
+from repro.core.tuner import fold_records
 from repro.data.executor import Environment, TaskExecutor, TaskMemoryError
 
 
@@ -65,10 +66,15 @@ class AutoTunedRun:
     """Predict → partition → execute → log → refit, as one driver.
 
     ``service`` is an :class:`EstimatorService` (or a bare
-    :class:`BlockSizeEstimator`, which gets wrapped); ``store`` is a
-    ``data/logstore.py`` ``LogStore`` — pass ``None`` to run without
-    persistence (records still feed the in-process refit).  ``refit=False``
-    turns the learning half of the loop off (pure serving).
+    :class:`BlockSizeEstimator`, which gets wrapped) — or the sharded
+    ``serve/router.py`` ``ShardRouter``, in which case predictions go
+    through the concurrent tier and learning goes through the router's
+    snapshot→refit→swap path instead of mutating the live backend.
+    ``store`` is a ``data/logstore.py`` ``LogStore`` — pass ``None`` to
+    run without persistence (records still feed the in-process refit).
+    ``refit=False`` turns the learning half of the loop off (pure
+    serving — e.g. when a ``serve/refit.py`` daemon tails the store and
+    owns learning instead).
     """
 
     def __init__(self, service, store=None, *, refit: bool = True,
@@ -76,11 +82,17 @@ class AutoTunedRun:
         if isinstance(service, BlockSizeEstimator):
             service = EstimatorService(service)
         self.service = service
-        self.estimator = service.estimator
         self.store = store
         self.refit = refit
         self.source = source
         self.history: list[AutoRunResult] = []
+
+    @property
+    def estimator(self):
+        """The service's *current* backend — resolved per access, because a
+        router-style service swaps backends on refit and the abstain check
+        must see the live model."""
+        return self.service.estimator
 
     # ----------------------------------------------------------- choosing
     def choose(self, n_rows: int, n_cols: int, algo: str,
@@ -116,18 +128,23 @@ class AutoTunedRun:
             if self.store is not None else False
         retrained = False
         if self.refit and math.isfinite(t):
-            if self.estimator.is_fit:
-                retrained = self.estimator.refit([record])
-            else:
-                # first evidence ever: a one-group log is enough to stand
-                # the model up; later runs keep folding in incrementally
-                self.estimator.fit([record])
-                retrained = True
+            retrained = self._learn([record])
         result = AutoRunResult(algo, (n, m), p_r, p_c, chosen_by, t, record,
                                appended, retrained,
                                self.estimator.model_version, output)
         self.history.append(result)
         return result
+
+    def _learn(self, records) -> bool:
+        """Fold measured records into the model.  A router-style service
+        (anything exposing ``refit``) learns through its snapshot→swap
+        path, so the live backend is never mutated while shards serve
+        from it; a plain service refits the estimator in place — fitting
+        from scratch on the first evidence ever, since a one-group log is
+        enough to stand the model up."""
+        if hasattr(self.service, "refit"):
+            return bool(self.service.refit(records))
+        return fold_records(self.estimator, records)
 
     def run_many(self, workloads) -> list[AutoRunResult]:
         """Sequence of ``(X, y, algo, env)`` tuples through the loop — the
@@ -136,7 +153,8 @@ class AutoTunedRun:
         return [self.run(X, y, algo, env) for X, y, algo, env in workloads]
 
 
-def closed_loop_demo(store=None, *, verbose: bool = False) -> dict:
+def closed_loop_demo(store=None, *, verbose: bool = False,
+                     sharded: bool = False, n_shards: int = 2) -> dict:
     """The full predict → execute → log → refit → invalidate chain on a
     small live scenario; returns the audit trail the bench and tests
     assert on.
@@ -146,6 +164,11 @@ def closed_loop_demo(store=None, *, verbose: bool = False) -> dict:
     square heuristic, but its measured record refits the estimator, so the
     second gmm run is answered by the model — and the serving memo is
     provably flushed in between (``invalidations`` bumps).
+
+    ``sharded=True`` runs the same loop through the concurrent serving
+    tier (``serve/router.py``'s ``ShardRouter``) instead of a bare
+    ``EstimatorService``: predictions route through per-shard replicas
+    and the refit lands via snapshot→swap.
     """
     from repro.core.gridsearch import grid_search
     from repro.data.datasets import gaussian_blobs
@@ -157,26 +180,40 @@ def closed_loop_demo(store=None, *, verbose: bool = False) -> dict:
     log, _ = grid_search(Xk, yk, "kmeans", env, mult=1,
                          reuse_measurements=True, store=store)
     est = BlockSizeEstimator("tree").fit(log)
-    service = EstimatorService(est)
-    loop = AutoTunedRun(service, store)
-    # prime the serving memo so the post-refit flush is observable
-    primed = service.predict((256, 16, "kmeans", env.features()))
+    if sharded:
+        from repro.serve.router import ShardRouter
+        service = ShardRouter(est, n_shards=n_shards, window_s=0.0)
+    else:
+        service = EstimatorService(est)
+    try:
+        loop = AutoTunedRun(service, store)
+        # prime the serving memo so the post-refit flush is observable
+        primed = service.predict((256, 16, "kmeans", env.features()))
 
-    Xg, yg = gaussian_blobs(192, 12, seed=8)
-    v0 = est.model_version
-    first = loop.run(Xg, yg, "gmm", env)
-    second = loop.run(Xg, yg, "gmm", env)
+        Xg, yg = gaussian_blobs(192, 12, seed=8)
+        v0 = est.model_version
+        first = loop.run(Xg, yg, "gmm", env)
+        second = loop.run(Xg, yg, "gmm", env)
+        # touch the primed bucket again: its shard/memo was filled under
+        # v0, so this access is what observably flushes it post-refit
+        service.predict((256, 16, "kmeans", env.features()))
+        invalidations = (service.stats()["invalidations"] if sharded
+                         else service.invalidations)
+    finally:
+        if sharded:
+            service.close()
     trail = {
         "primed_kmeans": list(primed),
         "first_chosen_by": first.chosen_by,          # "default" (abstained)
         "second_chosen_by": second.chosen_by,        # "model" (refit took)
         "first_retrained": first.retrained,
         "versions": [v0, first.model_version, second.model_version],
-        "invalidations": service.invalidations,
+        "invalidations": invalidations,
         "appended": [first.appended, second.appended],
         "partitions": [[first.p_r, first.p_c], [second.p_r, second.p_c]],
         "times_s": [first.time_s, second.time_s],
         "store_sources": store.sources() if store is not None else None,
+        "sharded": n_shards if sharded else 0,
     }
     if verbose:
         print(f"  closed loop: run1 by {first.chosen_by} "
@@ -184,5 +221,5 @@ def closed_loop_demo(store=None, *, verbose: bool = False) -> dict:
               f"(v{v0}->v{first.model_version}) -> run2 by "
               f"{second.chosen_by} ({second.p_r},{second.p_c}) "
               f"{second.time_s:.4f}s; service invalidations="
-              f"{service.invalidations}", flush=True)
+              f"{invalidations}", flush=True)
     return trail

@@ -1,0 +1,24 @@
+"""Online serving subsystem (DESIGN.md §10): sharded estimation service,
+background refit daemon, and the closed-loop load generator.
+
+Quickstart::
+
+    est = BlockSizeEstimator("tree").fit(store.load())
+    with ShardRouter(est, n_shards=4) as router:
+        daemon = RefitDaemon(router, store).start()
+        p_r, p_c = router.predict((n_rows, n_cols, "kmeans", env.features()))
+        ...
+        daemon.stop()
+
+``python -m repro.launch.serve_estimator`` fronts the whole tier from a
+persistent LogStore; ``benchmarks/serving_bench.py`` load-tests it.
+"""
+from repro.serve.loadgen import (make_trace, make_universe, run_load,
+                                 staleness_violations)
+from repro.serve.refit import RefitDaemon
+from repro.serve.router import (HashRing, RouterClosed, RouterRejected,
+                                ServeResult, Shard, ShardRouter)
+
+__all__ = ["HashRing", "RefitDaemon", "RouterClosed", "RouterRejected",
+           "ServeResult", "Shard", "ShardRouter", "make_trace",
+           "make_universe", "run_load", "staleness_violations"]

@@ -1,0 +1,190 @@
+"""Closed-loop load generator for the sharded serving tier.
+
+``make_trace`` builds a seeded, fully deterministic request trace over a
+realistic mix of query kinds:
+
+* ``hot``      — a handful of keys replayed over and over (the memo-local
+                 traffic consistent hashing is for);
+* ``zipf``     — Zipf-distributed popularity over the whole universe
+                 (few heavy keys, a long tail);
+* ``uniform``  — uniform over the universe (memo-unfriendly);
+* ``cold``     — queries for an algorithm the model abstains on, served
+                 by the default-heuristic fallback until a refit lands.
+
+``run_load`` replays a trace from K client threads, closed-loop (each
+client waits for its answer before sending the next request), and reports
+throughput, p50/p95/p99 latency, per-shard hit rates, and **staleness
+violations**: a request enqueued after a ``ShardRouter.swap`` completed
+but served by an older ``model_version`` — the router's staleness
+contract says this count is always zero, and the serving bench gates on
+exactly that.
+"""
+from __future__ import annotations
+
+import threading
+import time
+
+import numpy as np
+
+from repro.serve.router import RouterRejected
+
+KINDS = ("hot", "zipf", "uniform", "cold")
+DEFAULT_WEIGHTS = {"hot": 0.45, "zipf": 0.30, "uniform": 0.15, "cold": 0.10}
+
+
+def make_universe(shapes, algos, envs) -> list:
+    """Cross shapes x algos x environments into estimator-style queries
+    ``(n_rows, n_cols, algo, env_features)``.  ``envs`` may hold
+    ``Environment`` objects or ready feature dicts."""
+    universe = []
+    for env in envs:
+        feats = env.features() if hasattr(env, "features") else dict(env)
+        for algo in algos:
+            for n, m in shapes:
+                universe.append((int(n), int(m), algo, feats))
+    return universe
+
+
+def make_trace(n_requests: int, universe, *, seed: int = 0,
+               cold_queries=(), weights=None, hot_size: int = 4,
+               zipf_a: float = 1.4) -> list:
+    """Deterministic ``[(kind, query), ...]`` trace: same seed, same
+    universe → byte-identical trace (asserted in tests/test_serving.py).
+    With no ``cold_queries`` the cold share is folded into ``uniform``."""
+    if not universe:
+        raise ValueError("empty query universe")
+    universe = list(universe)
+    cold_queries = list(cold_queries)
+    w = dict(DEFAULT_WEIGHTS)
+    w.update(weights or {})
+    if not cold_queries:
+        w["uniform"] = w.get("uniform", 0.0) + w.pop("cold", 0.0)
+        w["cold"] = 0.0
+    names = [k for k in KINDS if w.get(k, 0.0) > 0.0]
+    probs = np.array([w[k] for k in names], dtype=float)
+    probs /= probs.sum()
+    rng = np.random.default_rng(seed)
+    hot = universe[:max(1, min(hot_size, len(universe)))]
+    kinds = rng.choice(len(names), size=n_requests, p=probs)
+    trace = []
+    for k in kinds:
+        name = names[k]
+        if name == "hot":
+            q = hot[rng.integers(len(hot))]
+        elif name == "zipf":
+            q = universe[(int(rng.zipf(zipf_a)) - 1) % len(universe)]
+        elif name == "uniform":
+            q = universe[rng.integers(len(universe))]
+        else:
+            q = cold_queries[rng.integers(len(cold_queries))]
+        trace.append((name, q))
+    return trace
+
+
+def _percentile_ms(latencies_s, p: float) -> float:
+    if len(latencies_s) == 0:
+        return float("nan")
+    return float(np.percentile(np.asarray(latencies_s), p) * 1e3)
+
+
+def staleness_violations(served, swap_log) -> int:
+    """Count requests enqueued after a swap completed yet served by an
+    older model version.  ``swap_log`` is ``ShardRouter.swap_log``:
+    ``(monotonic completion time, version)`` in swap order, epoch 0
+    included.  A request that was enqueued at ``t_enq`` must observe the
+    version of the latest swap with completion time <= ``t_enq`` (newer is
+    fine — the swap may have landed while it waited in queue)."""
+    if not swap_log:
+        return 0
+    times = [t for t, _ in swap_log]
+    versions = [v for _, v in swap_log]
+    bad = 0
+    for r in served:
+        v = r.get("model_version")
+        if v is None:
+            continue
+        # latest swap completed at or before enqueue
+        i = 0
+        for j, t in enumerate(times):
+            if t <= r["t_enq"]:
+                i = j
+        if v < versions[i]:
+            bad += 1
+    return bad
+
+
+def run_load(router, trace, *, n_clients: int = 4, timeout: float = 30.0,
+             include_latencies: bool = False) -> dict:
+    """Replay ``trace`` against ``router`` from ``n_clients`` closed-loop
+    client threads (client *i* owns ``trace[i::n_clients]``, so the
+    per-client request order is deterministic) and aggregate the serving
+    report."""
+    results: list = [None] * len(trace)
+
+    def client(ci: int):
+        for i in range(ci, len(trace), n_clients):
+            kind, query = trace[i]
+            try:
+                r = router.request(query, timeout=timeout)
+            except RouterRejected:
+                results[i] = {"kind": kind, "rejected": True}
+                continue
+            except Exception as e:
+                # a serving failure must not kill the client thread and
+                # silently drop the rest of its trace slice — record it so
+                # the report surfaces the root cause
+                results[i] = {"kind": kind, "rejected": False,
+                              "error": repr(e)}
+                continue
+            results[i] = {"kind": kind, "rejected": False, "shard": r.shard,
+                          "model_version": r.model_version,
+                          "chosen_by": r.chosen_by, "t_enq": r.t_enq,
+                          "latency_s": r.latency_s}
+
+    threads = [threading.Thread(target=client, args=(ci,),
+                                name=f"loadgen-client-{ci}", daemon=True)
+               for ci in range(max(1, n_clients))]
+    t0 = time.monotonic()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    wall = max(time.monotonic() - t0, 1e-9)
+
+    done = [r for r in results if r is not None]
+    errors = [r for r in done if r.get("error")]
+    served = [r for r in done if not r["rejected"] and not r.get("error")]
+    lat = [r["latency_s"] for r in served]
+    by_kind = {}
+    for kind in KINDS:
+        rs = [r for r in done if r["kind"] == kind]
+        if not rs:
+            continue
+        ok = [r for r in rs if not r["rejected"] and not r.get("error")]
+        by_kind[kind] = {
+            "n": len(rs), "served": len(ok),
+            "rejected": sum(1 for r in rs if r["rejected"]),
+            "default_frac": (sum(1 for r in ok
+                                 if r["chosen_by"] == "default") / len(ok)
+                             if ok else 0.0)}
+    report = {
+        "requests": len(trace),
+        "served": len(served),
+        "rejected": sum(1 for r in done if r["rejected"]),
+        "errors": len(errors),
+        "first_error": errors[0]["error"] if errors else None,
+        "n_clients": n_clients,
+        "wall_s": wall,
+        "throughput_rps": len(served) / wall,
+        "p50_ms": _percentile_ms(lat, 50),
+        "p95_ms": _percentile_ms(lat, 95),
+        "p99_ms": _percentile_ms(lat, 99),
+        "mean_ms": float(np.mean(lat) * 1e3) if lat else float("nan"),
+        "staleness_violations": staleness_violations(served,
+                                                     router.swap_log),
+        "by_kind": by_kind,
+        "router": router.stats(),
+    }
+    if include_latencies:
+        report["latencies_ms"] = [v * 1e3 for v in lat]
+    return report

@@ -1,0 +1,454 @@
+"""Online serving subsystem (src/repro/serve/, DESIGN.md §10): router
+key-affinity, bounded-queue backpressure, refit-swap staleness contract,
+loadgen determinism, graceful drain, and LogStore concurrency."""
+import json
+import threading
+import time
+from pathlib import Path
+
+import pytest
+
+from repro.core.estimator import BlockSizeEstimator, EstimatorService
+from repro.core.features import dataset_features
+from repro.core.log import ExecutionRecord
+from repro.data.executor import Environment
+from repro.data.logstore import LogStore
+from repro.eval.autorun import closed_loop_demo, default_partitioning
+from repro.serve import (HashRing, RefitDaemon, RouterClosed,
+                         RouterRejected, ShardRouter, make_trace, run_load)
+
+ENV = Environment(name="laptop", n_workers=4, n_nodes=1, mem_limit_mb=2048.0,
+                  dispatch_overhead_s=1e-4, ram_gb=16)
+
+
+def synth_records(algo, shapes, best_pr, *, best_s=0.1, worse_s=2.0):
+    """Synthetic grid cells with the argmin at (best_pr, 1): one fast
+    record there, slower ones at the other row counts."""
+    recs = []
+    for n, m in shapes:
+        for p_r in (1, 2, 4, 8):
+            t = best_s if p_r == best_pr else worse_s + p_r
+            recs.append(ExecutionRecord(dataset_features(n, m), algo,
+                                        ENV.features(), p_r, 1, t, {}))
+    return recs
+
+
+SHAPES = ((256, 16), (512, 16), (128, 32), (64, 8), (1024, 64))
+
+
+@pytest.fixture
+def fitted_est():
+    recs = (synth_records("kmeans", SHAPES, best_pr=4)
+            + synth_records("gmm", SHAPES, best_pr=2))
+    return BlockSizeEstimator("tree").fit(recs)
+
+
+class SlowEstimator:
+    """Stub backend whose batched predict sleeps — for backpressure and
+    drain tests."""
+    is_fit = True
+    s = 2
+
+    def __init__(self, delay=0.05):
+        self.delay = delay
+        self.model_version = 1
+        self.calls = 0
+
+    def abstains(self, algo):
+        return False
+
+    def predict_partitions_batch(self, queries):
+        time.sleep(self.delay)
+        self.calls += 1
+        return [(2, 1)] * len(queries)
+
+
+def q(n, m, algo="kmeans"):
+    return (n, m, algo, ENV.features())
+
+
+# ---------------------------------------------------------------- hashing
+def test_hash_ring_stable_and_covering():
+    a, b = HashRing(4), HashRing(4)
+    keys = [("k", i, "algo") for i in range(200)]
+    assert [a.shard_for(k) for k in keys] == [b.shard_for(k) for k in keys]
+    assert set(a.shard_for(k) for k in keys) == {0, 1, 2, 3}
+
+
+def test_router_key_affinity(fitted_est):
+    with ShardRouter(fitted_est, n_shards=4, window_s=0.0) as router:
+        queries = [q(*s) for s in SHAPES] + [q(192, 12, "gmm")]
+        shards = {}
+        for _ in range(3):
+            for query in queries:
+                res = router.request(query)
+                key = router.shards[0].service._key(query)
+                assert shards.setdefault(key, res.shard) == res.shard, \
+                    "same canonical key served by two shards"
+                assert res.shard == router.shard_for(query)
+        st = router.stats()
+        # every repeat after the first touch of a key is a memo hit
+        assert st["hits"] >= 2 * len(queries)
+        assert st["served"] == 3 * len(queries)
+
+
+def test_bucketed_keys_share_a_shard(fitted_est):
+    """Shapes in the same power-of-two bucket are one canonical key."""
+    with ShardRouter(fitted_est, n_shards=4, window_s=0.0) as router:
+        r1 = router.request(q(200, 16))      # bucket (256, 16)
+        r2 = router.request(q(256, 16))
+        assert r1.shard == r2.shard
+        assert router.stats()["hits"] >= 1
+
+
+# ----------------------------------------------------------- backpressure
+def _fire(router, n, results):
+    def one(i):
+        try:
+            results[i] = router.request(q(256 + i, 16), timeout=30)
+        except (RouterRejected, RouterClosed) as e:
+            results[i] = e
+    threads = [threading.Thread(target=one, args=(i,)) for i in range(n)]
+    for t in threads:
+        t.start()
+    return threads
+
+
+def test_backpressure_reject():
+    router = ShardRouter(SlowEstimator(delay=0.1), n_shards=1,
+                         queue_depth=2, admission="reject", batch_max=1,
+                         window_s=0.0)
+    try:
+        results = [None] * 10
+        for t in _fire(router, 10, results):
+            t.join()
+        rejected = [r for r in results if isinstance(r, RouterRejected)]
+        served = [r for r in results if not isinstance(r, Exception)]
+        assert len(rejected) + len(served) == 10
+        assert rejected, "depth-2 queue under 10 bursty clients never filled"
+        assert served, "nothing served at all"
+        assert router.stats()["rejected"] == len(rejected)
+    finally:
+        router.close()
+
+
+def test_backpressure_block_drops_nothing():
+    router = ShardRouter(SlowEstimator(delay=0.02), n_shards=1,
+                         queue_depth=2, admission="block", batch_max=4,
+                         window_s=0.0)
+    try:
+        results = [None] * 10
+        for t in _fire(router, 10, results):
+            t.join()
+        assert all(not isinstance(r, Exception) and r is not None
+                   for r in results)
+        assert router.stats()["rejected"] == 0
+        assert router.stats()["served"] == 10
+    finally:
+        router.close()
+
+
+# ------------------------------------------------------------ refit/swap
+def test_swap_serves_no_stale_memo(fitted_est):
+    """A refit snapshot swapped in mid-serve must flush the shard memo:
+    the same query re-asked answers from the new model (new label, new
+    version tag)."""
+    with ShardRouter(fitted_est, n_shards=1, window_s=0.0) as router:
+        before = router.request(q(256, 16))
+        assert before.value == (4, 1)            # argmin planted at p_r=4
+        assert before.model_version == fitted_est.model_version
+
+        # new evidence: p_r=8 is now strictly fastest for every kmeans group
+        moved = synth_records("kmeans", SHAPES, best_pr=8, best_s=0.01,
+                              worse_s=5.0)
+        assert router.refit(moved) is True
+        assert router.backend is not fitted_est   # snapshot swapped in
+
+        after = router.request(q(256, 16))
+        assert after.model_version == before.model_version + 1
+        assert after.value == (8, 1), "stale memo entry served after swap"
+        assert router.stats()["invalidations"] == 1
+
+
+def test_swap_backend_same_version_still_flushes(fitted_est):
+    """Racing refitters can produce a different object with the same
+    version number; swap_backend must flush the memo anyway."""
+    svc = EstimatorService(fitted_est)
+    svc.predict(q(256, 16))
+    assert svc._memo
+    twin = fitted_est.snapshot()        # same model_version, new object
+    svc.swap_backend(twin)
+    assert not svc._memo and svc.invalidations == 1
+
+
+def test_refit_daemon_poll_once(tmp_path, fitted_est):
+    store = LogStore(tmp_path / "s.jsonl")
+    with ShardRouter(fitted_est, n_shards=2, window_s=0.0) as router:
+        daemon = RefitDaemon(router, store)     # not started: driven by hand
+        assert daemon.poll_once() is False      # nothing appended yet
+        assert fitted_est.abstains("pca")
+        store.append(synth_records("pca", SHAPES[:2], best_pr=2),
+                     source="grid_search")
+        assert daemon.poll_once() is True
+        assert router.estimator is not fitted_est
+        assert not router.estimator.abstains("pca")
+        assert router.estimator.model_version == fitted_est.model_version + 1
+        # fitted_est itself was never touched (snapshot-only learning)
+        assert fitted_est.abstains("pca")
+
+
+def test_refit_swap_under_load_no_staleness(tmp_path, fitted_est):
+    """Clients hammer the router while a writer appends new training data
+    and the daemon refits/swaps: no request enqueued after a swap may be
+    served by an older model_version."""
+    store = LogStore(tmp_path / "s.jsonl")
+    router = ShardRouter(fitted_est, n_shards=4, window_s=0.0)
+    daemon = RefitDaemon(router, store, interval_s=0.005).start()
+    try:
+        universe = [q(*s) for s in SHAPES] + [q(*s, "gmm") for s in SHAPES]
+        trace = make_trace(150, universe, seed=3,
+                           cold_queries=[q(256, 16, "pca")])
+        writer = threading.Thread(
+            target=lambda: store.append(
+                synth_records("pca", SHAPES[:3], best_pr=4), source="w"),
+            daemon=True)
+        writer.start()
+        report = run_load(router, trace, n_clients=4)
+        writer.join()
+        deadline = time.time() + 10
+        while daemon.swaps < 1 and time.time() < deadline:
+            time.sleep(0.005)
+        assert daemon.swaps >= 1, daemon.last_error
+        report2 = run_load(router, trace, n_clients=4)
+        assert report["staleness_violations"] == 0
+        assert report2["staleness_violations"] == 0
+        assert report2["by_kind"]["cold"]["default_frac"] == 0.0, \
+            "pca still served by the default heuristic after the swap"
+        versions = [v for _, v in router.swap_log]
+        assert versions == sorted(versions)
+    finally:
+        daemon.stop()
+        router.close()
+
+
+def test_abstain_served_by_default_heuristic():
+    """An unfitted backend serves everything via the default square
+    heuristic — tagged "default", never memoized, never raising."""
+    est = BlockSizeEstimator("tree")            # never fit
+    with ShardRouter(est, n_shards=2, window_s=0.0) as router:
+        res = router.request(q(300, 20))
+        assert res.chosen_by == "default"
+        assert res.value == default_partitioning(300, 20, ENV)
+        st = router.stats()
+        assert st["abstained"] == 1 and st["hits"] == st["misses"] == 0
+
+
+def test_predict_batch_enqueues_before_waiting():
+    """predict_batch must share micro-batch windows, not pay N sequential
+    round trips."""
+    stub = SlowEstimator(delay=0.05)
+    router = ShardRouter(stub, n_shards=1, batch_max=16, window_s=0.01)
+    try:
+        queries = [q(2 ** (i + 4), 16) for i in range(8)]  # distinct keys
+        t0 = time.monotonic()
+        out = router.predict_batch(queries)
+        wall = time.monotonic() - t0
+        assert out == [(2, 1)] * 8
+        assert stub.calls <= 4, "queries served one-per-batch"
+        assert wall < 8 * 0.05
+    finally:
+        router.close()
+
+
+def test_poisoned_query_fails_batch_not_shard(fitted_est):
+    """A query that blows up in the abstain fallback must error its own
+    request; the worker survives and keeps serving the shard."""
+    def bad_fallback(query):
+        raise RuntimeError("boom")
+
+    with ShardRouter(fitted_est, n_shards=1, window_s=0.0,
+                     abstain_fallback=bad_fallback) as router:
+        with pytest.raises(RuntimeError, match="boom"):
+            router.request(q(256, 16, "pca"), timeout=5)   # abstains
+        res = router.request(q(256, 16), timeout=5)        # shard alive
+        assert res.chosen_by == "model"
+        assert router.shards[0].thread.is_alive()
+
+
+# ---------------------------------------------------------------- loadgen
+def test_loadgen_trace_deterministic():
+    universe = [q(*s) for s in SHAPES]
+    cold = [q(256, 16, "pca")]
+    t1 = make_trace(200, universe, seed=11, cold_queries=cold)
+    t2 = make_trace(200, universe, seed=11, cold_queries=cold)
+    assert t1 == t2
+    assert t1 != make_trace(200, universe, seed=12, cold_queries=cold)
+    kinds = {k for k, _ in t1}
+    assert kinds == {"hot", "zipf", "uniform", "cold"}
+    assert all(algo == "pca" for k, (_, _, algo, _) in t1 if k == "cold")
+
+
+def test_loadgen_no_cold_queries_folds_into_uniform():
+    trace = make_trace(50, [q(256, 16)], seed=0)
+    assert all(k != "cold" for k, _ in trace)
+
+
+def test_run_load_report(fitted_est):
+    with ShardRouter(fitted_est, n_shards=2, window_s=0.0) as router:
+        trace = make_trace(60, [q(*s) for s in SHAPES], seed=1)
+        report = run_load(router, trace, n_clients=3)
+        assert report["served"] == 60 and report["rejected"] == 0
+        assert report["staleness_violations"] == 0
+        assert report["p50_ms"] <= report["p95_ms"] <= report["p99_ms"]
+        assert report["throughput_rps"] > 0
+        assert sum(p["served"] for p in
+                   report["router"]["per_shard"]) == 60
+
+
+# --------------------------------------------------------------- shutdown
+def test_graceful_drain_serves_everything_queued():
+    router = ShardRouter(SlowEstimator(delay=0.03), n_shards=1,
+                         queue_depth=32, admission="block", batch_max=2,
+                         window_s=0.0)
+    results = [None] * 8
+    threads = _fire(router, 8, results)
+    time.sleep(0.02)                      # let the clients enqueue
+    router.close(drain=True)
+    for t in threads:
+        t.join()
+    assert all(r is not None and not isinstance(r, Exception)
+               for r in results), results
+    assert router.pending == 0
+    assert not any(sh.thread.is_alive() for sh in router.shards)
+    with pytest.raises(RouterClosed):
+        router.request(q(1, 1))
+
+
+def test_close_without_drain_cancels_queued():
+    router = ShardRouter(SlowEstimator(delay=0.1), n_shards=1,
+                         queue_depth=32, admission="block", batch_max=1,
+                         window_s=0.0)
+    results = [None] * 6
+    threads = _fire(router, 6, results)
+    time.sleep(0.02)
+    router.close(drain=False)
+    for t in threads:
+        t.join()
+    # every client got *an* answer: served before the close, or cancelled
+    assert all(r is not None for r in results)
+    assert any(isinstance(r, RouterClosed) for r in results) or \
+        all(not isinstance(r, Exception) for r in results)
+
+
+# ----------------------------------------------------- LogStore concurrency
+def _rec(i, algo="kmeans"):
+    return ExecutionRecord(dataset_features(64 + i, 8), algo,
+                           ENV.features(), 1 + i % 4, 1, 0.5 + i, {})
+
+
+def test_logstore_concurrent_appends_one_instance(tmp_path):
+    """Regression: concurrent writers (autorun loop + refit daemon's
+    sweeps) sharing one store must neither lose nor duplicate records."""
+    store = LogStore(tmp_path / "s.jsonl")
+    recs = [_rec(i) for i in range(40)]
+
+    def writer(w):
+        for i in range(40):               # overlapping slices, shuffled
+            store.append([recs[(i * 7 + w * 13) % 40]], source=f"w{w}")
+
+    threads = [threading.Thread(target=writer, args=(w,)) for w in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert len(store) == 40
+    lines = [ln for ln in
+             (tmp_path / "s.jsonl").read_text().splitlines() if ln.strip()]
+    assert len(lines) == 41               # header + one line per record
+    assert len(LogStore(tmp_path / "s.jsonl")) == 40
+
+
+def test_logstore_concurrent_two_instances(tmp_path):
+    """Two store instances on the same path (two processes in real life)
+    appending overlapping records converge to the deduped union."""
+    path = tmp_path / "s.jsonl"
+    a, b = LogStore(path), LogStore(path)
+    recs = [_rec(i) for i in range(30)]
+
+    def writer(store, lo, hi):
+        for i in range(lo, hi):
+            store.append([recs[i]])
+
+    threads = [threading.Thread(target=writer, args=(a, 0, 20)),
+               threading.Thread(target=writer, args=(b, 10, 30))]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    fresh = LogStore(path)
+    assert len(fresh) == 30
+    keys = [r.record_key() for r, _ in fresh.iter_records()]
+    assert len(set(keys)) == 30
+
+
+def test_logstore_follow_cursor(tmp_path):
+    path = tmp_path / "s.jsonl"
+    store = LogStore(path)
+    store.append([_rec(i) for i in range(3)], source="seed")
+    pairs, cur = store.follow(0)
+    assert len(pairs) == 3 and cur == 3
+    # appends through ANOTHER instance are visible to the tail
+    other = LogStore(path)
+    other.append([_rec(i) for i in range(3, 5)], source="live")
+    pairs, cur = store.follow(cur)
+    assert [src for _, src in pairs] == ["live", "live"] and cur == 5
+    pairs, cur = store.follow(cur)
+    assert pairs == [] and cur == 5
+
+
+def test_logstore_survives_partial_trailing_line(tmp_path):
+    """A writer killed mid-line must not corrupt the store: the next
+    append terminates the broken tail instead of fusing records onto it,
+    and readers skip it."""
+    path = tmp_path / "s.jsonl"
+    store = LogStore(path)
+    store.append([_rec(0)])
+    with path.open("a") as f:                 # simulate a crashed writer
+        f.write('{"dataset": {"rows": 1')
+    store.append([_rec(1), _rec(2)])
+    assert len(store) == 3 and store.skipped_lines == 1
+    fresh = LogStore(path)                    # file still parseable
+    assert len(fresh) == 3 and fresh.skipped_lines == 1
+    pairs, cur = store.follow(0)
+    assert len(pairs) == 3 and cur == 3
+
+
+# -------------------------------------------------- closed loop + CLI
+@pytest.mark.slow
+def test_closed_loop_through_sharded_service(tmp_path):
+    store = LogStore(tmp_path / "loop.jsonl")
+    trail = closed_loop_demo(store, sharded=True, n_shards=2)
+    assert trail["sharded"] == 2
+    assert trail["first_chosen_by"] == "default"
+    assert trail["second_chosen_by"] == "model"
+    assert trail["first_retrained"] is True
+    assert trail["versions"][1] > trail["versions"][0]
+    assert trail["invalidations"] >= 1
+    assert trail["store_sources"].get("autorun", 0) >= 1
+
+
+def test_serve_estimator_cli(tmp_path, capsys):
+    from repro.launch import serve_estimator
+    store = LogStore(tmp_path / "s.jsonl")
+    store.append(synth_records("kmeans", SHAPES, best_pr=4)
+                 + synth_records("gmm", SHAPES, best_pr=2), source="seed")
+    out = tmp_path / "report.json"
+    report = serve_estimator.main(["--store", str(tmp_path / "s.jsonl"),
+                                   "--requests", "60", "--clients", "2",
+                                   "--shards", "2", "--window-ms", "0",
+                                   "--json", str(out)])
+    assert report["served"] == 60
+    assert report["staleness_violations"] == 0
+    assert report["router"]["n_shards"] == 2
+    assert json.loads(Path(out).read_text())["served"] == 60
+    assert "throughput" in capsys.readouterr().out
