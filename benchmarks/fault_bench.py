@@ -1,0 +1,353 @@
+"""Chaos bench for the fault-tolerant elastic runtime (DESIGN.md §11):
+seeded failure injection across all three tiers, with the recovery
+contracts asserted and gated.
+
+Writes ``BENCH_fault.json`` at the repo root:
+
+  * structural contracts the CI gate checks exactly — recovered results
+    bit-identical to the fault-free run, zero requests lost and zero
+    staleness violations under a shard-worker crash, one injected crash
+    and one respawn, the refit daemon resuming from its durable cursor;
+  * banded metrics — at least one lineage re-execution, recovery beating
+    restart-from-scratch (task-graph and elastic tiers), at least one
+    ring re-route;
+  * recorded-only wall-clock and event details (never gated).
+
+Three scenarios, each fully seeded:
+
+  A. **Task-graph chaos** — a kmeans DAG under a ``FaultPlan``: one
+     worker lost mid-run (at a fraction of the *measured* fault-free
+     makespan, retried across fractions until the loss catches a task in
+     flight), one worker slowed with a straggler detector watching, and
+     transient failures retried through the real ``RetryPolicy``.  The
+     recovered result must be bit-identical to the fault-free run, and
+     the recovery makespan must beat the restart-from-scratch baseline
+     (loss time + the full workload re-run on the degraded pool, same
+     chaos plan with the loss moved to t=0 — restart faces identical
+     post-loss conditions but re-pays all pre-loss work).
+
+  B. **Elastic scale-up** — ``AutoTunedRun.run_elastic``: the
+     environment grows mid-run, the estimator is re-queried, the
+     in-flight ``DistArray`` live-repartitions by ``refine`` (views, no
+     copies), and the finished run must match the restart baseline's
+     result while beating its time.
+
+  C. **Serving chaos** — a shard worker crashes *holding a batch* under
+     closed-loop load: the router respawns the shard and ring-re-routes
+     every orphaned request (zero lost, zero staleness violations even
+     with a concurrent model swap); a request past its deadline is
+     dropped unserved with ``DeadlineExceeded``; the refit daemon is
+     "crashed" and a replacement resumes from the persisted cursor.
+
+Usage:
+  python -m benchmarks.fault_bench --smoke     # what CI runs (default)
+  python -m benchmarks.fault_bench --full      # more load, more rounds
+
+Prints ``name,us_per_call,derived`` CSV rows (harness convention).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import tempfile
+import time
+from pathlib import Path
+
+import numpy as np
+
+from repro.algorithms import kmeans as kmeans_mod
+from repro.core.estimator import BlockSizeEstimator
+from repro.core.gridsearch import grid_search
+from repro.data.datasets import gaussian_blobs
+from repro.data.distarray import DistArray
+from repro.data.executor import Environment, TaskExecutor
+from repro.data.logstore import LogStore
+from repro.eval.autorun import AutoTunedRun, EnvChange
+from repro.runtime.fault import (FaultPlan, RetryPolicy, Slowdown,
+                                 StragglerConfig, WorkerLoss)
+from repro.serve import (DeadlineExceeded, RefitDaemon, ShardRouter,
+                         make_trace, run_load)
+
+from benchmarks.common import csv_row
+
+OUT = Path(__file__).resolve().parent.parent / "BENCH_fault.json"
+
+ENV4 = Environment(name="laptop", n_workers=4, n_nodes=1,
+                   mem_limit_mb=2048.0, dispatch_overhead_s=1e-4, ram_gb=16)
+ENV8 = Environment(name="laptop8", n_workers=8, n_nodes=1,
+                   mem_limit_mb=2048.0, dispatch_overhead_s=1e-4, ram_gb=16)
+SHAPES = ((256, 16), (512, 16), (1024, 32), (192, 12), (96, 24), (48, 8))
+
+# loss times to try, as fractions of the measured fault-free makespan --
+# the first fraction that catches a task in flight on the doomed worker
+# (>=1 lineage re-execution) wins; a loss landing in an idle gap kills
+# the worker without orphaning work, which is a weaker test.  Mid-run
+# first, then a dense sweep: measured durations vary run to run, so the
+# schedule's idle gaps move.
+LOSS_FRACTIONS = (0.5, 0.35, 0.65, 0.2, 0.8, 0.45, 0.3, 0.6, 0.25, 0.7,
+                  0.4, 0.55, 0.15, 0.75, 0.1)
+# straggler onsets to try (same reasoning: the slowed worker needs a few
+# healthy completions first, and the epochs drift with measured timings)
+ONSET_FRACTIONS = (0.3, 0.5, 0.2, 0.4, 0.1)
+
+
+def _kmeans_chaos(X, plan, env, iters):
+    ex = TaskExecutor(env, fault_plan=plan)
+    Xd = DistArray.from_array(X, 2, 2)
+    out = kmeans_mod.fit(ex, Xd, k=8, iters=iters, seed=0)
+    return ex, out
+
+
+def _assert_bit_identical(ref, out, what):
+    ok = (np.array_equal(ref["centers"], out["centers"])
+          and ref["inertia"] == out["inertia"]
+          and all(np.array_equal(a, b)
+                  for a, b in zip(ref["labels"], out["labels"])))
+    assert ok, f"{what} diverged from the fault-free result"
+    return ok
+
+
+def scenario_taskgraph(*, iters=6, verbose=True):
+    X, _ = gaussian_blobs(512, 24, seed=3)
+
+    # fault-free reference: the results chaos must reproduce bit-for-bit,
+    # and the makespan the chaos schedules are anchored to
+    ex0 = TaskExecutor(ENV4)
+    ref = kmeans_mod.fit(ex0, DistArray.from_array(X, 2, 2), k=8,
+                         iters=iters, seed=0)
+    t_free = ex0.sim_time
+    retry = RetryPolicy(max_retries=3, backoff_s=1e-4, jitter=0.1, seed=0)
+
+    # ---- worker loss + transients: lineage recovery vs restart
+    chosen = None
+    for frac in LOSS_FRACTIONS:
+        plan = FaultPlan(losses=(WorkerLoss(1, frac * t_free),),
+                         transient={3: 1, 11: 2}, retry=retry)
+        ex, out = _kmeans_chaos(X, plan, ENV4, iters)
+        fs = ex.fault_stats()
+        if fs["reexecuted_tasks"] >= 1:
+            chosen = (frac, ex, out, fs)
+            break
+    assert chosen is not None, \
+        f"no loss fraction in {LOSS_FRACTIONS} caught a task in flight"
+    frac, ex, out, fs = chosen
+    t_loss = frac * t_free
+    bit_identical = _assert_bit_identical(ref, out, "loss-chaos run")
+    assert fs["lost_workers"] == [1], fs
+    assert fs["transient_retries"] >= 1, fs
+
+    # restart-from-scratch baseline: throw away everything done before the
+    # loss and re-run the whole workload on the degraded pool (same chaos
+    # plan, loss moved to t=0 so the pool is degraded throughout -- the
+    # conditions recovery faced after the loss, minus the saved work)
+    plan_restart = FaultPlan(losses=(WorkerLoss(1, 0.0),),
+                             transient=plan.transient, retry=retry)
+    ex_r, out_r = _kmeans_chaos(X, plan_restart, ENV4, iters)
+    recovery_s = ex.sim_time
+    restart_s = t_loss + ex_r.sim_time
+    speedup = restart_s / max(recovery_s, 1e-12)
+    _assert_bit_identical(ref, out_r, "restart-baseline run")
+
+    # ---- slowdown + straggler detector: quarantine on normalized timings
+    straggler = StragglerConfig(window=16, threshold=2.0, patience=2,
+                                warmup=3)
+    quarantined, slow_events = [], []
+    for onset in ONSET_FRACTIONS:
+        plan_slow = FaultPlan(slowdowns=(Slowdown(2, 6.0,
+                                                  after=onset * t_free),),
+                              straggler=straggler)
+        ex_s, out_s = _kmeans_chaos(X, plan_slow, ENV4, iters)
+        fs_s = ex_s.fault_stats()
+        _assert_bit_identical(ref, out_s, "slowdown run")
+        if fs_s["quarantined_workers"]:
+            quarantined = fs_s["quarantined_workers"]
+            slow_events = fs_s["events"]
+            break
+    assert quarantined == [2], \
+        f"straggler never quarantined at onsets {ONSET_FRACTIONS}"
+
+    res = {
+        "bit_identical": bool(bit_identical),
+        "reexecuted": fs["reexecuted_tasks"],
+        "lost_workers": fs["lost_workers"],
+        "quarantined": len(quarantined),
+        "quarantined_workers": quarantined,
+        "transient_retries": fs["transient_retries"],
+        "retry_delay_s": fs["retry_delay_s"],
+        "loss_fraction": frac,
+        "faultfree_makespan_s": t_free,
+        "recovery_makespan_s": recovery_s,
+        "restart_makespan_s": restart_s,
+        "recovery_speedup": speedup,
+        "events": fs["events"] + slow_events,
+    }
+    csv_row("fault/taskgraph", recovery_s * 1e6,
+            f"reexec={fs['reexecuted_tasks']};retries="
+            f"{fs['transient_retries']};quarantined={len(quarantined)};"
+            f"speedup={speedup:.2f};bitident={bit_identical}")
+    if verbose:
+        print(f"# taskgraph chaos: loss@{frac:.2f}*T, "
+              f"{fs['reexecuted_tasks']} reexecuted, quarantined "
+              f"{quarantined}, speedup {speedup:.2f}")
+    return res
+
+
+def scenario_elastic(*, iters=6, verbose=True):
+    X, y = gaussian_blobs(256, 16, seed=5)
+    est = BlockSizeEstimator("tree")          # unfit -> default heuristic,
+    loop = AutoTunedRun(est, None, refit=False)  # fully deterministic grids
+    r = loop.run_elastic(X, y, "kmeans", ENV4,
+                         EnvChange(after_iter=iters // 2, env=ENV8,
+                                   reason="scale-up"),
+                         iters=iters)
+    assert r.repartition == "refine", r.repartition
+    assert r.results_close, "recovered centers != restarted centers"
+    assert r.speedup > 1.0, f"recovery did not beat restart: {r.speedup}"
+    res = {
+        "partitions": r.partitions,
+        "repartition": r.repartition,
+        "repartition_s": r.repartition_s,
+        "recovery_time_s": r.recovery_time_s,
+        "restart_time_s": r.restart_time_s,
+        "speedup": r.speedup,
+        "results_close": bool(r.results_close),
+        "record_source_recovery": bool(r.record.meta.get("recovery")),
+    }
+    csv_row("fault/elastic", r.recovery_time_s * 1e6,
+            f"{r.partitions[0]}->{r.partitions[1]};{r.repartition};"
+            f"speedup={r.speedup:.2f};close={r.results_close}")
+    if verbose:
+        print(f"# elastic scale-up: {r.partitions[0]} -> {r.partitions[1]} "
+              f"via {r.repartition}, speedup {r.speedup:.2f}")
+    return res
+
+
+def _sweep(store, algo, n, m, seed):
+    X, y = gaussian_blobs(n, m, seed=seed)
+    grid_search(X, y, algo, ENV4, mult=1, reuse_measurements=True,
+                store=store)
+
+
+def scenario_serving(*, requests=300, n_clients=4, n_shards=4, seed=0,
+                     verbose=True):
+    t0 = time.time()
+    with tempfile.TemporaryDirectory() as tmp:
+        store = LogStore(Path(tmp) / "fault_store.jsonl")
+        _sweep(store, "kmeans", 256, 16, seed=7)
+        est = BlockSizeEstimator("tree").fit(store.load())
+        feats = ENV4.features()
+        universe = [(n, m, "kmeans", feats) for n, m in SHAPES]
+
+        # ---- crash under load: the hot key's shard dies holding a batch
+        router = ShardRouter(est, n_shards=n_shards, queue_depth=256,
+                             admission="block", window_s=0.001)
+        trace = make_trace(requests, universe, seed=seed)
+        router.inject_crash(router.shard_for(trace[0][1]), after_batches=2)
+        rep = run_load(router, trace, n_clients=n_clients)
+        stats = router.stats()
+        lost = rep["requests"] - rep["served"]
+        assert lost == 0 and rep["errors"] == 0, \
+            f"requests lost under crash: {lost} ({rep['first_error']})"
+        assert rep["staleness_violations"] == 0
+        assert stats["crashes"] == 1 and stats["respawns"] == 1, stats
+        assert stats["rerouted"] >= 1, stats
+        assert stats["served"] == rep["requests"], \
+            "retired crashed-shard counters dropped from totals"
+
+        # ---- deadline: an already-expired request is dropped unserved
+        expired_raised = False
+        try:
+            router.request(universe[0], deadline_s=-1e-3)
+        except DeadlineExceeded:
+            expired_raised = True
+        assert expired_raised
+        served_after = router.request(universe[0], deadline_s=30.0)
+        assert served_after.value is not None
+        expired = router.stats()["expired"]
+        assert expired == 1, expired
+        router.close()
+
+        # ---- refit daemon crash/restart from the durable cursor
+        est2 = BlockSizeEstimator("tree").fit(store.load())
+        router = ShardRouter(est2, n_shards=2, window_s=0.001)
+        cursor_file = Path(tmp) / "refit.cursor"
+        d1 = RefitDaemon(router, store, cursor_path=cursor_file)
+        _sweep(store, "pca", 256, 16, seed=9)   # new algo -> must retrain
+        daemon_swapped = d1.poll_once()
+        assert daemon_swapped and d1.swaps == 1, (daemon_swapped, d1.swaps)
+        persisted = json.loads(cursor_file.read_text())["cursor"]
+        assert persisted == d1.cursor == len(store)
+        # "crash" d1 (just stop referencing it) and restart from the file
+        d2 = RefitDaemon(router, store, cursor_path=cursor_file)
+        daemon_resumed = d2.cursor == persisted
+        _sweep(store, "gmm", 192, 12, seed=8)   # post-restart learning works
+        resumed_swap = d2.poll_once()
+        assert daemon_resumed and resumed_swap, (daemon_resumed, resumed_swap)
+        assert d2.cursor == len(store)
+        router.close()
+
+    res = {
+        "requests": rep["requests"],
+        "served": rep["served"],
+        "lost_requests": lost,
+        "staleness_violations": rep["staleness_violations"],
+        "crashes": stats["crashes"],
+        "respawns": stats["respawns"],
+        "rerouted": stats["rerouted"],
+        "expired": expired,
+        "daemon_swapped": bool(daemon_swapped),
+        "daemon_resumed": bool(daemon_resumed),
+        "daemon_resumed_swap": bool(resumed_swap),
+        "throughput_rps": rep["throughput_rps"],
+        "p99_ms": rep["p99_ms"],
+        "wall_s": time.time() - t0,
+    }
+    csv_row("fault/serving", rep["wall_s"] / max(rep["served"], 1) * 1e6,
+            f"lost={lost};stale={rep['staleness_violations']};"
+            f"crashes={stats['crashes']};rerouted={stats['rerouted']};"
+            f"expired={expired}")
+    if verbose:
+        print(f"# serving chaos: {rep['served']}/{rep['requests']} served, "
+              f"{stats['rerouted']} rerouted, daemon resumed="
+              f"{daemon_resumed}")
+    return res
+
+
+def run(verbose=True, *, iters=6, requests=300, n_clients=4, n_shards=4,
+        seed=0):
+    t0 = time.time()
+    results = {
+        "taskgraph": scenario_taskgraph(iters=iters, verbose=verbose),
+        "elastic": scenario_elastic(iters=iters, verbose=verbose),
+        "serving": scenario_serving(requests=requests, n_clients=n_clients,
+                                    n_shards=n_shards, seed=seed,
+                                    verbose=verbose),
+    }
+    results["wall_s"] = time.time() - t0
+    OUT.write_text(json.dumps(results, indent=2) + "\n")
+    if verbose:
+        print(f"# wrote {OUT}")
+    return results
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description="fault-tolerance chaos bench")
+    ap.add_argument("--smoke", action="store_true",
+                    help="the fast CI configuration (this is the default)")
+    ap.add_argument("--full", action="store_true",
+                    help="more load: longer runs, more clients")
+    ap.add_argument("--requests", type=int, default=None)
+    ap.add_argument("--clients", type=int, default=None)
+    ap.add_argument("--shards", type=int, default=4)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+    requests = args.requests or (1000 if args.full else 300)
+    clients = args.clients or (8 if args.full else 4)
+    iters = 10 if args.full else 6
+    print("name,us_per_call,derived")
+    return run(iters=iters, requests=requests, n_clients=clients,
+               n_shards=args.shards, seed=args.seed)
+
+
+if __name__ == "__main__":
+    main()

@@ -10,10 +10,10 @@ import time
 
 SUITES = ("table2", "table3", "table4", "table6", "ablation", "meshtune",
           "kernel", "roofline", "hotpath", "taskgraph", "tuner", "eval",
-          "serving")
+          "serving", "fault")
 # fast suites with built-in correctness asserts -- CI runs these on every
 # push so bench modules can't silently rot between full runs
-SMOKE_SUITES = ("hotpath", "taskgraph", "tuner", "eval", "serving")
+SMOKE_SUITES = ("hotpath", "taskgraph", "tuner", "eval", "serving", "fault")
 
 
 def main(argv=None) -> None:
@@ -68,6 +68,9 @@ def main(argv=None) -> None:
     if "serving" in todo:
         from benchmarks import serving_bench
         serving_bench.run(verbose=verbose)
+    if "fault" in todo:
+        from benchmarks import fault_bench
+        fault_bench.run(verbose=verbose)
     print(f"# benchmarks done in {time.time()-t0:.1f}s")
 
 

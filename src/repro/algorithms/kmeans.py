@@ -67,14 +67,22 @@ def _kmeanspp(sample: np.ndarray, k: int, rng) -> np.ndarray:
 
 
 def fit(ex: TaskGraph, X: DistArray, *, k: int = 8, iters: int = 5,
-        seed: int = 0):
-    rng = np.random.default_rng(seed)
+        seed: int = 0, init_centers: np.ndarray | None = None):
     n, m = X.shape
-    # init: k-means++ over a globally-indexed row sample, so the fit is
-    # exactly invariant to (p_r, p_c) -- partitioning may change cost,
-    # never results
-    samp_idx = rng.choice(n, size=min(n, max(32 * k, 256)), replace=False)
-    centers = _kmeanspp(_gather_rows(X, np.sort(samp_idx)), k, rng)
+    if init_centers is not None:
+        # resume from given centers (elastic recovery: finish the
+        # remaining Lloyd iterations after a mid-run repartition); the
+        # trajectory continues exactly where the previous segment stopped
+        centers = np.asarray(init_centers)
+        k = len(centers)
+    else:
+        rng = np.random.default_rng(seed)
+        # init: k-means++ over a globally-indexed row sample, so the fit
+        # is exactly invariant to (p_r, p_c) -- partitioning may change
+        # cost, never results
+        samp_idx = rng.choice(n, size=min(n, max(32 * k, 256)),
+                              replace=False)
+        centers = _kmeanspp(_gather_rows(X, np.sort(samp_idx)), k, rng)
     ce = X.col_edges
 
     labels, inertia = [], np.inf

@@ -43,6 +43,7 @@ from __future__ import annotations
 
 import dataclasses
 import heapq
+import math
 import os
 import threading
 import time
@@ -50,9 +51,18 @@ from concurrent.futures import ThreadPoolExecutor
 
 import numpy as np
 
+from repro.runtime.fault import (AllWorkersLostError, FaultPlan,
+                                 FaultRuntime, TransientTaskError)
+
 
 class TaskMemoryError(MemoryError):
     pass
+
+
+class LineageMismatchError(RuntimeError):
+    """A lineage re-execution produced a value that is not bit-identical
+    to the original task's -- the task body is nondeterministic, so fault
+    recovery cannot guarantee the fault-free result."""
 
 
 @dataclasses.dataclass(frozen=True)
@@ -142,6 +152,128 @@ def phase_barrier_makespan(names, durations, deps, n_workers: int) -> float:
         cur_name = name
     total += lpt_makespan(cur, n_workers)
     return total
+
+
+def fault_list_schedule(durations, deps, retry_overhead, fault: FaultRuntime,
+                        *, t0: float = 0.0, dispatch_s: float = 0.0):
+    """Dependency-aware LPT list schedule under an injected fault plan.
+
+    Event-driven like :func:`list_schedule_makespan`, but worker-identity
+    aware: per-worker slowdown factors stretch effective durations, a
+    scheduled worker loss kills the worker (its in-flight task returns to
+    the ready queue and re-executes on a survivor -- the lineage path),
+    ``retry_overhead[i]`` (failed-attempt time plus the RetryPolicy's
+    virtual backoff sleep) is charged on a task's first dispatch, and each
+    completion feeds the worker's straggler detector; a worker whose
+    detector says "act" is quarantined, so the tasks that would have gone
+    to it are re-dispatched onto healthy workers.
+
+    ``fault`` carries worker state *across* epochs (a worker lost in one
+    ``collect()`` stays lost in the next); ``t0`` is the virtual time this
+    epoch starts at, so planned loss times land in the right epoch;
+    ``dispatch_s`` is the per-task dispatch overhead, charged as part of
+    each dispatch's busy interval (the timeline stays busy-dense — a loss
+    scheduled at any point of the makespan finds work in flight).
+    Returns ``(makespan_relative_to_t0, reexecuted_task_indices)``.
+    Raises :class:`~repro.runtime.fault.AllWorkersLostError` when no
+    healthy worker remains with work still pending.
+    """
+    n = len(durations)
+    if n == 0:
+        return 0.0, []
+    plan = fault.plan
+    succ: list[list[int]] = [[] for _ in range(n)]
+    indeg = [0] * n
+    for i, ds in enumerate(deps):
+        for d in ds:
+            succ[d].append(i)
+            indeg[i] += 1
+    ready = [(-durations[i], i) for i in range(n) if indeg[i] == 0]
+    heapq.heapify(ready)
+    busy: dict[int, tuple] = {}     # worker -> (task, t_start, t_end, first)
+    started = [0] * n               # dispatch count per task
+    reexecuted: list[int] = []
+    t = t0
+    done = 0
+
+    def fire_due_losses(now: float) -> None:
+        while fault.pending_losses and fault.pending_losses[0].at <= now:
+            loss = fault.pending_losses.pop(0)
+            w = loss.worker
+            if w in fault.lost:
+                continue
+            fault.lost.add(w)
+            t_ev = max(loss.at, t0)
+            fault.events.append({"kind": "worker_loss", "worker": w,
+                                 "t": t_ev})
+            if w in busy:           # in-flight task dies with the worker
+                i, _, _, _ = busy.pop(w)
+                reexecuted.append(i)
+                fault.reexecutions += 1
+                fault.events.append({"kind": "lineage_reexec", "task": i,
+                                     "worker": w, "t": t_ev})
+                heapq.heappush(ready, (-durations[i], i))
+
+    while done < n:
+        fire_due_losses(t)
+        free = [w for w in fault.healthy() if w not in busy]
+        while ready and free:
+            _, i = heapq.heappop(ready)
+            w = free.pop(0)
+            first = started[i] == 0
+            eff = durations[i] * plan.factor(w, t) + dispatch_s
+            if first:               # transient retries charged once
+                eff += retry_overhead[i]
+            started[i] += 1
+            busy[w] = (i, t, t + eff, first)
+        if not busy:
+            raise AllWorkersLostError(
+                f"no healthy workers left ({len(fault.lost)} lost, "
+                f"{len(fault.quarantined)} quarantined of "
+                f"{fault.n_workers}) with {n - done} tasks pending")
+        w_next = min(busy, key=lambda w: (busy[w][2], w))
+        t_end = busy[w_next][2]
+        next_loss = (fault.pending_losses[0].at if fault.pending_losses
+                     else math.inf)
+        if next_loss < t_end:       # the loss interrupts this completion
+            t = max(next_loss, t)
+            continue
+        i, t_start, _, first = busy.pop(w_next)
+        t = t_end
+        done += 1
+        # detector sees the slowdown-only effective time (normalized by
+        # the nominal measured duration inside observe) -- dispatch and
+        # retry overhead are not worker slowness, so both are excluded
+        eff_slow = (t_end - t_start - dispatch_s
+                    - (retry_overhead[i] if first else 0.0))
+        fault.observe(w_next, durations[i], eff_slow, t)
+        for s in succ[i]:
+            indeg[s] -= 1
+            if indeg[s] == 0:
+                heapq.heappush(ready, (-durations[s], s))
+    return t - t0, reexecuted
+
+
+def _bit_identical(a, b) -> bool:
+    """Deep bit-for-bit equality across the value shapes task bodies
+    return (ndarrays, tuples/lists/dicts, floats with NaN)."""
+    if isinstance(a, np.ndarray) or isinstance(b, np.ndarray):
+        if not (isinstance(a, np.ndarray) and isinstance(b, np.ndarray)):
+            return False
+        if a.shape != b.shape or a.dtype != b.dtype:
+            return False
+        if np.issubdtype(a.dtype, np.inexact):
+            return bool(np.array_equal(a, b, equal_nan=True))
+        return bool(np.array_equal(a, b))
+    if isinstance(a, (tuple, list)):
+        return (type(a) is type(b) and len(a) == len(b)
+                and all(_bit_identical(x, y) for x, y in zip(a, b)))
+    if isinstance(a, dict):
+        return (isinstance(b, dict) and a.keys() == b.keys()
+                and all(_bit_identical(v, b[k]) for k, v in a.items()))
+    if isinstance(a, float) and isinstance(b, float):
+        return a == b or (math.isnan(a) and math.isnan(b))
+    return type(a) is type(b) and a == b
 
 
 # --------------------------------------------------------------- signatures
@@ -293,6 +425,10 @@ class _Task:
     replayed: bool = False
     released: bool = False
     pending_children: int = 0   # submitted-but-unresolved consumers
+    lineage: tuple = None       # (fn, resolved args, kwargs) under a plan
+    retry_attempts: int = 0     # >0 when transient failures were injected
+    retry_delay: float = 0.0    # virtual backoff sleep the retries accrued
+    reexecuted: bool = False    # re-run from lineage after a worker loss
 
 
 def _resolve(x):
@@ -329,7 +465,8 @@ class TaskGraph:
 
     def __init__(self, env: Environment, repeats: int = 1,
                  mem_multiplier: float = 3.0, backend: str = "inline",
-                 measure_cache: MeasurementCache | None = None):
+                 measure_cache: MeasurementCache | None = None,
+                 fault_plan: FaultPlan | None = None):
         if backend not in ("inline", "threadpool"):
             raise ValueError(f"unknown backend {backend!r}")
         self.env = env
@@ -337,6 +474,14 @@ class TaskGraph:
         self.mem_multiplier = mem_multiplier   # working set ≈ k x inputs
         self.backend = backend
         self.measure_cache = measure_cache
+        # chaos mode: a FaultPlan makes collect() schedule with
+        # fault_list_schedule (worker loss / slowdowns / retries) instead
+        # of the fault-free min(dag, barrier); task lineage is retained so
+        # lost tasks really re-execute, verified bit-identical
+        self.fault = (FaultRuntime(fault_plan, env.n_workers)
+                      if fault_plan is not None else None)
+        self.fault_time = 0.0            # virtual clock the plan times use
+        self.reexecuted_tasks = 0
         self.sim_time = 0.0
         self.dag_time = 0.0
         self.barrier_time = 0.0
@@ -380,6 +525,33 @@ class TaskGraph:
                 task.replayed = True
                 self._consume_deps(task)
                 return
+        if self.fault is not None:
+            # lineage: the DAG holds fn+args, so a task lost to a worker
+            # failure can re-execute and be verified bit-identical
+            task.lineage = (fn, args, kwargs)
+            n_fail = self.fault.plan.transient_failures(task.tid)
+            if n_fail:
+                # the injected attempts go through the *real* RetryPolicy
+                # (each failure is raised and caught by policy code); the
+                # backoff sleeps are captured as virtual delay for the
+                # schedule instead of actually sleeping
+                state = {"left": n_fail, "slept": 0.0}
+
+                def _attempt():
+                    if state["left"] > 0:
+                        state["left"] -= 1
+                        raise TransientTaskError(
+                            f"injected transient failure for task "
+                            f"#{task.tid} ({state['left']} left)")
+
+                self.fault.plan.retry.run(
+                    _attempt,
+                    sleep=lambda s: state.__setitem__(
+                        "slept", state["slept"] + s))
+                task.retry_attempts = n_fail + 1
+                task.retry_delay = state["slept"]
+                self.fault.retries += n_fail
+                self.fault.retry_delay_s += state["slept"]
         if warm:
             warm_key = (fk, _shape_sig(args),
                         _shape_sig(tuple(sorted(kwargs.items())))
@@ -509,7 +681,35 @@ class TaskGraph:
             bar = phase_barrier_makespan(names, durs, deps,
                                          self.env.n_workers)
             overhead = len(tasks) * self.env.dispatch_overhead_s
-            sim = min(dag, bar) + overhead
+            if self.fault is not None:
+                retry_over = [(t.retry_attempts - 1) * t.duration
+                              + t.retry_delay if t.retry_attempts else 0.0
+                              for t in tasks]
+                # dispatch overhead is charged per task INSIDE the event
+                # loop (not appended after the epoch): the virtual
+                # timeline stays busy-dense, so a planned loss time lands
+                # while tasks are actually in flight instead of in a
+                # modeled between-epoch gap no real cluster has
+                mk, reexec = fault_list_schedule(
+                    durs, deps, retry_over, self.fault, t0=self.fault_time,
+                    dispatch_s=self.env.dispatch_overhead_s)
+                for k in reexec:
+                    task = tasks[k]
+                    task.reexecuted = True
+                    self.reexecuted_tasks += 1
+                    if task.lineage is None:   # cache-replayed: no body
+                        continue               # ran, nothing to re-run
+                    fn, rargs, rkwargs = task.lineage
+                    again = fn(*rargs, **rkwargs)
+                    if not _bit_identical(again, task.value):
+                        raise LineageMismatchError(
+                            f"task #{task.tid} ({task.name!r}) re-executed "
+                            "from lineage but the value changed -- "
+                            "nondeterministic body, recovery unsound")
+                sim = mk              # overhead already inside the events
+                self.fault_time += sim
+            else:
+                sim = min(dag, bar) + overhead
             self.sim_time += sim
             self.dag_time += dag + overhead
             self.barrier_time += bar + overhead
@@ -540,12 +740,30 @@ class TaskGraph:
 
     def stats(self) -> dict:
         """Schedule/accounting summary (both schedules, task counts)."""
-        return {
+        out = {
             "sim_time": self.sim_time, "dag_time": self.dag_time,
             "barrier_time": self.barrier_time, "real_time": self.real_time,
             "n_tasks": self.n_tasks, "executed_tasks": self.executed_tasks,
             "replayed_tasks": self.replayed_tasks,
             "epochs": len(self.phases), "backend": self.backend,
+        }
+        if self.fault is not None:
+            out["fault"] = self.fault_stats()
+        return out
+
+    def fault_stats(self) -> dict:
+        """Chaos-run summary: what the injected plan actually did.  Only
+        meaningful when the graph was built with a ``fault_plan``."""
+        if self.fault is None:
+            return {}
+        return {
+            "lost_workers": sorted(self.fault.lost),
+            "quarantined_workers": sorted(self.fault.quarantined),
+            "reexecuted_tasks": self.reexecuted_tasks,
+            "transient_retries": self.fault.retries,
+            "retry_delay_s": self.fault.retry_delay_s,
+            "events": list(self.fault.events),
+            "healthy_workers": len(self.fault.healthy()),
         }
 
     def shutdown(self):

@@ -18,15 +18,23 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import time
 
 import numpy as np
 
+from repro.algorithms import kmeans as kmeans_mod
 from repro.algorithms import partition_and_run
 from repro.core.estimator import BlockSizeEstimator, EstimatorService
 from repro.core.log import ExecutionRecord
 from repro.core.features import dataset_features
 from repro.core.tuner import fold_records
+from repro.data.distarray import DistArray
 from repro.data.executor import Environment, TaskExecutor, TaskMemoryError
+
+#: Algorithms the elastic runner can pause at an iteration boundary and
+#: resume on a repartitioned array (they expose ``init_centers``-style
+#: warm starts).  The others would need checkpointed state threading.
+ELASTIC_ALGOS = {"kmeans"}
 
 
 def default_partitioning(n_rows: int, n_cols: int, env: Environment,
@@ -44,6 +52,61 @@ def default_partitioning(n_rows: int, n_cols: int, env: Environment,
         else:
             p_c *= s
     return p_r, p_c
+
+
+@dataclasses.dataclass(frozen=True)
+class EnvChange:
+    """A mid-run cluster event: after Lloyd iteration ``after_iter`` the
+    environment becomes ``env`` (worker loss, scale-up, re-mesh...)."""
+    after_iter: int
+    env: Environment
+    reason: str = "resize"
+
+
+def live_repartition(Xd: DistArray, p_r: int, p_c: int):
+    """Repartition an in-flight ``DistArray`` toward a ``p_r x p_c`` grid
+    with the cheapest valid move; returns ``(array, method)``.
+
+    * ``refine`` -- the target nests inside the current grid (both factors
+      integral): pure views via :meth:`DistArray.refine`, no copies.
+    * ``keep`` -- the target is the current grid, or coarser on both axes:
+      a finer-than-asked grid is still a correct partitioning, so the
+      array is kept and only the remaining DAG is re-costed (coarsening
+      in flight would pay a full copy for no correctness gain).
+    * ``rebuild`` -- mixed finer/coarser target that does not nest:
+      assemble and re-partition (the copy a restart would also pay).
+    """
+    if (p_r, p_c) == (Xd.p_r, Xd.p_c):
+        return Xd, "keep"
+    if p_r % Xd.p_r == 0 and p_c % Xd.p_c == 0:
+        return Xd.refine(p_r // Xd.p_r, p_c // Xd.p_c), "refine"
+    if p_r <= Xd.p_r and p_c <= Xd.p_c:
+        return Xd, "keep"
+    return DistArray.from_array(Xd.to_array(), p_r, p_c), "rebuild"
+
+
+@dataclasses.dataclass
+class ElasticRunResult:
+    """Outcome of one elastic closed-loop run (recovery vs restart)."""
+    algo: str
+    shape: tuple
+    partitions: list            # [(p_r, p_c), ...] per segment
+    chosen_by: list             # per-segment "model" | "default"
+    repartition: str            # "refine" | "keep" | "rebuild"
+    repartition_s: float        # measured wall cost of the repartition
+    recovery_time_s: float      # seg1 + repartition + remaining iters
+    restart_time_s: float       # seg1 (wasted) + full rerun on new env
+    results_close: bool         # recovered result ~ restarted result
+    record: ExecutionRecord     # the "recovery" provenance record
+    appended: bool
+    retrained: bool
+    output: object = None
+
+    @property
+    def speedup(self) -> float:
+        """Restart-from-scratch time over recovery time (>1 = recovery
+        wins)."""
+        return self.restart_time_s / max(self.recovery_time_s, 1e-12)
 
 
 @dataclasses.dataclass
@@ -145,6 +208,88 @@ class AutoTunedRun:
         if hasattr(self.service, "refit"):
             return bool(self.service.refit(records))
         return fold_records(self.estimator, records)
+
+    # ------------------------------------------------------------ elastic
+    def _clamped_choice(self, n: int, m: int, algo: str,
+                        env: Environment) -> tuple[int, int, str]:
+        p_r, p_c, by = self.choose(n, m, algo, env)
+        return max(1, min(int(p_r), n)), max(1, min(int(p_c), m)), by
+
+    def run_elastic(self, X: np.ndarray, y, algo: str, env: Environment,
+                    change: EnvChange, *, iters: int = 6,
+                    algo_kw: dict | None = None) -> ElasticRunResult:
+        """Closed-loop execution that survives a mid-run cluster change.
+
+        Runs ``change.after_iter`` iterations under ``env``, then the
+        environment becomes ``change.env`` (worker loss or scale-up): the
+        estimator is re-queried for the new worker count, the in-flight
+        ``DistArray`` is live-repartitioned (:func:`live_repartition` --
+        ``refine`` views whenever the new grid nests), the remaining
+        iterations are re-costed on the new environment, and the measured
+        recovery segment is logged to the store under the ``"recovery"``
+        provenance tag and folded into the model, so refit learns the
+        degraded (or grown) regime.  The restart-from-scratch baseline --
+        throw seg-1 work away, re-partition, run all ``iters`` on the new
+        environment -- is executed too, so every result carries a
+        recovery-vs-restart speedup.
+        """
+        if algo not in ELASTIC_ALGOS:
+            raise ValueError(f"{algo!r} is not elastically steppable "
+                             f"(supported: {sorted(ELASTIC_ALGOS)})")
+        if not 0 < change.after_iter < iters:
+            raise ValueError(f"after_iter={change.after_iter} must fall "
+                             f"inside the run (0 < it < {iters})")
+        n, m = X.shape
+        kw = dict(algo_kw or {})
+        kw.pop("iters", None)
+        # ---- segment 1: the run as planned under the original env
+        p1r, p1c, by1 = self._clamped_choice(n, m, algo, env)
+        Xd = DistArray.from_array(X, p1r, p1c)
+        ex1 = TaskExecutor(env)
+        seg1 = kmeans_mod.fit(ex1, Xd, iters=change.after_iter, **kw)
+        # ---- the event: re-query for the new worker count, repartition
+        env2 = change.env
+        p2r, p2c, by2 = self._clamped_choice(n, m, algo, env2)
+        t0 = time.perf_counter()
+        Xd2, method = live_repartition(Xd, p2r, p2c)
+        repartition_s = time.perf_counter() - t0
+        # ---- segment 2: re-cost the remaining DAG on the new env
+        ex2 = TaskExecutor(env2)
+        oom = False
+        try:
+            seg2 = kmeans_mod.fit(ex2, Xd2, iters=iters - change.after_iter,
+                                  init_centers=seg1["centers"])
+            seg2_time = ex2.sim_time
+        except TaskMemoryError:
+            seg2, seg2_time, oom = None, float("inf"), True
+        recovery = ex1.sim_time + repartition_s + seg2_time
+        # ---- restart-from-scratch baseline on the new environment
+        ex3 = TaskExecutor(env2)
+        try:
+            full = kmeans_mod.fit(ex3, DistArray.from_array(X, p2r, p2c),
+                                  iters=iters, **kw)
+            restart = ex1.sim_time + ex3.sim_time
+        except TaskMemoryError:
+            full, restart = None, float("inf")
+        results_close = bool(
+            seg2 is not None and full is not None
+            and np.allclose(seg2["centers"], full["centers"]))
+        record = ExecutionRecord(
+            dataset_features(n, m), algo, env2.features(),
+            Xd2.p_r, Xd2.p_c, seg2_time,
+            {"recovery": True, "reason": change.reason,
+             "repartition": method, "after_iter": change.after_iter,
+             "chosen_by": by2, "oom": oom})
+        appended = bool(self.store.append([record], source="recovery")) \
+            if self.store is not None else False
+        retrained = False
+        if self.refit and math.isfinite(seg2_time):
+            retrained = self._learn([record])
+        return ElasticRunResult(
+            algo, (n, m), [(p1r, p1c), (Xd2.p_r, Xd2.p_c)], [by1, by2],
+            method, repartition_s, recovery, restart, results_close,
+            record, appended, retrained,
+            None if seg2 is None else seg2)
 
     def run_many(self, workloads) -> list[AutoRunResult]:
         """Sequence of ``(X, y, algo, env)`` tuples through the loop — the

@@ -22,6 +22,13 @@ import jax
 from repro.configs.base import ModelConfig
 
 
+class NoFeasibleMeshError(RuntimeError):
+    """No (data, model) mesh factorization exists for the given healthy
+    device count / global batch.  A typed error (not an ``assert``, which
+    vanishes under ``python -O``) so elastic recovery can escalate --
+    e.g. hold the last feasible mesh or fall back to a full restart."""
+
+
 @dataclasses.dataclass(frozen=True)
 class MeshPlan:
     shape: tuple
@@ -48,7 +55,19 @@ def plan_mesh(n_healthy: int, global_batch: int, *, prefer_model: int = 16,
     shards must keep dividing weight dims), then maximizes the data axis
     under the constraint that the global batch splits evenly; the microbatch
     count adapts to keep per-device batch >= 1.
+
+    Raises :class:`NoFeasibleMeshError` when no mesh exists: zero healthy
+    devices (every plan needs at least a 1x1 mesh) or a non-positive
+    global batch (nothing divides it).
     """
+    if n_healthy < 1:
+        raise NoFeasibleMeshError(
+            f"no healthy devices (n_healthy={n_healthy}); even a 1x1 mesh "
+            "needs one")
+    if global_batch < 1:
+        raise NoFeasibleMeshError(
+            f"global_batch={global_batch} cannot be split across any data "
+            "axis")
     best = None
     for model in sorted(_divisors_desc(prefer_model)):
         data = n_healthy // model
@@ -61,7 +80,10 @@ def plan_mesh(n_healthy: int, global_batch: int, *, prefer_model: int = 16,
                     best = plan
                 break
             data -= 1
-    assert best is not None
+    if best is None:       # unreachable for valid inputs (data=1 divides
+        raise NoFeasibleMeshError(           # any batch), kept as a guard
+            f"no (data, model) factorization for n_healthy={n_healthy}, "
+            f"global_batch={global_batch}, prefer_model={prefer_model}")
     return best
 
 

@@ -16,9 +16,11 @@ persistent LogStore; ``benchmarks/serving_bench.py`` load-tests it.
 from repro.serve.loadgen import (make_trace, make_universe, run_load,
                                  staleness_violations)
 from repro.serve.refit import RefitDaemon
-from repro.serve.router import (HashRing, RouterClosed, RouterRejected,
-                                ServeResult, Shard, ShardRouter)
+from repro.serve.router import (DeadlineExceeded, HashRing, RouterClosed,
+                                RouterRejected, ServeResult, Shard,
+                                ShardRouter)
 
-__all__ = ["HashRing", "RefitDaemon", "RouterClosed", "RouterRejected",
-           "ServeResult", "Shard", "ShardRouter", "make_trace",
-           "make_universe", "run_load", "staleness_violations"]
+__all__ = ["DeadlineExceeded", "HashRing", "RefitDaemon", "RouterClosed",
+           "RouterRejected", "ServeResult", "Shard", "ShardRouter",
+           "make_trace", "make_universe", "run_load",
+           "staleness_violations"]

@@ -45,8 +45,8 @@ from repro.core.tuner import fold_records
 from repro.data.executor import Environment
 from repro.eval.autorun import default_partitioning
 
-__all__ = ["HashRing", "RouterClosed", "RouterRejected", "ServeResult",
-           "Shard", "ShardRouter"]
+__all__ = ["DeadlineExceeded", "HashRing", "RouterClosed", "RouterRejected",
+           "ServeResult", "Shard", "ShardRouter"]
 
 _STOP = object()
 
@@ -57,6 +57,12 @@ class RouterRejected(RuntimeError):
 
 class RouterClosed(RuntimeError):
     """Request arrived after ``ShardRouter.close()``."""
+
+
+class DeadlineExceeded(RuntimeError):
+    """The request's deadline passed while it waited in a shard queue; it
+    was dropped unserved (freeing its queue slot and serving capacity)
+    instead of burning model time on an answer nobody is waiting for."""
 
 
 def _hash64(text: str) -> int:
@@ -107,14 +113,15 @@ class ServeResult:
 
 
 class _Request:
-    __slots__ = ("query", "event", "result", "error", "t_enq")
+    __slots__ = ("query", "event", "result", "error", "t_enq", "deadline")
 
-    def __init__(self, query, t_enq):
+    def __init__(self, query, t_enq, deadline=None):
         self.query = query
         self.event = threading.Event()
         self.result = None
         self.error = None
         self.t_enq = t_enq
+        self.deadline = deadline          # absolute monotonic time or None
 
 
 def _algo_of(query) -> str:
@@ -151,6 +158,10 @@ class Shard:
         self.max_batch = 0
         self.queue_high_water = 0
         self.rejected = 0
+        self.expired = 0               # deadline-dropped without serving
+        self.crashed = False           # worker thread died (injected)
+        self._crash_after = None       # crash before serving the Nth batch
+        self._on_crash = None          # ShardRouter._handle_crash
         self.thread = threading.Thread(target=self._run,
                                        name=f"serve-shard-{idx}", daemon=True)
 
@@ -186,10 +197,42 @@ class Shard:
                         stop = True
                         break
                     batch.append(nxt)
+            if batch and not stop and self._crash_after is not None:
+                # injected worker crash: die *holding* an unserved batch
+                # (the hard case -- these must be re-routed, not lost).
+                # Never crash on the shutdown drain: close() already owns
+                # those requests' fate.
+                if self._crash_after <= 0:
+                    self.crashed = True
+                    orphans = batch + self._drain_rest()
+                    if self._on_crash is not None:
+                        self._on_crash(self, orphans)
+                    return
+                self._crash_after -= 1
             if batch:
                 self._serve(batch)
 
+    def _expire(self, requests: list) -> list:
+        """Fail requests whose deadline passed while queued (their slot is
+        already freed by the dequeue; this frees the *serving* capacity)
+        and return the still-live remainder."""
+        now = time.monotonic()
+        live = []
+        for req in requests:
+            if req.deadline is not None and now > req.deadline:
+                self.expired += 1
+                req.error = DeadlineExceeded(
+                    f"deadline passed {now - req.deadline:.4f}s before "
+                    f"shard {self.idx} could serve the request")
+                req.event.set()
+            else:
+                live.append(req)
+        return live
+
     def _serve(self, batch: list):
+        batch = self._expire(batch)
+        if not batch:
+            return
         try:
             with self.lock:
                 backend = self.service.backend
@@ -263,18 +306,33 @@ class ShardRouter:
         self._ring = HashRing(n_shards, vnodes)
         fallback = abstain_fallback or (
             lambda q: _default_for_query(q, s=getattr(backend, "s", 2)))
-        self.shards = [Shard(i, service_factory(backend, maxsize),
-                             queue_depth=queue_depth, batch_max=batch_max,
-                             window_s=window_s, abstain_fallback=fallback)
-                       for i in range(n_shards)]
+        # kept for respawning a crashed shard with an identical replica
+        self._service_factory = service_factory
+        self._maxsize = maxsize
+        self._shard_kw = dict(queue_depth=queue_depth, batch_max=batch_max,
+                              window_s=window_s, abstain_fallback=fallback)
+        self.shards = [self._make_shard(i) for i in range(n_shards)]
         self._closed = False
         self._swap_lock = threading.RLock()
+        self.crashes = 0
+        self.respawns = 0
+        self.rerouted = 0
+        # counters of crashed (replaced) shards, so totals stay monotonic
+        self._retired = {"served": 0, "abstained": 0, "rejected": 0,
+                         "expired": 0, "hits": 0, "misses": 0,
+                         "invalidations": 0}
         # (monotonic time the swap completed, model_version) — seeded with
         # the construction-time version so the staleness audit has epoch 0
         self.swap_log: list[tuple[float, int]] = [
             (time.monotonic(), getattr(backend, "model_version", 0) or 0)]
         for sh in self.shards:
             sh.thread.start()
+
+    def _make_shard(self, idx: int) -> Shard:
+        sh = Shard(idx, self._service_factory(self._backend, self._maxsize),
+                   **self._shard_kw)
+        sh._on_crash = self._handle_crash
+        return sh
 
     # ----------------------------------------------------------- identity
     @property
@@ -297,12 +355,75 @@ class ShardRouter:
         """Shard index a query routes to (canonical-key affinity)."""
         return self._ring.shard_for(self.shards[0].service._key(query))
 
+    # ----------------------------------------------------- failure chaos
+    def inject_crash(self, shard_idx: int, after_batches: int = 0) -> None:
+        """Arm a deterministic worker crash on shard ``shard_idx``: its
+        worker thread dies *holding* the batch it assembled, after serving
+        ``after_batches`` more batches.  The crash handler respawns the
+        shard and ring-re-routes the orphaned requests, so no request is
+        lost (asserted by the chaos bench)."""
+        self.shards[shard_idx]._crash_after = max(0, int(after_batches))
+
+    def _handle_crash(self, sh: Shard, orphans: list) -> None:
+        """Runs on the dying shard's worker thread: respawn a fresh
+        replica of the *current* backend (under the swap lock, so it can
+        never be older than any completed swap — the staleness contract
+        survives the crash) and re-route every orphaned request."""
+        with self._swap_lock:
+            self.crashes += 1
+            self._retired["served"] += sh.served
+            self._retired["abstained"] += sh.abstained
+            self._retired["rejected"] += sh.rejected
+            self._retired["expired"] += sh.expired
+            self._retired["hits"] += sh.service.hits
+            self._retired["misses"] += sh.service.misses
+            self._retired["invalidations"] += sh.service.invalidations
+            if not self._closed:
+                fresh = self._make_shard(sh.idx)
+                self.shards[sh.idx] = fresh
+                fresh.thread.start()
+                self.respawns += 1
+            # anything admitted to the dead queue after the worker's own
+            # drain (racing _submit callers) is rescued here or by the
+            # submitter's crashed-check; queue gets are exclusive, so no
+            # request is handled twice
+            orphans = orphans + sh._drain_rest()
+        if self._closed:
+            for req in orphans:
+                req.error = RouterClosed("router closed during crash "
+                                         "recovery")
+                req.event.set()
+            return
+        for req in orphans:
+            self._reroute(sh.idx, req)
+
+    def _reroute(self, dead_idx: int, req: _Request) -> None:
+        """Ring re-route one orphaned request: try each successor shard's
+        queue without blocking, ending at ``dead_idx`` itself (by now the
+        respawned replica); fall back to a blocking put on the immediate
+        successor when every queue is full."""
+        n = len(self.shards)
+        for k in range(1, n + 1):
+            target = self.shards[(dead_idx + k) % n]
+            if target.crashed:
+                continue
+            try:
+                target.queue.put_nowait(req)
+            except queue_mod.Full:
+                continue
+            self.rerouted += 1
+            return
+        self.shards[(dead_idx + 1) % n].queue.put(req)
+        self.rerouted += 1
+
     # ------------------------------------------------------------ serving
-    def _submit(self, query) -> _Request:
+    def _submit(self, query, deadline_s: float | None = None) -> _Request:
         """Admit and route one query without waiting for the answer."""
         if self._closed:
             raise RouterClosed("router is closed")
-        req = _Request(query, time.monotonic())
+        t_enq = time.monotonic()
+        req = _Request(query, t_enq,
+                       None if deadline_s is None else t_enq + deadline_s)
         sh = self.shards[self.shard_for(query)]
         try:
             if self.admission == "reject":
@@ -320,6 +441,12 @@ class ShardRouter:
             for straggler in sh._drain_rest():
                 straggler.error = RouterClosed("router closed")
                 straggler.event.set()
+        if sh.crashed:
+            # raced with a crash: the worker died before (or while) this
+            # enqueue landed and its final drain may have missed it —
+            # rescue everything stranded on the dead queue
+            for straggler in sh._drain_rest():
+                self._reroute(sh.idx, straggler)
         sh.queue_high_water = max(sh.queue_high_water, sh.queue.qsize())
         return req
 
@@ -331,23 +458,28 @@ class ShardRouter:
             raise req.error
         return req.result
 
-    def request(self, query, timeout: float | None = None) -> ServeResult:
+    def request(self, query, timeout: float | None = None,
+                deadline_s: float | None = None) -> ServeResult:
         """Admit, route, and wait for one query; returns the
         :class:`ServeResult` (or raises :class:`RouterRejected` /
-        :class:`RouterClosed` / the serving error)."""
-        return self._await(self._submit(query), timeout)
+        :class:`RouterClosed` / :class:`DeadlineExceeded` / the serving
+        error).  ``deadline_s`` is a server-side budget: a request still
+        queued when it expires is dropped unserved, freeing its slot."""
+        return self._await(self._submit(query, deadline_s), timeout)
 
-    def predict(self, query, timeout: float | None = None):
+    def predict(self, query, timeout: float | None = None,
+                deadline_s: float | None = None):
         """The bare prediction — drop-in for ``EstimatorService.predict``
         (what ``AutoTunedRun`` calls)."""
-        return self.request(query, timeout).value
+        return self.request(query, timeout, deadline_s).value
 
-    def predict_batch(self, queries, timeout: float | None = None) -> list:
+    def predict_batch(self, queries, timeout: float | None = None,
+                      deadline_s: float | None = None) -> list:
         """Enqueue every query first, then await them all — one shared
         micro-batch window instead of N sequential round trips.  The
         first admission rejection or serving error propagates (requests
         already enqueued are still served; their results are dropped)."""
-        reqs = [self._submit(q) for q in queries]
+        reqs = [self._submit(q, deadline_s) for q in queries]
         return [self._await(r, timeout).value for r in reqs]
 
     # ----------------------------------------------------- refit / swap
@@ -395,19 +527,27 @@ class ShardRouter:
                             "invalidations": svc.invalidations,
                             "batches": sh.batches, "max_batch": sh.max_batch,
                             "queue_high_water": sh.queue_high_water,
-                            "rejected": sh.rejected})
-        hits = sum(p["hits"] for p in per)
-        misses = sum(p["misses"] for p in per)
+                            "rejected": sh.rejected,
+                            "expired": sh.expired})
+        ret = self._retired
+        hits = sum(p["hits"] for p in per) + ret["hits"]
+        misses = sum(p["misses"] for p in per) + ret["misses"]
         return {"n_shards": len(self.shards),
-                "served": sum(p["served"] for p in per),
-                "abstained": sum(p["abstained"] for p in per),
-                "rejected": sum(p["rejected"] for p in per),
+                "served": sum(p["served"] for p in per) + ret["served"],
+                "abstained": (sum(p["abstained"] for p in per)
+                              + ret["abstained"]),
+                "rejected": (sum(p["rejected"] for p in per)
+                             + ret["rejected"]),
+                "expired": sum(p["expired"] for p in per) + ret["expired"],
                 "hits": hits, "misses": misses,
                 "hit_rate": hits / (hits + misses) if hits + misses else 0.0,
-                "invalidations": sum(p["invalidations"] for p in per),
+                "invalidations": (sum(p["invalidations"] for p in per)
+                                  + ret["invalidations"]),
                 "model_version": getattr(self._backend, "model_version",
                                          None),
                 "swaps": len(self.swap_log) - 1,
+                "crashes": self.crashes, "respawns": self.respawns,
+                "rerouted": self.rerouted,
                 "per_shard": per}
 
     @property

@@ -1,0 +1,416 @@
+"""Fault-tolerant elastic runtime (DESIGN.md §11): seeded chaos across
+the three tiers -- fault-aware task-graph scheduling with lineage
+recovery, elastic live repartitioning in the closed loop, and serving
+crash/respawn/deadline/daemon-restart behavior."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.algorithms import kmeans as kmeans_mod
+from repro.core.estimator import BlockSizeEstimator
+from repro.data.datasets import gaussian_blobs
+from repro.data.distarray import DistArray
+from repro.data.executor import Environment, TaskExecutor
+from repro.data.logstore import LogStore
+from repro.data.taskgraph import (LineageMismatchError, TaskGraph,
+                                  fault_list_schedule)
+from repro.eval.autorun import AutoTunedRun, EnvChange, live_repartition
+from repro.runtime.fault import (AllWorkersLostError, FaultPlan,
+                                 FaultRuntime, RetryExhausted, RetryPolicy,
+                                 Slowdown, StragglerConfig, WorkerLoss)
+from repro.serve import DeadlineExceeded, RefitDaemon, ShardRouter
+
+from test_serving import SHAPES, q, synth_records
+
+ENV = Environment(name="laptop", n_workers=4, n_nodes=1, mem_limit_mb=2048.0,
+                  dispatch_overhead_s=1e-4, ram_gb=16)
+ENV8 = Environment(name="laptop8", n_workers=8, n_nodes=1,
+                   mem_limit_mb=2048.0, dispatch_overhead_s=1e-4, ram_gb=16)
+
+
+def runtime(plan, n_workers=2):
+    return FaultRuntime(plan, n_workers)
+
+
+# -------------------------------------------- tier 1: fault-aware schedule
+def test_fault_schedule_matches_lpt_without_faults():
+    durs = [3.0, 2.0, 2.0, 1.0]
+    fault = runtime(FaultPlan(), n_workers=2)
+    mk, reexec = fault_list_schedule(durs, [(), (), (), ()], [0.0] * 4,
+                                     fault)
+    assert reexec == []
+    assert mk == pytest.approx(4.0)            # LPT: {3,1} vs {2,2}
+
+
+def test_worker_loss_requeues_inflight_task():
+    # two workers, loss of worker 1 at t=0.5 while its task (dur 2) runs:
+    # the task re-executes from scratch on worker 0 after its own task
+    durs = [2.0, 2.0]
+    fault = runtime(FaultPlan(losses=(WorkerLoss(1, 0.5),)), n_workers=2)
+    mk, reexec = fault_list_schedule(durs, [(), ()], [0.0, 0.0], fault)
+    assert reexec == [1]
+    assert fault.lost == {1}
+    assert mk == pytest.approx(4.0)            # worker 0: own 2s + redo 2s
+    kinds = [e["kind"] for e in fault.events]
+    assert kinds == ["worker_loss", "lineage_reexec"]
+
+
+def test_loss_between_tasks_kills_worker_without_reexec():
+    # LPT puts the 3s task on worker 0 and the 1s task on worker 1, so at
+    # t=2 worker 1 sits idle: the loss orphans nothing, but the worker
+    # stays lost for everything scheduled afterwards
+    durs = [3.0, 1.0]
+    fault = runtime(FaultPlan(losses=(WorkerLoss(1, 2.0),)), n_workers=2)
+    mk, reexec = fault_list_schedule(durs, [(), ()], [0.0, 0.0], fault)
+    assert reexec == [] and fault.lost == {1}
+    assert mk == pytest.approx(3.0)
+    mk2, _ = fault_list_schedule([1.0, 1.0], [(), ()], [0.0, 0.0], fault,
+                                 t0=mk)
+    assert mk2 == pytest.approx(2.0)           # only worker 0 remains
+
+
+def test_slowdown_stretches_only_that_worker():
+    durs = [1.0, 1.0]
+    plan = FaultPlan(slowdowns=(Slowdown(1, 4.0),))
+    mk, _ = fault_list_schedule(durs, [(), ()], [0.0, 0.0],
+                                runtime(plan, 2))
+    assert mk == pytest.approx(4.0)            # worker 1's task stretched
+    mk0, _ = fault_list_schedule(durs, [(), ()], [0.0, 0.0],
+                                 runtime(FaultPlan(), 2))
+    assert mk0 == pytest.approx(1.0)
+
+
+def test_slowdown_onset_respects_after():
+    plan = FaultPlan(slowdowns=(Slowdown(0, 10.0, after=5.0),))
+    mk, _ = fault_list_schedule([1.0], [()], [0.0], runtime(plan, 1))
+    assert mk == pytest.approx(1.0)            # dispatched before onset
+    fault = runtime(plan, 1)
+    mk2, _ = fault_list_schedule([1.0], [()], [0.0], fault, t0=6.0)
+    assert mk2 == pytest.approx(10.0)          # after onset: stretched
+
+
+def test_retry_overhead_charged_on_first_dispatch_only():
+    # loss at t=1: the task (dur 2 + 3 retry overhead) dies mid-flight and
+    # re-executes WITHOUT re-paying the transient-retry overhead
+    durs = [2.0]
+    fault = runtime(FaultPlan(losses=(WorkerLoss(0, 1.0),)), n_workers=2)
+    mk, reexec = fault_list_schedule(durs, [()], [3.0], fault)
+    assert reexec == [0]
+    assert mk == pytest.approx(3.0)            # died at 1.0, redo 2.0
+
+def test_straggler_quarantine_redispatches():
+    cfg = StragglerConfig(window=8, warmup=2, patience=2, threshold=2.0)
+    plan = FaultPlan(slowdowns=(Slowdown(1, 5.0, after=2.0),),
+                     straggler=cfg)
+    fault = runtime(plan, 2)
+    # feed enough healthy-then-slow completions through epochs
+    t0 = 0.0
+    for _ in range(8):
+        mk, _ = fault_list_schedule([1.0, 1.0], [(), ()], [0.0, 0.0],
+                                    fault, t0=t0)
+        t0 += mk
+        if fault.quarantined:
+            break
+    assert fault.quarantined == {1}
+    assert any(e["kind"] == "straggler_quarantine" for e in fault.events)
+    # quarantined workers get no further tasks
+    mk, _ = fault_list_schedule([1.0, 1.0], [(), ()], [0.0, 0.0], fault,
+                                t0=t0)
+    assert mk == pytest.approx(2.0)            # both on worker 0
+
+
+def test_all_workers_lost_raises():
+    plan = FaultPlan(losses=(WorkerLoss(0, 0.5), WorkerLoss(1, 0.5)))
+    with pytest.raises(AllWorkersLostError):
+        fault_list_schedule([2.0, 2.0], [(), ()], [0.0, 0.0],
+                            runtime(plan, 2))
+
+
+def test_dispatch_overhead_densifies_timeline():
+    durs = [1.0, 1.0]
+    mk, _ = fault_list_schedule(durs, [(), ()], [0.0, 0.0],
+                                runtime(FaultPlan(), 2), dispatch_s=0.5)
+    assert mk == pytest.approx(1.5)
+
+
+# ------------------------------------------- tier 1: end-to-end task graph
+def _chaos_kmeans(plan, env=ENV, iters=3):
+    X, _ = gaussian_blobs(192, 12, seed=2)
+    ex = TaskExecutor(env, fault_plan=plan)
+    out = kmeans_mod.fit(ex, DistArray.from_array(X, 2, 2), k=4,
+                         iters=iters, seed=0)
+    return ex, out
+
+
+def test_worker_loss_midrun_recovers_bit_identical():
+    X, _ = gaussian_blobs(192, 12, seed=2)
+    ex0 = TaskExecutor(ENV)
+    ref = kmeans_mod.fit(ex0, DistArray.from_array(X, 2, 2), k=4, iters=3,
+                         seed=0)
+    chosen = None
+    for frac in (0.5, 0.35, 0.65, 0.2, 0.8):   # catch a task in flight
+        plan = FaultPlan(losses=(WorkerLoss(1, frac * ex0.sim_time),))
+        ex, out = _chaos_kmeans(plan)
+        if ex.fault_stats()["reexecuted_tasks"] >= 1:
+            chosen = (ex, out)
+            break
+    assert chosen is not None, "no loss fraction caught an in-flight task"
+    ex, out = chosen
+    assert np.array_equal(ref["centers"], out["centers"])
+    assert ref["inertia"] == out["inertia"]
+    assert all(np.array_equal(a, b)
+               for a, b in zip(ref["labels"], out["labels"]))
+    fs = ex.fault_stats()
+    assert fs["lost_workers"] == [1] and fs["healthy_workers"] == 3
+    assert ex.stats()["fault"] == fs           # surfaced in stats()
+
+
+def test_transient_failures_run_through_retry_policy():
+    plan = FaultPlan(transient={0: 2, 5: 1},
+                     retry=RetryPolicy(max_retries=3, backoff_s=0.25))
+    ex, _ = _chaos_kmeans(plan)
+    fs = ex.fault_stats()
+    assert fs["transient_retries"] == 3        # 2 + 1 failed attempts
+    # virtual backoff: task 0 slept 0.25+0.5, task 5 slept 0.25
+    assert fs["retry_delay_s"] == pytest.approx(1.0)
+    assert ex.sim_time > 1.0                   # the sleep shows in makespan
+
+
+def test_transient_exhaustion_propagates_retry_exhausted():
+    plan = FaultPlan(transient={0: 5},
+                     retry=RetryPolicy(max_retries=2, backoff_s=0.0))
+    with pytest.raises(RetryExhausted) as ei:
+        _chaos_kmeans(plan)
+    assert ei.value.attempts == 3
+
+
+def test_nondeterministic_task_fails_lineage_verification():
+    calls = {"n": 0}
+
+    def impure(_):
+        calls["n"] += 1
+        return calls["n"]                      # different every call
+
+    # lose worker 0 mid-flight: whichever task it held re-executes from
+    # lineage, and the impure body trips the bit-identity check
+    plan = FaultPlan(losses=(WorkerLoss(0, 1e-9),))
+    ex = TaskGraph(Environment(n_workers=2, mem_limit_mb=2048.0),
+                   fault_plan=plan)
+    fs = [ex.submit(impure, i, name="impure") for i in range(4)]
+    with pytest.raises(LineageMismatchError):
+        ex.collect(*fs)
+
+
+def test_fault_free_plan_keeps_fault_free_semantics():
+    ex, out = _chaos_kmeans(FaultPlan())
+    ex0 = TaskExecutor(ENV)
+    X, _ = gaussian_blobs(192, 12, seed=2)
+    ref = kmeans_mod.fit(ex0, DistArray.from_array(X, 2, 2), k=4, iters=3,
+                         seed=0)
+    assert np.array_equal(ref["centers"], out["centers"])
+    fs = ex.fault_stats()
+    assert fs["reexecuted_tasks"] == 0 and fs["lost_workers"] == []
+
+
+# ------------------------------------------------- tier 2: elastic rerun
+def test_live_repartition_refine_keeps_blocks():
+    X = np.arange(64, dtype=float).reshape(16, 4)
+    Xd = DistArray.from_array(X, 2, 2)
+    out, method = live_repartition(Xd, 4, 2)
+    assert method == "refine"
+    assert (out.p_r, out.p_c) == (4, 2)
+    assert np.array_equal(out.to_array(), X)
+
+
+def test_live_repartition_keep_paths():
+    X = np.arange(64, dtype=float).reshape(16, 4)
+    Xd = DistArray.from_array(X, 4, 2)
+    same, m1 = live_repartition(Xd, 4, 2)
+    assert m1 == "keep" and same is Xd
+    coarser, m2 = live_repartition(Xd, 2, 1)   # coarser on both axes
+    assert m2 == "keep" and coarser is Xd
+
+
+def test_live_repartition_rebuild_on_mixed_target():
+    X = np.arange(64, dtype=float).reshape(16, 4)
+    Xd = DistArray.from_array(X, 4, 2)
+    out, method = live_repartition(Xd, 8, 1)   # finer rows, coarser cols
+    assert method == "rebuild"
+    assert (out.p_r, out.p_c) == (8, 1)
+    assert np.array_equal(out.to_array(), X)
+
+
+def test_run_elastic_scale_up_refines_and_matches(tmp_path):
+    store = LogStore(tmp_path / "s.jsonl")
+    loop = AutoTunedRun(BlockSizeEstimator("tree"), store)
+    X, y = gaussian_blobs(256, 16, seed=5)
+    r = loop.run_elastic(X, y, "kmeans", ENV,
+                         EnvChange(after_iter=2, env=ENV8,
+                                   reason="scale-up"), iters=4)
+    assert r.partitions == [(2, 2), (4, 2)]
+    assert r.repartition == "refine"
+    assert r.results_close
+    assert r.recovery_time_s < r.restart_time_s
+    assert r.record.meta["recovery"] is True
+    assert r.record.meta["reason"] == "scale-up"
+    # logged under the "recovery" provenance tag so refit can learn the
+    # degraded/grown regime separately from steady-state runs
+    assert r.appended
+    pairs, _ = store.follow(0)
+    assert [src for _, src in pairs] == ["recovery"]
+    assert r.retrained                         # record folded into model
+
+
+def test_run_elastic_worker_loss_keeps_partitions(tmp_path):
+    env2 = Environment(name="degraded", n_workers=2, n_nodes=1,
+                       mem_limit_mb=2048.0, dispatch_overhead_s=1e-4,
+                       ram_gb=16)
+    loop = AutoTunedRun(BlockSizeEstimator("tree"), None, refit=False)
+    X, y = gaussian_blobs(256, 16, seed=5)
+    r = loop.run_elastic(X, y, "kmeans", ENV,
+                         EnvChange(after_iter=2, env=env2,
+                                   reason="worker-loss"), iters=4)
+    assert r.repartition == "keep"             # finer grid is still valid
+    assert r.results_close
+
+
+def test_run_elastic_validates_inputs():
+    loop = AutoTunedRun(BlockSizeEstimator("tree"), None, refit=False)
+    X, y = gaussian_blobs(64, 8, seed=1)
+    with pytest.raises(ValueError, match="elastically"):
+        loop.run_elastic(X, y, "pca", ENV,
+                         EnvChange(after_iter=1, env=ENV8), iters=4)
+    with pytest.raises(ValueError, match="after_iter"):
+        loop.run_elastic(X, y, "kmeans", ENV,
+                         EnvChange(after_iter=4, env=ENV8), iters=4)
+
+
+# ----------------------------------------------------- tier 3: serving
+@pytest.fixture
+def fitted_est():
+    recs = (synth_records("kmeans", SHAPES, best_pr=4)
+            + synth_records("gmm", SHAPES, best_pr=2))
+    return BlockSizeEstimator("tree").fit(recs)
+
+
+def test_shard_crash_respawns_and_loses_nothing(fitted_est):
+    with ShardRouter(fitted_est, n_shards=3, window_s=0.0) as router:
+        target = router.shard_for(q(*SHAPES[0]))
+        dead = router.shards[target]
+        router.inject_crash(target, after_batches=0)
+        results = [router.request(q(*s)) for s in SHAPES for _ in range(4)]
+        assert len(results) == len(SHAPES) * 4
+        assert all(r.value is not None for r in results)
+        stats = router.stats()
+        assert stats["crashes"] == 1 and stats["respawns"] == 1
+        assert stats["rerouted"] >= 1
+        assert router.shards[target] is not dead
+        assert router.shards[target].thread.is_alive()
+        # the respawned shard serves its key again (ring unchanged)
+        assert router.request(q(*SHAPES[0])).shard == target
+
+
+def test_crash_counters_survive_in_totals(fitted_est):
+    with ShardRouter(fitted_est, n_shards=2, window_s=0.0) as router:
+        n0 = 6
+        for _ in range(n0):
+            router.request(q(*SHAPES[0]))
+        target = router.shard_for(q(*SHAPES[0]))
+        served_before = router.stats()["served"]
+        router.inject_crash(target, after_batches=0)
+        router.request(q(*SHAPES[0]))          # triggers crash + re-route
+        stats = router.stats()
+        # the dead shard's counters were retired into the totals, not lost
+        assert stats["served"] == served_before + 1
+        assert stats["crashes"] == 1
+
+
+def test_crash_then_swap_preserves_staleness_contract(fitted_est):
+    with ShardRouter(fitted_est, n_shards=2, window_s=0.0) as router:
+        target = router.shard_for(q(*SHAPES[0]))
+        router.inject_crash(target, after_batches=0)
+        router.request(q(*SHAPES[0]))
+        assert router.refit(synth_records("pca", SHAPES[:2], best_pr=2))
+        res = router.request(q(*SHAPES[0]))
+        # the respawned shard serves the *current* backend after the swap
+        assert res.model_version == router.backend.model_version
+        assert res.model_version > fitted_est.model_version
+
+
+def test_deadline_expired_request_dropped_unserved(fitted_est):
+    with ShardRouter(fitted_est, n_shards=2, window_s=0.0) as router:
+        with pytest.raises(DeadlineExceeded):
+            router.request(q(*SHAPES[0]), deadline_s=-1e-3)
+        ok = router.request(q(*SHAPES[0]), deadline_s=30.0)
+        assert ok.value is not None
+        stats = router.stats()
+        assert stats["expired"] == 1
+        assert stats["served"] == 1            # the expired one never counts
+
+
+def test_refit_daemon_persists_cursor_and_resumes(tmp_path, fitted_est):
+    store = LogStore(tmp_path / "s.jsonl")
+    cursor_file = tmp_path / "refit.cursor"
+    with ShardRouter(fitted_est, n_shards=2, window_s=0.0) as router:
+        d1 = RefitDaemon(router, store, cursor_path=cursor_file)
+        assert json.loads(cursor_file.read_text())["cursor"] == 0
+        store.append(synth_records("pca", SHAPES[:2], best_pr=2),
+                     source="grid")
+        assert d1.poll_once() is True
+        persisted = json.loads(cursor_file.read_text())["cursor"]
+        assert persisted == d1.cursor == len(store)
+        # "crash" d1; a replacement resumes exactly at the durable cursor
+        d2 = RefitDaemon(router, store, cursor_path=cursor_file)
+        assert d2.cursor == persisted
+        store.append(synth_records("rf", SHAPES[:2], best_pr=4),
+                     source="grid")
+        assert d2.poll_once() is True          # learning continues
+        assert not router.estimator.abstains("rf")
+        assert json.loads(cursor_file.read_text())["cursor"] == len(store)
+
+
+def test_refit_daemon_holds_cursor_across_unswapped_folds(tmp_path,
+                                                          fitted_est):
+    """Records that fold but do not retrain must be re-read after a
+    restart: the durable cursor only advances at swap points, so the
+    replacement daemon rebuilds the argmin bookkeeping the crash lost."""
+    store = LogStore(tmp_path / "s.jsonl")
+    cursor_file = tmp_path / "refit.cursor"
+    with ShardRouter(fitted_est, n_shards=2, window_s=0.0) as router:
+        d1 = RefitDaemon(router, store, cursor_path=cursor_file)
+        # a slower duplicate of the known-best kmeans cell: folds into the
+        # bookkeeping, moves no argmin label, so no swap happens
+        store.append(synth_records("kmeans", SHAPES[:1], best_pr=4,
+                                   best_s=0.2, worse_s=9.0), source="grid")
+        assert d1.poll_once() is False
+        assert d1.cursor == len(store)         # in-memory cursor advanced
+        assert json.loads(cursor_file.read_text())["cursor"] == 0
+        # restart: the replacement re-folds those records from offset 0
+        d2 = RefitDaemon(router, store, cursor_path=cursor_file)
+        assert d2.cursor == 0
+        assert d2.poll_once() is False
+        assert d2.cursor == len(store)
+
+
+def test_refit_daemon_corrupt_cursor_falls_back_to_tail(tmp_path,
+                                                        fitted_est):
+    store = LogStore(tmp_path / "s.jsonl")
+    store.append(synth_records("pca", SHAPES[:1], best_pr=2), source="g")
+    cursor_file = tmp_path / "refit.cursor"
+    cursor_file.write_text("not json{{{")
+    with ShardRouter(fitted_est, n_shards=2, window_s=0.0) as router:
+        d = RefitDaemon(router, store, cursor_path=cursor_file)
+        assert d.cursor == len(store)          # tail, like no file at all
+        assert json.loads(cursor_file.read_text())["cursor"] == len(store)
+
+
+def test_refit_daemon_explicit_cursor_wins(tmp_path, fitted_est):
+    store = LogStore(tmp_path / "s.jsonl")
+    store.append(synth_records("pca", SHAPES[:1], best_pr=2), source="g")
+    cursor_file = tmp_path / "refit.cursor"
+    cursor_file.write_text(json.dumps({"cursor": len(store)}))
+    with ShardRouter(fitted_est, n_shards=2, window_s=0.0) as router:
+        d = RefitDaemon(router, store, cursor=0, cursor_path=cursor_file)
+        assert d.cursor == 0
+        assert d.poll_once() is True           # replays from the start

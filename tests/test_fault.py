@@ -3,9 +3,10 @@ planning (hypothesis invariants)."""
 import pytest
 from _hypothesis_compat import given, settings, st
 
-from repro.runtime.elastic import adapt_config, plan_mesh
-from repro.runtime.fault import (RetryPolicy, StragglerConfig,
-                                 StragglerDetector, simulate_failure)
+from repro.runtime.elastic import NoFeasibleMeshError, adapt_config, plan_mesh
+from repro.runtime.fault import (FaultPlan, RetryExhausted, RetryPolicy,
+                                 StragglerConfig, StragglerDetector,
+                                 simulate_failure)
 from repro.configs import reduced_config
 
 
@@ -38,6 +39,39 @@ def test_straggler_recovers_after_normal_step():
     assert det.consecutive_slow == 0
 
 
+def test_straggler_all_slow_warmup_never_fires():
+    """A worker that is slow from its very first step establishes the slow
+    pace as its own baseline: nothing is anomalous relative to its median,
+    so the detector stays quiet -- detectability requires a healthy
+    history first (slowdown onsets must have ``after > 0``)."""
+    det = StragglerDetector(StragglerConfig(warmup=3, patience=2,
+                                            threshold=2.0))
+    assert all(det.record(5.0) == "ok" for _ in range(20))
+
+
+def test_straggler_window_eviction():
+    """Old samples fall out of the bounded window, so the median tracks
+    the recent regime instead of the whole history."""
+    det = StragglerDetector(StragglerConfig(window=4, warmup=2,
+                                            patience=99, threshold=10.0))
+    for _ in range(6):
+        det.record(0.1)
+    for _ in range(4):                         # threshold 10 keeps these
+        det.record(0.9)                        # "ok", so they enter
+    assert len(det.times) == 4                 # window bounded
+    assert det.median() == 0.9                 # 0.1s fully evicted
+
+
+def test_straggler_even_length_median():
+    det = StragglerDetector(StragglerConfig(window=8, warmup=0,
+                                            patience=99, threshold=100.0))
+    for v in (0.1, 0.3):
+        det.record(v)
+    assert det.median() == pytest.approx(0.2)  # mean of middle pair
+    det.record(0.5)
+    assert det.median() == pytest.approx(0.3)  # odd length: middle value
+
+
 def test_retry_policy_retries_then_succeeds():
     calls = {"n": 0}
 
@@ -55,6 +89,60 @@ def test_retry_policy_escalates():
     with pytest.raises(RuntimeError):
         RetryPolicy(max_retries=2, backoff_s=0).run(
             lambda: (_ for _ in ()).throw(IOError("x")), sleep=lambda s: None)
+
+
+def test_retry_exhausted_carries_cause():
+    boom = IOError("dma timeout")
+
+    def always():
+        raise boom
+
+    with pytest.raises(RetryExhausted) as ei:
+        RetryPolicy(max_retries=2, backoff_s=0).run(always,
+                                                    sleep=lambda s: None)
+    assert ei.value.attempts == 3              # 1 try + 2 retries
+    assert ei.value.last is boom
+    assert ei.value.__cause__ is boom
+
+
+def test_retry_backoff_schedule_with_injected_sleep():
+    """run() sleeps exactly the schedule delays() publishes, in order."""
+    pol = RetryPolicy(max_retries=3, backoff_s=0.5, backoff_mult=2.0)
+    assert pol.delays() == [0.5, 1.0, 2.0]
+    slept = []
+
+    def always():
+        raise IOError("x")
+
+    with pytest.raises(RetryExhausted):
+        pol.run(always, sleep=slept.append)
+    assert slept == [0.5, 1.0, 2.0]
+
+
+def test_retry_jitter_deterministic_and_bounded():
+    pol = RetryPolicy(max_retries=4, backoff_s=0.1, backoff_mult=2.0,
+                      jitter=0.5, seed=7)
+    d1, d2 = pol.delays(), pol.delays()
+    assert d1 == d2                            # same seed, same schedule
+    base = RetryPolicy(max_retries=4, backoff_s=0.1,
+                       backoff_mult=2.0).delays()
+    for jittered, b in zip(d1, base):
+        assert b <= jittered < b * 1.5         # delay * (1 + jitter*U[0,1))
+    other = RetryPolicy(max_retries=4, backoff_s=0.1, backoff_mult=2.0,
+                        jitter=0.5, seed=8).delays()
+    assert other != d1                         # seeds decorrelate
+
+
+def test_fault_plan_seeded_deterministic():
+    a = FaultPlan.seeded(3, 4, n_tasks=64, horizon_s=1.0)
+    b = FaultPlan.seeded(3, 4, n_tasks=64, horizon_s=1.0)
+    assert a == b
+    c = FaultPlan.seeded(4, 4, n_tasks=64, horizon_s=1.0)
+    assert a != c
+    # at least one worker always survives un-lost
+    assert len({loss.worker for loss in a.losses}) < 4
+    for loss in a.losses:
+        assert 0.2 <= loss.at <= 0.8           # inside the horizon core
 
 
 def test_simulate_failure_schedule():
@@ -80,6 +168,21 @@ def test_plan_mesh_prefers_larger_usable_mesh():
     assert plan.size == 512
     plan7 = plan_mesh(7, 256, prefer_model=4)
     assert plan7.size <= 7 and plan7.size >= 4
+
+
+def test_plan_mesh_no_healthy_devices_raises_typed():
+    with pytest.raises(NoFeasibleMeshError):
+        plan_mesh(0, 64)
+    with pytest.raises(NoFeasibleMeshError):
+        plan_mesh(-2, 64)
+
+
+def test_plan_mesh_indivisible_batch_raises_typed():
+    with pytest.raises(NoFeasibleMeshError):
+        plan_mesh(8, 0)
+    # NoFeasibleMeshError subclasses RuntimeError: existing handlers that
+    # caught the old assert-adjacent failures keep working
+    assert issubclass(NoFeasibleMeshError, RuntimeError)
 
 
 def test_adapt_config_keeps_batch_divisible():
