@@ -13,7 +13,8 @@ SUITES = ("table2", "table3", "table4", "table6", "ablation", "meshtune",
           "serving", "fault")
 # fast suites with built-in correctness asserts -- CI runs these on every
 # push so bench modules can't silently rot between full runs
-SMOKE_SUITES = ("hotpath", "taskgraph", "tuner", "eval", "serving", "fault")
+SMOKE_SUITES = ("hotpath", "taskgraph", "tuner", "eval", "serving", "fault",
+                "kernel")
 
 
 def main(argv=None) -> None:

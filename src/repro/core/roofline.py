@@ -19,6 +19,8 @@ from __future__ import annotations
 
 import dataclasses
 
+import numpy as np
+
 from repro.configs.base import ModelConfig, ShapeConfig
 
 
@@ -32,6 +34,37 @@ class Hardware:
 
 
 V5E = Hardware()
+
+
+def roofline_time(flops, hbm_bytes, *, hw: Hardware = V5E,
+                  eff=1.0):
+    """The two-term tile roofline: max(compute, memory) seconds.  Works on
+    scalars or broadcast numpy arrays — ``core/kerneltune.py``'s tile cost
+    model and the ``kernels/timing.py`` simulator backend both price their
+    steady-state step through this one function, so the analytic prior and
+    the simulated "measurement" share a single roofline vocabulary."""
+    compute = np.asarray(flops, np.float64) / (hw.peak_flops
+                                               * np.maximum(eff, 1e-3))
+    memory = np.asarray(hbm_bytes, np.float64) / hw.hbm_bw
+    return np.maximum(compute, memory)
+
+
+def ridge_intensity(hw: Hardware = V5E) -> float:
+    """FLOPs/byte at the roofline ridge point — tiles below this intensity
+    are memory-bound; the seeded tile search uses it to rank candidates."""
+    return hw.peak_flops / hw.hbm_bw
+
+
+def mxu_efficiency(bm, bn, *, mxu: int = 128):
+    """Systolic-array utilization of a (bm, bn) output tile, broadcast over
+    arrays: sub-``mxu`` dims waste slots proportionally and non-multiples
+    pay a fixed fragmentation penalty.  Shared by the closed-form tile cost
+    model and the timing simulator."""
+    bm = np.asarray(bm, np.float64)
+    bn = np.asarray(bn, np.float64)
+    eff = np.minimum(bm, mxu) / mxu * np.minimum(bn, mxu) / mxu
+    return np.where((bm % mxu == 0) & (bn % mxu == 0),
+                    np.minimum(1.0, eff), 0.6 * eff)
 
 
 def _attn_layer_flops(cfg: ModelConfig, tokens: float, ctx: float,

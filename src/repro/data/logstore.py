@@ -33,7 +33,7 @@ from contextlib import contextmanager
 from pathlib import Path
 
 from repro.core.log import (SCHEMA_VERSION, ExecutionLog, ExecutionRecord,
-                            parse_header)
+                            canon_items, parse_header)
 
 try:
     import fcntl
@@ -181,6 +181,25 @@ class LogStore:
                     if (algos is None or r.algo in algos)
                     and (source is None or src == source)]
         return ExecutionLog(recs, s=self.s)
+
+    def group_cells(self, dataset: dict, algo: str, env: dict,
+                    source: str | None = None) -> dict:
+        """``{(p_r, p_c): record}`` for one <d, a, e> triple, optionally
+        filtered to an append source — the measurement memo behind
+        ``core/kerneltune.measure_case``: a cell already present for the
+        triple means that tile pair was timed in an earlier sweep (by any
+        writer of this path) and is served from the store instead of being
+        re-measured."""
+        key = (canon_items(dataset), algo, canon_items(env))
+        with self._tlock:
+            self._refresh()
+            out = {}
+            for r, src in zip(self._records, self._sources):
+                if source is not None and src != source:
+                    continue
+                if r.triple_key() == key:
+                    out[(r.p_r, r.p_c)] = r
+        return out
 
     def follow(self, cursor: int = 0) -> tuple[list, int]:
         """Tail the store: fold anything appended since the last look

@@ -74,8 +74,10 @@ def tune_dsarray(store, *, refit_demo: bool = False):
     return est
 
 
-def tune_kernel(store):
-    """Tile exponents from the broadcast cost-model grids."""
+def tune_kernel(store, *, measured: bool = True, seed: int = 0):
+    """Tile exponents from the broadcast cost-model grids, then (default)
+    the measured path: zoo cases -> timing backend -> ``kernel_measured``
+    records -> a tuner serving full (bm, bn, bk) tiles."""
     from repro.core.kerneltune import KernelTuner, build_training_log
 
     _banner("Pallas matmul tiles (core/kerneltune.py)")
@@ -84,12 +86,30 @@ def tune_kernel(store):
     tun = KernelTuner().fit(store.load(algos="matmul_tile"))
     print(f"  swept+fit in {time.time()-t0:.1f}s on "
           f"{len(store.load(algos='matmul_tile').records)} records")
-    batch = tun.predict_batch([(4096, 4096, 4096), (8192, 1024, 2048),
-                               (512, 512, 512)])
-    for (m, k, n), (bm, bn) in zip(
-            [(4096, 4096, 4096), (8192, 1024, 2048), (512, 512, 512)], batch):
-        print(f"  matmul {m}x{k}x{n}: block_m={bm} block_n={bn}")
-    return tun
+    shapes = [(4096, 4096, 4096), (8192, 1024, 2048), (512, 512, 512)]
+    for (m, k, n), (bm, bn, bk) in zip(shapes, tun.predict_batch(shapes)):
+        print(f"  matmul {m}x{k}x{n}: block_m={bm} block_n={bn} "
+              f"block_k={bk}")
+    if not measured:
+        return tun
+
+    from repro.configs.workloads import zoo_cases
+    from repro.core.kerneltune import MEASURED_SOURCE, measure_cases
+    from repro.kernels.timing import SimulatorBackend
+
+    _banner("measured refinement (kernels/timing.py sim backend)")
+    t0 = time.time()
+    backend = SimulatorBackend(seed=seed)
+    _, stats = measure_cases(zoo_cases(), backend, store)
+    mtun = KernelTuner().fit(
+        store.load(algos="matmul_tile", source=MEASURED_SOURCE))
+    print(f"  measured {stats['measured']} tiles "
+          f"({stats['cached']} cached, {stats['bucket_hits']} bucket hits, "
+          f"{stats['pruned']} pruned) in {time.time()-t0:.1f}s")
+    for (m, k, n), (bm, bn, bk) in zip(shapes, mtun.predict_batch(shapes)):
+        print(f"  measured matmul {m}x{k}x{n}: block_m={bm} block_n={bn} "
+              f"block_k={bk}")
+    return mtun
 
 
 def tune_mesh(store, chips: int):

@@ -25,7 +25,8 @@ def test_cli_drives_all_three_tuners(first_run, store_path, capsys):
     from repro.data.logstore import LogStore
     store = LogStore(store_path)
     srcs = store.sources()
-    assert set(srcs) == {"grid_search", "kernel_grid", "mesh_grid"}
+    assert set(srcs) == {"grid_search", "kernel_grid", "kernel_measured",
+                         "mesh_grid"}
     assert all(n > 0 for n in srcs.values())
     # every line after the header is valid JSON with a source tag
     lines = first_run.strip().splitlines()
