@@ -1,29 +1,42 @@
 """Load test + correctness asserts for the online serving subsystem
-(src/repro/serve/): sharded router, background refit daemon, closed-loop
+(src/repro/serve/): serving fleet (replica groups, crash respawn,
+rolling swaps, admission classes), background refit daemon, closed-loop
 load generator.
 
 Writes ``BENCH_serving.json`` at the repo root:
 
   * structural counts the CI gate checks exactly — shard count, requests
     served, zero rejected-under-capacity, zero staleness violations, the
-    deterministic set of traffic-active shards;
-  * banded metrics — memo hit rate, refit swaps, invalidations;
+    deterministic set of traffic-active shards, zero lost requests
+    across a mid-trace worker crash;
+  * banded metrics — memo hit rate, refit swaps, invalidations, served
+    skew (max/mean load across serving replicas; hot-shard replication
+    must hold it at ≤1.5 where the unreplicated router showed >3);
   * recorded-only wall-clock — throughput and p50/p95/p99 latency
     (never gated; CI runners vary wildly in absolute speed).
 
-The scenario is the paper's deployment story under concurrency: warm the
-estimator from a grid-swept store, serve round 1 of a seeded hot/zipf/
-uniform/cold query mix from K client threads (the cold algorithm
-abstains to the default heuristic), then sweep the cold algorithm into
-the store so the refit daemon folds it and atomically swaps the model
-in, and serve later rounds — with a concurrent writer churning the store
-mid-round — asserting that **no request enqueued after a swap is ever
-served by the old model** and that the previously-cold algorithm is now
-answered by the model.
+Three sections:
+
+1. **Refit scenario** (gated): the paper's deployment story under
+   concurrency — warm from a grid-swept store, serve a seeded
+   hot/zipf/uniform/cold mix (the cold algorithm abstains to the default
+   heuristic), sweep the cold algorithm so the refit daemon folds and
+   atomically swaps, then serve more rounds with a concurrent writer —
+   asserting that **no request enqueued after a swap is ever served by
+   the old model**.  Runs on the fleet router (loopback transport: the
+   deterministic CI path) with a demand-proportional replica plan.
+2. **Diurnal fleet load** (gated): a 10⁵-request seeded diurnal trace
+   with a worker crash injected on the hottest shard *and* a rolling
+   model swap mid-trace — zero lost requests, zero staleness, served
+   skew ≤ 1.5.  ``--full`` scales this to 5·10⁵ requests over real
+   worker processes.
+3. **Process-fleet speedup** (``--full`` only): a memo-defeating
+   compute-heavy trace served by the single-process router vs the
+   multi-process fleet; on multi-core hosts the fleet must clear 2x.
 
 Usage:
   python -m benchmarks.serving_bench --smoke     # what CI runs (default)
-  python -m benchmarks.serving_bench --full      # nightly multi-round run
+  python -m benchmarks.serving_bench --full      # nightly fleet scale
 
 Prints ``name,us_per_call,derived`` CSV rows (harness convention).
 """
@@ -32,6 +45,7 @@ from __future__ import annotations
 import argparse
 import json
 import math
+import os
 import tempfile
 import threading
 import time
@@ -44,7 +58,8 @@ from repro.core.gridsearch import grid_search
 from repro.data.datasets import gaussian_blobs
 from repro.data.executor import Environment
 from repro.data.logstore import LogStore
-from repro.serve import RefitDaemon, ShardRouter, make_trace, run_load
+from repro.serve import (FleetRouter, RefitDaemon, ShardRouter, demand_plan,
+                         make_diurnal_trace, make_trace, run_load)
 
 from benchmarks.common import csv_row
 
@@ -70,65 +85,69 @@ def _universe(algos):
     return [(n, m, a, feats) for a in algos for n, m in SHAPES]
 
 
-def run(verbose=True, *, rounds=2, requests_per_round=240, n_clients=4,
-        n_shards=4, seed=0):
+# ------------------------------------------------------ 1. refit scenario
+def _refit_scenario(store, *, rounds, requests_per_round, n_clients,
+                    n_shards, seed):
     assert rounds >= 2, "need a pre-swap and a post-swap round"
-    t0 = time.time()
-    with tempfile.TemporaryDirectory() as tmp:
-        store = LogStore(Path(tmp) / "serve_store.jsonl")
-        _sweep(store, "kmeans", 256, 16, seed=7)
-        _sweep(store, "gmm", 192, 12, seed=8)
-        est = BlockSizeEstimator("tree").fit(store.load())
-        router = ShardRouter(est, n_shards=n_shards, queue_depth=256,
-                             admission="reject", window_s=0.001)
-        daemon = RefitDaemon(router, store, interval_s=0.02).start()
-        try:
-            feats = ENV.features()
-            reports = []
+    est = BlockSizeEstimator("tree").fit(store.load())
+    feats = ENV.features()
 
-            # ---- round 1: COLD_ALGO unknown -> abstain/default everywhere
-            trace = make_trace(requests_per_round, _universe(("kmeans",
-                                                              "gmm")),
-                               seed=seed,
-                               cold_queries=[(256, 16, COLD_ALGO, feats)])
-            reports.append(run_load(router, trace, n_clients=n_clients,
+    # traces are deterministic, so build them all upfront and provision
+    # replicas proportionally to the measured per-shard demand
+    traces = [make_trace(requests_per_round, _universe(("kmeans", "gmm")),
+                         seed=seed,
+                         cold_queries=[(256, 16, COLD_ALGO, feats)])]
+    uni2 = _universe(("kmeans", "gmm", COLD_ALGO))
+    for ri in range(1, rounds):
+        traces.append(make_trace(
+            requests_per_round, uni2, seed=seed + ri,
+            cold_queries=[(256, 16, LATE_COLD_ALGO, feats)]))
+    plan = demand_plan(est, [e for t in traces for e in t], n_shards)
+
+    router = FleetRouter(est, n_shards=n_shards, replicas=plan,
+                         queue_depth=256, admission="reject",
+                         window_s=0.001)
+    daemon = RefitDaemon(router, store, interval_s=0.02).start()
+    try:
+        reports = []
+
+        # ---- round 1: COLD_ALGO unknown -> abstain/default everywhere
+        reports.append(run_load(router, traces[0], n_clients=n_clients,
+                                include_latencies=True))
+        assert reports[0]["by_kind"]["cold"]["default_frac"] == 1.0, \
+            f"cold algo served by the model pre-refit: {reports[0]}"
+
+        # ---- churn: sweep the cold algo; the daemon folds + swaps
+        _sweep(store, COLD_ALGO, 256, 16, seed=9)
+        deadline = time.time() + 30
+        while daemon.swaps < 1 and time.time() < deadline:
+            time.sleep(0.01)
+        assert daemon.swaps >= 1, \
+            f"refit daemon never swapped (last_error={daemon.last_error})"
+        res = router.request((256, 16, COLD_ALGO, feats))
+        assert res.chosen_by == "model", \
+            f"{COLD_ALGO} still abstains after the swap: {res}"
+
+        # ---- rounds 2..N: swapped model serves; a concurrent writer
+        # keeps churning the store mid-round
+        for ri in range(1, rounds):
+            writer = threading.Thread(
+                target=_sweep,
+                args=(store, "csvm", 128 + 64 * ri, 8, 20 + ri),
+                daemon=True)
+            writer.start()
+            reports.append(run_load(router, traces[ri],
+                                    n_clients=n_clients,
                                     include_latencies=True))
-            assert reports[0]["by_kind"]["cold"]["default_frac"] == 1.0, \
-                f"cold algo served by the model pre-refit: {reports[0]}"
-
-            # ---- churn: sweep the cold algo; the daemon folds + swaps
-            _sweep(store, COLD_ALGO, 256, 16, seed=9)
-            deadline = time.time() + 30
-            while daemon.swaps < 1 and time.time() < deadline:
-                time.sleep(0.01)
-            assert daemon.swaps >= 1, \
-                f"refit daemon never swapped (last_error={daemon.last_error})"
-            res = router.request((256, 16, COLD_ALGO, feats))
-            assert res.chosen_by == "model", \
-                f"{COLD_ALGO} still abstains after the swap: {res}"
-
-            # ---- rounds 2..N: swapped model serves; a concurrent writer
-            # keeps churning the store mid-round
-            uni2 = _universe(("kmeans", "gmm", COLD_ALGO))
-            for ri in range(1, rounds):
-                writer = threading.Thread(
-                    target=_sweep,
-                    args=(store, "csvm", 128 + 64 * ri, 8, 20 + ri),
-                    daemon=True)
-                writer.start()
-                trace = make_trace(
-                    requests_per_round, uni2, seed=seed + ri,
-                    cold_queries=[(256, 16, LATE_COLD_ALGO, feats)])
-                reports.append(run_load(router, trace, n_clients=n_clients,
-                                        include_latencies=True))
-                writer.join()
-            swaps = daemon.swaps
-        finally:
-            daemon.stop()
-            router.close()
+            writer.join()
+        swaps = daemon.swaps
+        # snapshot while replicas are live: per-replica rows (and the
+        # served-skew they feed) retire at close()
         stats = router.stats()
+    finally:
+        daemon.stop()
+        router.close()
 
-    # ---------------------------------------------------------- aggregate
     lat_ms = np.concatenate([r["latencies_ms"] for r in reports])
     requests = sum(r["requests"] for r in reports)
     served = sum(r["served"] for r in reports)
@@ -151,7 +170,8 @@ def run(verbose=True, *, rounds=2, requests_per_round=240, n_clients=4,
     assert math.isfinite(p99) and p99 > 0.0
     assert throughput > 0.0
 
-    results = {
+    total_shard = sum(p["served"] for p in stats["per_shard"]) or 1
+    return {
         "n_shards": n_shards,
         "n_shards_active": len(active),
         "active_shards": active,
@@ -167,25 +187,208 @@ def run(verbose=True, *, rounds=2, requests_per_round=240, n_clients=4,
         "cold_round1_default_frac":
             reports[0]["by_kind"]["cold"]["default_frac"],
         "cold_after_swap_chosen_by": res.chosen_by,
+        "replica_plan": {str(s): n for s, n in sorted(plan.items())},
+        "n_replicas": stats["n_replicas"],
+        "served_skew": stats["served_skew"],
+        "per_shard_served_frac": {
+            str(p["shard"]): p["served"] / total_shard
+            for p in stats["per_shard"]},
         "throughput_rps": throughput,
         "p50_ms": float(np.percentile(lat_ms, 50)),
         "p95_ms": float(np.percentile(lat_ms, 95)),
         "p99_ms": p99,
-        "wall_s": time.time() - t0,
         "per_shard": stats["per_shard"],
         "per_round": [{k: r[k] for k in
                        ("requests", "served", "rejected", "throughput_rps",
-                        "p50_ms", "p99_ms", "staleness_violations")}
+                        "p50_ms", "p99_ms", "staleness_violations",
+                        "served_skew")}
                       for r in reports],
     }
-    OUT.write_text(json.dumps(results, indent=2) + "\n")
 
-    csv_row("serving/load", wall / max(served, 1) * 1e6,
-            f"rps={throughput:.0f};p99={p99:.2f}ms;"
-            f"hit={stats['hit_rate']:.2f};stale={stale};swaps={swaps}")
+
+# -------------------------------------------------- 2. diurnal fleet load
+def _diurnal_fleet(store, *, requests, n_clients, n_shards, seed,
+                   transport):
+    """Fleet-scale diurnal trace with a worker crash on the hottest shard
+    AND a rolling model swap mid-trace: zero lost requests, zero
+    staleness, skew held down by demand-proportional replication."""
+    est = BlockSizeEstimator("tree").fit(store.load())
+    trace = make_diurnal_trace(requests, _universe(("kmeans", "gmm")),
+                               seed=seed, pattern="diurnal")
+    plan = demand_plan(est, trace, n_shards)
+    hottest = max(plan, key=plan.get)
+
+    # the swap target: an incremental refit on one more swept algorithm,
+    # so its model_version genuinely advances past the serving model's
+    cursor = len(store)
+    _sweep(store, "csvm", 96, 24, seed=31)
+    new_records = [r for r, _src in store.follow(cursor)[0]]
+    est_v2 = est.snapshot()
+    assert est_v2.refit(new_records), "swap target did not retrain"
+    assert est_v2.model_version > est.model_version
+
+    fleet = FleetRouter(est, n_shards=n_shards, replicas=plan,
+                        transport=transport, queue_depth=256,
+                        admission="block", window_s=0.001,
+                        call_timeout_s=120.0)
+    try:
+        fleet.inject_crash(hottest, after_batches=5)
+        swapped = threading.Event()
+
+        def swapper():
+            # land the rolling swap mid-trace, while clients are hot
+            time.sleep(0.5)
+            fleet.swap(est_v2)
+            swapped.set()
+
+        th = threading.Thread(target=swapper, daemon=True)
+        th.start()
+        rep = run_load(fleet, trace, n_clients=n_clients, timeout=300)
+        th.join(60)
+        stats = fleet.stats()
+    finally:
+        fleet.close()
+
+    lost = rep["requests"] - rep["served"] - rep["rejected"] - rep["expired"]
+    assert swapped.is_set(), "rolling swap never completed"
+    assert rep["errors"] == 0, f"serving errors: {rep['first_error']}"
+    assert lost == 0, f"{lost} requests lost across crash + rolling swap"
+    assert rep["staleness_violations"] == 0, \
+        f"{rep['staleness_violations']} staleness violations"
+    assert stats["crashes"] >= 1 and stats["respawns"] >= 1, stats
+    assert rep["served_skew"] <= 1.5, \
+        f"served skew {rep['served_skew']:.2f} > 1.5 despite replication"
+
+    return {
+        "transport": transport,
+        "requests": rep["requests"],
+        "served": rep["served"],
+        "lost": lost,
+        "errors": rep["errors"],
+        "staleness_violations": rep["staleness_violations"],
+        "crashes": stats["crashes"],
+        "respawns": stats["respawns"],
+        "rerouted": stats["rerouted"],
+        "swaps": stats["swaps"],
+        "served_skew": rep["served_skew"],
+        "served_units": rep["served_units"],
+        "replica_plan": {str(s): n for s, n in sorted(plan.items())},
+        "crash_shard": hottest,
+        "throughput_rps": rep["throughput_rps"],
+        "p50_ms": rep["p50_ms"],
+        "p99_ms": rep["p99_ms"],
+        "wall_s": rep["wall_s"],
+    }
+
+
+# --------------------------------------------- 3. process-fleet speedup
+def _fleet_speedup(store, *, requests, n_clients, n_shards, seed):
+    """Single-process router vs multi-process fleet on the same
+    memo-defeating trace (distinct env features per query -> every
+    request is a model predict, the compute processes parallelize).
+    Only meaningful on multi-core hosts; the 2x gate arms there."""
+    est = BlockSizeEstimator("forest").fit(store.load())
+    base = ENV.features()
+    # 8192 distinct env variants + a small LRU: uniform traffic evicts
+    # faster than it re-hits, so nearly every request runs the cascade
+    universe = [(256 * (1 + i % 7), 16 * (1 + i % 5),
+                 ("kmeans", "gmm")[i % 2], dict(base, ram_gb=16 + i))
+                for i in range(8192)]
+    trace = make_trace(requests, universe, seed=seed,
+                       weights={"hot": 0.0, "zipf": 0.0, "uniform": 1.0,
+                                "cold": 0.0})
+
+    # batch_max 64 on both sides: identical batching, but it amortizes
+    # the fleet's per-batch frame round-trip so the comparison measures
+    # compute parallelism, not framing overhead
+    with ShardRouter(est, n_shards=n_shards, queue_depth=512,
+                     window_s=0.002, batch_max=64, maxsize=256) as router:
+        single = run_load(router, trace, n_clients=n_clients, timeout=600)
+    with FleetRouter(est, n_shards=n_shards, replicas=1,
+                     transport="process", queue_depth=512,
+                     window_s=0.002, batch_max=64, maxsize=256,
+                     call_timeout_s=300.0) as fleet:
+        multi = run_load(fleet, trace, n_clients=n_clients, timeout=600)
+
+    assert single["errors"] == 0, single["first_error"]
+    assert multi["errors"] == 0, multi["first_error"]
+    assert multi["served"] == multi["requests"]
+    speedup = multi["throughput_rps"] / max(single["throughput_rps"], 1e-9)
+    cores = os.cpu_count() or 1
+    if cores >= 4:
+        assert speedup >= 2.0, \
+            (f"process fleet only {speedup:.2f}x the single-process "
+             f"router on {cores} cores (need >= 2x)")
+    else:
+        print(f"# note: {cores} core(s) — process-fleet speedup gate "
+              f"needs >= 4 cores, measured {speedup:.2f}x", flush=True)
+    return {
+        "requests": requests,
+        "single_rps": single["throughput_rps"],
+        "fleet_rps": multi["throughput_rps"],
+        "fleet_speedup": speedup,
+        "single_hit_rate": single["router"]["hit_rate"],
+        "cores": cores,
+        "gated": cores >= 4,
+    }
+
+
+def run(verbose=True, *, rounds=2, requests_per_round=240, n_clients=4,
+        n_shards=4, seed=0, diurnal_requests=100_000, diurnal_clients=16,
+        full=False):
+    t0 = time.time()
+    with tempfile.TemporaryDirectory() as tmp:
+        store = LogStore(Path(tmp) / "serve_store.jsonl")
+        _sweep(store, "kmeans", 256, 16, seed=7)
+        _sweep(store, "gmm", 192, 12, seed=8)
+
+        results = _refit_scenario(store, rounds=rounds,
+                                  requests_per_round=requests_per_round,
+                                  n_clients=n_clients, n_shards=n_shards,
+                                  seed=seed)
+        csv_row("serving/load",
+                1.0 / max(results["throughput_rps"], 1e-9) * 1e6,
+                f"rps={results['throughput_rps']:.0f};"
+                f"p99={results['p99_ms']:.2f}ms;"
+                f"hit={results['hit_rate']:.2f};"
+                f"skew={results['served_skew']:.2f};"
+                f"stale={results['staleness_violations']};"
+                f"swaps={results['refit_swaps']}")
+
+        # the fleet sections reuse the store (the refit scenario's csvm
+        # churn rounds already landed in it — fine: more evidence only
+        # makes the models better, determinism comes from the traces)
+        diurnal = _diurnal_fleet(
+            store, requests=diurnal_requests, n_clients=diurnal_clients,
+            n_shards=n_shards, seed=seed + 1,
+            transport="process" if full else "loopback")
+        results["fleet_diurnal"] = diurnal
+        csv_row("serving/fleet_diurnal",
+                1.0 / max(diurnal["throughput_rps"], 1e-9) * 1e6,
+                f"transport={diurnal['transport']};"
+                f"n={diurnal['requests']};"
+                f"rps={diurnal['throughput_rps']:.0f};"
+                f"skew={diurnal['served_skew']:.2f};"
+                f"lost={diurnal['lost']};crashes={diurnal['crashes']};"
+                f"stale={diurnal['staleness_violations']}")
+
+        if full:
+            speedup = _fleet_speedup(store, requests=60_000,
+                                     n_clients=16, n_shards=n_shards,
+                                     seed=seed + 2)
+            results["fleet_speedup"] = speedup
+            csv_row("serving/fleet_speedup",
+                    1.0 / max(speedup["fleet_rps"], 1e-9) * 1e6,
+                    f"speedup={speedup['fleet_speedup']:.2f}x;"
+                    f"single={speedup['single_rps']:.0f}rps;"
+                    f"fleet={speedup['fleet_rps']:.0f}rps;"
+                    f"cores={speedup['cores']}")
+
+    results["wall_s"] = time.time() - t0
     csv_row("serving/refit_swap", results["wall_s"] * 1e6,
-            f"shards={n_shards};invalidations={stats['invalidations']};"
-            f"cold={COLD_ALGO}:{res.chosen_by}")
+            f"shards={n_shards};invalidations={results['invalidations']};"
+            f"cold={COLD_ALGO}:{results['cold_after_swap_chosen_by']}")
+    OUT.write_text(json.dumps(results, indent=2) + "\n")
     if verbose:
         print(f"# wrote {OUT}")
     return results
@@ -196,19 +399,25 @@ def main(argv=None):
     ap.add_argument("--smoke", action="store_true",
                     help="the fast CI configuration (this is the default)")
     ap.add_argument("--full", action="store_true",
-                    help="nightly scale: more rounds, requests, clients")
+                    help="nightly scale: multi-process fleet, 5x the "
+                         "diurnal trace, the process-speedup section")
     ap.add_argument("--rounds", type=int, default=None)
     ap.add_argument("--requests", type=int, default=None)
     ap.add_argument("--clients", type=int, default=None)
     ap.add_argument("--shards", type=int, default=4)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--diurnal-requests", type=int, default=None)
     args = ap.parse_args(argv)
     rounds = args.rounds or (4 if args.full else 2)
     requests = args.requests or (1000 if args.full else 240)
     clients = args.clients or (8 if args.full else 4)
+    diurnal = args.diurnal_requests or (500_000 if args.full else 100_000)
     print("name,us_per_call,derived")
     return run(rounds=rounds, requests_per_round=requests,
-               n_clients=clients, n_shards=args.shards, seed=args.seed)
+               n_clients=clients, n_shards=args.shards, seed=args.seed,
+               diurnal_requests=diurnal,
+               diurnal_clients=32 if args.full else 16,
+               full=args.full)
 
 
 if __name__ == "__main__":

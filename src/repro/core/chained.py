@@ -12,6 +12,8 @@ benchmarked in benchmarks/ablation_models.py.
 """
 from __future__ import annotations
 
+from functools import partial
+
 import numpy as np
 
 from repro.core.trees import DecisionTreeClassifier
@@ -34,16 +36,18 @@ def make_model(name: str, *, s: int = 2, max_depth: int = 10):
     ``s`` reaches the regression baseline, whose snap-to-class step is the
     only model that depends on the partition base."""
     from repro.core.trees import RandomForestClassifier
+    # partial() of named classes, not lambdas: models must pickle into
+    # serving-fleet worker processes (serve/transport.py)
     if name == "tree":
         return ChainedClassifier(
-            lambda: DecisionTreeClassifier(max_depth=max_depth))
+            partial(DecisionTreeClassifier, max_depth=max_depth))
     if name == "forest":
         return ChainedClassifier(
-            lambda: RandomForestClassifier(n_estimators=30,
-                                           max_depth=max_depth))
+            partial(RandomForestClassifier, n_estimators=30,
+                    max_depth=max_depth))
     if name == "independent":
         return IndependentClassifier(
-            lambda: DecisionTreeClassifier(max_depth=max_depth))
+            partial(DecisionTreeClassifier, max_depth=max_depth))
     if name == "regression":
         return RegressionBaseline(s=s)
     raise KeyError(f"unknown cascade model {name!r}")
@@ -51,8 +55,8 @@ def make_model(name: str, *, s: int = 2, max_depth: int = 10):
 
 class ChainedClassifier:
     def __init__(self, base_factory=None):
-        self.base_factory = base_factory or (
-            lambda: DecisionTreeClassifier(max_depth=10))
+        self.base_factory = base_factory or partial(
+            DecisionTreeClassifier, max_depth=10)
         self.model_r = None
         self.model_c = None
 
@@ -78,8 +82,8 @@ class IndependentClassifier:
     """Ablation: two unchained trees (ignores target dependence)."""
 
     def __init__(self, base_factory=None):
-        self.base_factory = base_factory or (
-            lambda: DecisionTreeClassifier(max_depth=10))
+        self.base_factory = base_factory or partial(
+            DecisionTreeClassifier, max_depth=10)
 
     def fit(self, X, y_r, y_c):
         self.model_r = self.base_factory().fit(X, y_r)
@@ -98,8 +102,8 @@ class RegressionBaseline:
 
     def __init__(self, base_factory=None, s: int = 2):
         from repro.core.trees import DecisionTreeRegressor
-        self.base_factory = base_factory or (
-            lambda: DecisionTreeRegressor(max_depth=10))
+        self.base_factory = base_factory or partial(
+            DecisionTreeRegressor, max_depth=10)
         self.s = s
 
     def fit(self, X, y_r, y_c):

@@ -29,6 +29,7 @@ import copy
 import dataclasses
 import math
 from collections import OrderedDict
+from functools import partial
 
 import numpy as np
 
@@ -99,6 +100,12 @@ class TuneQuery:
                 self.cap_r, self.cap_c)
 
 
+def _featurize_record(r):
+    """Default record featurization — module-level (not a lambda) so a
+    fitted tuner pickles into serving-fleet worker processes."""
+    return featurize(r.dataset, r.algo, r.env)
+
+
 class ArgminLabeler:
     """Incremental argmin labeling: ``observe`` folds records into running
     per-group minima, ``pairs`` emits (feature dicts, y_r, y_c).
@@ -112,8 +119,7 @@ class ArgminLabeler:
 
     def __init__(self, space: SearchSpace, featurize_record=None):
         self.space = space
-        self._featurize = featurize_record or (
-            lambda r: featurize(r.dataset, r.algo, r.env))
+        self._featurize = featurize_record or _featurize_record
         # key -> (best time, p_r, p_c) | None while the group has no finite
         # cell; dict order = first-occurrence order
         self._best: dict = {}
@@ -167,10 +173,13 @@ class Tuner:
                  labeler_factory=None):
         self.space = space or SearchSpace()
         self.model_name = model if model_factory is None else "custom"
-        self._factory = model_factory or (
-            lambda: make_model(model, s=self.space.s))
-        self._labeler_factory = labeler_factory or (
-            lambda: ArgminLabeler(self.space))
+        # partial() of named callables, not lambdas: a Tuner (and every
+        # estimator wrapping one) must pickle across the serving-fleet
+        # process boundary (serve/transport.py)
+        self._factory = model_factory or partial(
+            make_model, model, s=self.space.s)
+        self._labeler_factory = labeler_factory or partial(
+            ArgminLabeler, self.space)
         self.labeler = self._labeler_factory()
         self.model = None
         self.feature_order = None

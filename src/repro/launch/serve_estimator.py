@@ -1,17 +1,26 @@
-"""CLI fronting the online serving subsystem (DESIGN.md §10).
+"""CLI fronting the online serving subsystem (DESIGN.md §10, §13).
 
     python -m repro.launch.serve_estimator --demo             # self-contained
     python -m repro.launch.serve_estimator --store artifacts/store.jsonl
     python -m repro.launch.serve_estimator --store S --shards 8 --clients 8
+    python -m repro.launch.serve_estimator --demo --processes \\
+        --replicas 1:3 --autoscale                            # fleet mode
 
 Warm a ``BlockSizeEstimator`` from a persistent ``LogStore``, stand up
 the sharded router plus the background refit daemon, replay a seeded
 closed-loop trace against it, and print a latency table — throughput,
-p50/p95/p99, per-shard hit rates, and the staleness audit.  ``--demo``
-grid-sweeps a tiny corpus into a temporary store first, so the command
-works on a fresh checkout.  An empty/unfitted store still serves: every
-query abstains to the default square heuristic until records arrive and
-the daemon's first refit lands.
+p50/p95/p99, per-shard hit rates, load balance, and the staleness
+audit.  ``--demo`` grid-sweeps a tiny corpus into a temporary store
+first, so the command works on a fresh checkout.  An empty/unfitted
+store still serves: every query abstains to the default square
+heuristic until records arrive and the daemon's first refit lands.
+
+Fleet mode (any of ``--processes`` / ``--replicas`` / ``--autoscale``)
+swaps the in-process ShardRouter for the multi-process
+:class:`~repro.serve.fleet.FleetRouter`: ``--processes`` runs each
+shard replica as a real worker process, ``--replicas`` replicates
+shards (``2`` everywhere, or ``0:2,3:4`` / ``1:3`` per shard), and
+``--autoscale`` turns on the queue-pressure autoscaler.
 """
 from __future__ import annotations
 
@@ -22,6 +31,19 @@ import time
 from pathlib import Path
 
 DISLIB_ALGOS = ("kmeans", "pca", "gmm", "csvm", "rf")
+
+
+def parse_replicas(spec: str):
+    """``"2"`` → 2 everywhere; ``"0:2,3:4"`` → {0: 2, 3: 4} (unlisted
+    shards get one replica)."""
+    spec = spec.strip()
+    if ":" not in spec:
+        return max(1, int(spec))
+    plan = {}
+    for part in spec.split(","):
+        shard, _, n = part.partition(":")
+        plan[int(shard)] = max(1, int(n))
+    return plan
 
 
 def _demo_store(tmp: str):
@@ -86,13 +108,23 @@ def main(argv=None):
                     help="micro-batch window per shard")
     ap.add_argument("--no-refit", action="store_true",
                     help="serve without the background refit daemon")
+    ap.add_argument("--processes", action="store_true",
+                    help="fleet mode: run each shard replica as a real "
+                         "worker process (default: in-process threads)")
+    ap.add_argument("--replicas", default=None,
+                    help="fleet mode: replicas per shard — '2' everywhere "
+                         "or '0:2,3:4' per shard (default 1)")
+    ap.add_argument("--autoscale", action="store_true",
+                    help="fleet mode: scale replicas out/in from queue "
+                         "pressure")
     ap.add_argument("--json", default=None,
                     help="also write the full serving report to this path")
     args = ap.parse_args(argv)
 
     from repro.core.estimator import BlockSizeEstimator
     from repro.data.logstore import LogStore
-    from repro.serve import (RefitDaemon, ShardRouter, make_trace, run_load)
+    from repro.serve import (FleetRouter, RefitDaemon, ShardRouter,
+                             make_trace, run_load)
 
     if args.store is None and not args.demo:
         ap.error("pass --store PATH (or --demo for a self-contained run)")
@@ -127,10 +159,23 @@ def main(argv=None):
     n0, m0, _a, env0 = universe[0]
     cold = [(n0, m0, cold_algo, env0)] if cold_algo else []
 
-    router = ShardRouter(est, n_shards=args.shards,
-                         queue_depth=args.queue_depth,
-                         admission=args.admission, batch_max=args.batch_max,
-                         window_s=args.window_ms / 1e3)
+    fleet_mode = args.processes or args.autoscale or args.replicas is not None
+    if fleet_mode:
+        router = FleetRouter(
+            est, n_shards=args.shards,
+            replicas=parse_replicas(args.replicas or "1"),
+            transport="process" if args.processes else "loopback",
+            queue_depth=args.queue_depth, admission=args.admission,
+            batch_max=args.batch_max, window_s=args.window_ms / 1e3,
+            autoscale=args.autoscale)
+        if router.autoscaler is not None:
+            router.autoscaler.start()
+    else:
+        router = ShardRouter(est, n_shards=args.shards,
+                             queue_depth=args.queue_depth,
+                             admission=args.admission,
+                             batch_max=args.batch_max,
+                             window_s=args.window_ms / 1e3)
     daemon = None
     if not args.no_refit:
         daemon = RefitDaemon(router, store, interval_s=0.05).start()
@@ -159,6 +204,12 @@ def main(argv=None):
     print(f"  staleness   {report['staleness_violations']} violations "
           f"across {st['swaps']} model swaps "
           f"(daemon refits: {daemon.swaps if daemon else 'off'})")
+    if fleet_mode:
+        print(f"  fleet       transport={st['transport']}  "
+              f"replicas={st['n_replicas']}  "
+              f"served_skew {report['served_skew']:.2f}  "
+              f"scale out/in {st['scale_outs']}/{st['scale_ins']}  "
+              f"crashes {st['crashes']}")
     print("  shard  served  hit_rate  abstained  max_batch  rejected")
     for p in st["per_shard"]:
         print(f"  {p['shard']:>5}  {p['served']:>6}  {p['hit_rate']:8.2f}  "

@@ -1,7 +1,8 @@
-"""Online serving subsystem (DESIGN.md §10): sharded estimation service,
-background refit daemon, and the closed-loop load generator.
+"""Online serving subsystem (DESIGN.md §10, §13): sharded estimation
+service, multi-process serving fleet, background refit daemon, and the
+closed-loop load generator.
 
-Quickstart::
+Quickstart (single process)::
 
     est = BlockSizeEstimator("tree").fit(store.load())
     with ShardRouter(est, n_shards=4) as router:
@@ -10,17 +11,31 @@ Quickstart::
         ...
         daemon.stop()
 
+Fleet (multi-process workers, replicated hot shards, autoscaling)::
+
+    with FleetRouter(est, n_shards=8, replicas={1: 3},
+                     transport="process", autoscale=True) as fleet:
+        fleet.request(query, deadline_s=0.05, cls="interactive")
+
 ``python -m repro.launch.serve_estimator`` fronts the whole tier from a
 persistent LogStore; ``benchmarks/serving_bench.py`` load-tests it.
 """
-from repro.serve.loadgen import (make_trace, make_universe, run_load,
+from repro.serve.fleet import (AutoscalePolicy, Autoscaler, FleetRouter,
+                               ShedRejected, demand_plan)
+from repro.serve.loadgen import (make_diurnal_trace, make_trace,
+                                 make_universe, run_load, served_skew,
                                  staleness_violations)
 from repro.serve.refit import RefitDaemon
 from repro.serve.router import (DeadlineExceeded, HashRing, RouterClosed,
                                 RouterRejected, ServeResult, Shard,
                                 ShardRouter)
+from repro.serve.transport import (LoopbackTransport, ProcessTransport,
+                                   ShardWorker, TransportDead)
 
-__all__ = ["DeadlineExceeded", "HashRing", "RefitDaemon", "RouterClosed",
+__all__ = ["AutoscalePolicy", "Autoscaler", "DeadlineExceeded",
+           "FleetRouter", "HashRing", "LoopbackTransport",
+           "ProcessTransport", "RefitDaemon", "RouterClosed",
            "RouterRejected", "ServeResult", "Shard", "ShardRouter",
-           "make_trace", "make_universe", "run_load",
-           "staleness_violations"]
+           "ShardWorker", "ShedRejected", "TransportDead", "demand_plan",
+           "make_diurnal_trace", "make_trace", "make_universe",
+           "run_load", "served_skew", "staleness_violations"]

@@ -1,0 +1,963 @@
+"""Multi-process serving fleet: management layer over shard worker
+replicas (DESIGN.md §13).
+
+``serve/router.py``'s ShardRouter proved the serving contracts —
+consistent-hash affinity, zero-staleness refit swaps, crash respawn —
+inside one process.  This module scales the same contracts out:
+
+* :class:`FleetRouter` — the management layer.  It owns admission
+  (per-class priorities + early deadline drop *before* enqueue), the
+  consistent-hash ring (optionally weighted), replica groups, swaps,
+  crash respawn, and observability.  It never touches a model: all
+  compute lives behind a transport (``serve/transport.py``) in shard
+  workers — threads on the deterministic loopback path, real
+  ``multiprocessing`` workers in fleet mode.
+* **Replica groups** — each logical shard is served by one or more
+  replicas (*read-any*: a request picks the least-loaded eligible
+  replica; *write-all*: a swap lands on every replica).  Hot shards get
+  more replicas, which is what fixes the served-skew bottleneck the
+  single-replica router shows under hot-key traffic.
+* **Versioned swap barriers** — ``swap()`` rolls the new model across
+  replicas one at a time (zero downtime: the rest of the group keeps
+  serving).  Only after *every* replica acked does the read barrier
+  advance, so a request admitted after ``swap()`` returns can only be
+  served by a replica at the new version — read-your-writes across
+  refit swaps, the same staleness contract the loadgen audits.
+* :class:`Autoscaler` — scale-out on sustained queue pressure,
+  scale-in on sustained idle, with hysteresis (consecutive-tick
+  streaks + cooldown) so a noisy load can't flap replicas.
+* **Overload shedding** — beyond block/reject: request classes
+  (``interactive`` > ``batch`` > ``best_effort``) admit against
+  per-class queue fractions, so background traffic sheds first, and a
+  request whose deadline cannot be met given the queue's service-time
+  EMA is dropped *before* it consumes a queue slot.
+"""
+from __future__ import annotations
+
+import threading
+import time
+import queue as queue_mod
+
+from repro.core.estimator import EstimatorService
+from repro.core.tuner import fold_records
+from repro.serve.router import (DeadlineExceeded, HashRing, RouterClosed,
+                                RouterRejected, ServeResult, _Request)
+from repro.serve.transport import TRANSPORTS, TransportDead
+
+__all__ = ["AutoscalePolicy", "Autoscaler", "FleetRouter", "Replica",
+           "ShardGroup", "ShedRejected", "CLASS_PRIORITY", "demand_plan"]
+
+
+def demand_plan(backend, trace, n_shards: int, *, target_units: int = 8,
+                vnodes: int = 32,
+                service_factory=EstimatorService) -> dict:
+    """Demand-proportional replica plan: walk ``trace`` through the same
+    ring/keyer the fleet will use, then hand each shard a share of
+    ``target_units`` replicas proportional to its traffic (minimum one).
+    This is the capacity-planning step that fixes hot-shard served skew:
+    consistent hashing pins hot keys to one shard, so the only lever is
+    replicating that shard's serving capacity."""
+    ring = HashRing(n_shards, vnodes)
+    keyer = service_factory(backend, 2)
+    counts = [0] * n_shards
+    for entry in trace:
+        counts[ring.shard_for(keyer._key(entry[1]))] += 1
+    total = sum(counts) or 1
+    return {s: max(1, round(c / total * target_units))
+            for s, c in enumerate(counts)}
+
+_STOP = object()
+
+# request classes, highest priority first; fractions are the share of a
+# replica's queue depth each class may fill before it sheds
+CLASS_PRIORITY = {"interactive": 0, "batch": 1, "best_effort": 2}
+DEFAULT_CLASS_FRACS = {"interactive": 1.0, "batch": 0.75, "best_effort": 0.5}
+
+
+class ShedRejected(RouterRejected):
+    """Admission control shed this request (class over its queue share);
+    carries the class so clients can back off per-class."""
+
+    def __init__(self, msg: str, cls: str):
+        super().__init__(msg)
+        self.cls = cls
+
+
+class _FleetRequest(_Request):
+    __slots__ = ("cls",)
+
+    def __init__(self, query, t_enq, deadline=None, cls="interactive"):
+        super().__init__(query, t_enq, deadline)
+        self.cls = cls
+
+
+class _SwapCmd:
+    """In-queue swap marker: requests enqueued before it serve the old
+    model, requests after it the new one — per-replica ordering is the
+    queue's."""
+    __slots__ = ("backend", "version", "event")
+
+    def __init__(self, backend, version):
+        self.backend = backend
+        self.version = version
+        self.event = threading.Event()
+
+
+class Replica:
+    """One serving unit: a transport to a shard worker, a bounded
+    admission queue, and a dispatcher thread draining micro-batches."""
+
+    def __init__(self, shard: int, rid: int, transport, *,
+                 queue_depth: int, batch_max: int, window_s: float,
+                 call_timeout_s: float | None, version,
+                 on_crash, on_exit):
+        self.shard = shard
+        self.rid = rid
+        self.transport = transport
+        self.queue: queue_mod.Queue = queue_mod.Queue(maxsize=queue_depth)
+        self.batch_max = batch_max
+        self.window_s = window_s
+        self.call_timeout_s = call_timeout_s
+        self.version = version               # last acked model version
+        self._on_crash = on_crash
+        self._on_exit = on_exit
+        self.dead = False
+        self.draining = False                # scale-in: no new admissions
+        self.retired = False                 # counters folded into group
+        self._crash_after = None
+        # counters (management-side; hits/misses mirror the worker's)
+        self.served = 0
+        self.abstained = 0
+        self.expired = 0
+        self.rejected = 0
+        self.shed_class: dict[str, int] = {}
+        self.shed_deadline = 0
+        self.batches = 0
+        self.max_batch = 0
+        self.queue_high_water = 0
+        self.window_hw = 0                   # per-autoscaler-tick window
+        self.ema_s = 0.0                     # per-request service time EMA
+        self.counters = {"hits": 0, "misses": 0, "invalidations": 0,
+                         "hit_rate": 0.0}
+        self.thread = threading.Thread(
+            target=self._run, name=f"fleet-s{shard}r{rid}", daemon=True)
+
+    # ------------------------------------------------------------- worker
+    def note_qsize(self) -> None:
+        n = self.queue.qsize()
+        self.queue_high_water = max(self.queue_high_water, n)
+        self.window_hw = max(self.window_hw, n)
+
+    def take_window_hw(self) -> int:
+        hw, self.window_hw = self.window_hw, self.queue.qsize()
+        return hw
+
+    def _drain_rest(self) -> list:
+        items = []
+        while True:
+            try:
+                item = self.queue.get_nowait()
+            except queue_mod.Empty:
+                return items
+            if item is not _STOP:
+                items.append(item)
+
+    def _run(self):
+        try:
+            self._run_inner()
+        except Exception:
+            # backstop: a dispatcher must never die leaving its queue
+            # stranded — treat any escaped exception as a replica crash
+            # so every queued request is re-routed or failed loudly
+            if not self.dead:
+                self.dead = True
+                self._on_crash(self, self._drain_rest())
+
+    def _run_inner(self):
+        stop = False
+        while not stop:
+            item = self.queue.get()
+            pending_cmd = None
+            if item is _STOP:
+                batch, stop = self._drain_rest(), True
+            elif isinstance(item, _SwapCmd):
+                batch, pending_cmd = [], item
+            else:
+                batch = [item]
+                deadline = time.monotonic() + self.window_s
+                while len(batch) < self.batch_max:
+                    try:
+                        nxt = self.queue.get(
+                            timeout=max(0.0, deadline - time.monotonic()))
+                    except queue_mod.Empty:
+                        break
+                    if nxt is _STOP:
+                        batch += self._drain_rest()
+                        stop = True
+                        break
+                    if isinstance(nxt, _SwapCmd):
+                        pending_cmd = nxt     # applied after this batch
+                        break
+                    batch.append(nxt)
+            if batch and not stop and self._crash_after is not None:
+                if self._crash_after <= 0:
+                    self._crash(batch, pending_cmd)
+                    return
+                self._crash_after -= 1
+            if batch and not self._serve(batch):
+                if pending_cmd is not None:
+                    batch.append(pending_cmd)   # re-orphan with the rest
+                return                          # crashed mid-serve
+            if pending_cmd is not None and not self._apply_swap(pending_cmd):
+                return
+        # graceful exit: hand the queue's leftovers (racing late enqueues
+        # and swap cmds) back, close the worker, retire the counters
+        leftovers = self._drain_rest()
+        self.transport.close()
+        self._on_exit(self, leftovers)
+
+    def _crash(self, batch, pending_cmd):
+        """Injected crash: kill the worker *holding* an unserved batch."""
+        try:
+            self.transport.call({"op": "crash"},
+                                timeout=self.call_timeout_s)
+        except TransportDead:
+            pass
+        self.dead = True
+        orphans = batch + self._drain_rest()
+        if pending_cmd is not None:
+            orphans.append(pending_cmd)
+        self._on_crash(self, orphans)
+
+    def _apply_swap(self, cmd: _SwapCmd) -> bool:
+        try:
+            reply = self.transport.call(
+                {"op": "swap", "backend": cmd.backend},
+                timeout=self.call_timeout_s)
+        except TransportDead:
+            self.dead = True
+            self._on_crash(self, [cmd] + self._drain_rest())
+            return False
+        except Exception:
+            # swap payload failed in transit (e.g. unpicklable model):
+            # this replica's worker may be at the old version, so it must
+            # not serve past the barrier — retire it and let the respawn
+            # carry the target model object directly
+            self.dead = True
+            try:
+                self.transport.kill()
+            except Exception:
+                pass
+            self._on_crash(self, [cmd] + self._drain_rest())
+            return False
+        if reply.get("ok"):
+            self.version = reply.get("version", cmd.version)
+        self.counters = {k: reply[k] for k in
+                         ("hits", "misses", "invalidations", "hit_rate")
+                         if k in reply} or self.counters
+        cmd.event.set()
+        return True
+
+    def _expire(self, batch: list) -> list:
+        now = time.monotonic()
+        live = []
+        for req in batch:
+            if req.deadline is not None and now > req.deadline:
+                self.expired += 1
+                req.error = DeadlineExceeded(
+                    f"deadline passed {now - req.deadline:.4f}s before "
+                    f"shard {self.shard} replica {self.rid} served it")
+                req.event.set()
+            else:
+                live.append(req)
+        return live
+
+    def _serve(self, batch: list) -> bool:
+        """Serve one micro-batch through the worker; False iff the worker
+        died mid-call (the batch is handed to the crash path)."""
+        batch = self._expire(batch)
+        if not batch:
+            return True
+        t0 = time.monotonic()
+        try:
+            reply = self.transport.call(
+                {"op": "predict", "queries": [r.query for r in batch]},
+                timeout=self.call_timeout_s)
+        except TransportDead:
+            self.dead = True
+            self._on_crash(self, batch + self._drain_rest())
+            return False
+        except Exception as e:
+            # the call failed without killing the worker (codec error,
+            # malformed query): fail this batch loudly, keep serving
+            for req in batch:
+                req.error = e
+                req.event.set()
+            return True
+        t_done = time.monotonic()
+        if reply.get("ok"):
+            version = reply.get("version")
+            for req, (value, chosen_by) in zip(batch, reply["results"]):
+                if isinstance(value, list):
+                    value = tuple(value)
+                req.result = ServeResult(value, self.shard, version,
+                                         chosen_by, req.t_enq, t_done)
+            self.abstained += sum(
+                1 for _, by in reply["results"] if by == "default")
+            self.counters = {k: reply[k] for k in
+                             ("hits", "misses", "invalidations", "hit_rate")
+                             if k in reply} or self.counters
+        else:
+            err = RuntimeError(reply.get("error", "worker error"))
+            for req in batch:
+                req.error = err
+        self.served += len(batch)
+        self.batches += 1
+        self.max_batch = max(self.max_batch, len(batch))
+        per_req = (t_done - t0) / max(len(batch), 1)
+        self.ema_s = per_req if self.ema_s == 0.0 else \
+            0.8 * self.ema_s + 0.2 * per_req
+        for req in batch:
+            req.event.set()
+        return True
+
+
+_SUM_KEYS = ("served", "abstained", "expired", "rejected", "shed",
+             "shed_deadline", "batches", "hits", "misses", "invalidations")
+_MAX_KEYS = ("max_batch", "queue_high_water")
+
+
+class ShardGroup:
+    """Replica group for one logical shard: read-any across members,
+    write-all on swaps, retired-counter bookkeeping so totals stay
+    monotonic across crashes and scale-ins."""
+
+    def __init__(self, shard: int):
+        self.shard = shard
+        self.lock = threading.Lock()
+        self.replicas: list[Replica] = []
+        self._rr = 0
+        self.retired = {k: 0 for k in _SUM_KEYS + _MAX_KEYS}
+
+    def add(self, replica: Replica) -> None:
+        with self.lock:
+            self.replicas.append(replica)
+
+    def remove(self, replica: Replica) -> None:
+        with self.lock:
+            if replica in self.replicas:
+                self.replicas.remove(replica)
+
+    def pick(self, barrier) -> Replica:
+        """Read-any selection: least-loaded live replica at or beyond the
+        read barrier (ties broken round-robin).  Mid-rolling-swap the
+        barrier is still the old version, so both swapped and unswapped
+        replicas are eligible — the barrier only advances once all acked.
+        """
+        with self.lock:
+            live = [r for r in self.replicas
+                    if not r.dead and not r.draining]
+            if not live:
+                live = [r for r in self.replicas if not r.dead]
+            if not live:
+                raise RouterClosed(f"shard {self.shard} has no replicas")
+            eligible = [r for r in live
+                        if barrier is None or r.version is None
+                        or r.version >= barrier]
+            if eligible:
+                live = eligible
+            self._rr += 1
+            qmin = min(r.queue.qsize() for r in live)
+            cands = [r for r in live if r.queue.qsize() == qmin]
+            return cands[self._rr % len(cands)]
+
+    def retire(self, replica: Replica) -> None:
+        """Fold a dead/drained replica's counters into the group totals
+        (exactly once), so ``stats()`` never double- or under-counts
+        across a respawn."""
+        with self.lock:
+            if replica.retired:
+                return
+            replica.retired = True
+            r = self.retired
+            for k in ("served", "abstained", "expired", "rejected",
+                      "batches"):
+                r[k] += getattr(replica, k)
+            r["shed"] += sum(replica.shed_class.values())
+            r["shed_deadline"] += replica.shed_deadline
+            for k in ("hits", "misses", "invalidations"):
+                r[k] += replica.counters.get(k, 0)
+            for k in _MAX_KEYS:
+                r[k] = max(r[k], getattr(replica, k))
+
+
+class FleetRouter:
+    """Management layer over a fleet of shard worker replicas.
+
+    Drop-in for :class:`~repro.serve.router.ShardRouter` on the serving
+    API (``request`` / ``predict`` / ``predict_batch`` / ``swap`` /
+    ``refit`` / ``stats`` / ``swap_log`` / ``close``), plus the fleet
+    knobs: ``transport`` (``"loopback"`` threads or ``"process"``
+    workers), ``replicas`` (int, or ``{shard: n}`` to replicate hot
+    shards), ``weights`` (ring capacity weighting), request classes and
+    deadline shedding, and an optional autoscaler.
+    """
+
+    supports_classes = True
+
+    def __init__(self, backend, *, n_shards: int = 4, replicas=1,
+                 transport: str = "loopback",
+                 service_factory=EstimatorService, maxsize: int = 4096,
+                 queue_depth: int = 256, admission: str = "block",
+                 batch_max: int = 32, window_s: float = 0.002,
+                 vnodes: int = 32, weights=None, abstain_fallback=None,
+                 class_fracs=None, call_timeout_s: float | None = 60.0,
+                 autoscale: "AutoscalePolicy | bool | None" = None):
+        if admission not in ("block", "reject"):
+            raise ValueError(f"admission must be block|reject, "
+                             f"got {admission!r}")
+        if transport not in TRANSPORTS:
+            raise ValueError(f"transport must be one of "
+                             f"{sorted(TRANSPORTS)}, got {transport!r}")
+        self._backend = backend
+        self.admission = admission
+        self.transport_kind = transport
+        self.queue_depth = queue_depth
+        self.class_fracs = dict(DEFAULT_CLASS_FRACS)
+        self.class_fracs.update(class_fracs or {})
+        self._service_factory = service_factory
+        self._maxsize = maxsize
+        self._abstain_fallback = abstain_fallback
+        self._replica_kw = dict(queue_depth=queue_depth,
+                                batch_max=batch_max, window_s=window_s,
+                                call_timeout_s=call_timeout_s)
+        self._ring = HashRing(n_shards, vnodes, weights=weights)
+        # local keyer: canonical memo keys for routing, never predictions
+        self._keyer = service_factory(backend, 2)
+        self._lock = threading.RLock()         # swap/membership lock
+        self._closed = False
+        self._next_rid = 0
+        self._swap_target = None               # (backend, version) mid-swap
+        version = getattr(backend, "model_version", 0) or 0
+        self._read_barrier = version
+        self.crashes = 0
+        self.respawns = 0
+        self.rerouted = 0
+        self.scale_outs = 0
+        self.scale_ins = 0
+        self.swap_log: list[tuple[float, int]] = [(time.monotonic(),
+                                                   version)]
+        if isinstance(replicas, int):
+            plan = {s: replicas for s in range(n_shards)}
+        else:
+            plan = {s: int(replicas.get(s, 1)) for s in range(n_shards)}
+        self.groups = [ShardGroup(s) for s in range(n_shards)]
+        for s in range(n_shards):
+            for _ in range(max(1, plan[s])):
+                self.groups[s].add(self._spawn(s, backend, version))
+        self.autoscaler = None
+        if autoscale:
+            policy = autoscale if isinstance(autoscale, AutoscalePolicy) \
+                else AutoscalePolicy()
+            self.autoscaler = Autoscaler(self, policy)
+
+    # ----------------------------------------------------------- identity
+    @property
+    def backend(self):
+        return self._backend
+
+    @property
+    def estimator(self):
+        return self._backend
+
+    @property
+    def n_shards(self) -> int:
+        return len(self.groups)
+
+    @property
+    def n_replicas(self) -> int:
+        return sum(len(g.replicas) for g in self.groups)
+
+    def shard_for(self, query) -> int:
+        return self._ring.shard_for(self._keyer._key(query))
+
+    # ---------------------------------------------------------- replicas
+    def _spawn(self, shard: int, backend, version) -> Replica:
+        transport = TRANSPORTS[self.transport_kind](
+            backend, service_factory=self._service_factory,
+            maxsize=self._maxsize,
+            abstain_fallback=self._abstain_fallback)
+        self._next_rid += 1
+        rep = Replica(shard, self._next_rid, transport, version=version,
+                      on_crash=self._handle_crash,
+                      on_exit=self._handle_exit, **self._replica_kw)
+        rep.thread.start()
+        return rep
+
+    def _current_target(self):
+        """Backend/version a fresh replica must carry: the in-flight swap
+        target when a rolling swap is underway, else the live backend —
+        so a crash mid-swap can never respawn a replica older than the
+        barrier the swap is about to publish."""
+        if self._swap_target is not None:
+            return self._swap_target
+        return self._backend, self._read_barrier
+
+    def _handle_crash(self, replica: Replica, orphans: list) -> None:
+        """Runs on the dying replica's dispatcher thread: retire its
+        counters, respawn a fresh replica at the current (or in-flight)
+        model, and re-route every orphaned request inside the group —
+        zero lost requests."""
+        group = self.groups[replica.shard]
+        with self._lock:
+            self.crashes += 1
+            group.retire(replica)
+            group.remove(replica)
+            if not self._closed:
+                backend, version = self._current_target()
+                try:
+                    group.add(self._spawn(replica.shard, backend, version))
+                    self.respawns += 1
+                except Exception:
+                    # respawn itself failed (e.g. worker init): survivors
+                    # absorb the orphans below, or they fail loudly
+                    pass
+            orphans = orphans + replica._drain_rest()
+        for item in orphans:
+            if isinstance(item, _SwapCmd):
+                # the respawn already carries the target model; remaining
+                # replicas get their own cmds from the swap loop
+                item.event.set()
+            elif self._closed:
+                item.error = RouterClosed("fleet closed during crash "
+                                          "recovery")
+                item.event.set()
+            elif not self._try_reroute(group, item):
+                item.error = RouterClosed(
+                    f"shard {group.shard} lost all replicas during crash "
+                    "recovery")
+                item.event.set()
+
+    def _handle_exit(self, replica: Replica, leftovers: list) -> None:
+        """Graceful dispatcher exit (scale-in or close): retire counters
+        and resolve anything that raced into the queue after the stop."""
+        with self._lock:
+            group = self.groups[replica.shard]
+            group.retire(replica)
+            group.remove(replica)
+        for item in leftovers:
+            if isinstance(item, _SwapCmd):
+                item.event.set()
+            elif self._closed or not self._try_reroute(group, item):
+                item.error = RouterClosed("replica drained before serving")
+                item.event.set()
+
+    def _try_reroute(self, group: ShardGroup, req) -> bool:
+        try:
+            self._reroute(group, req)
+            return True
+        except RouterClosed:
+            return False
+
+    def _reroute(self, group: ShardGroup, req) -> None:
+        target = group.pick(None)
+        target.queue.put(req)
+        target.note_qsize()
+        self.rerouted += 1
+
+    # ----------------------------------------------------- failure chaos
+    def inject_crash(self, shard: int, replica: int = 0,
+                     after_batches: int = 0) -> None:
+        """Arm a deterministic worker death on one replica of ``shard``:
+        the worker dies holding the batch it assembled, after serving
+        ``after_batches`` more batches."""
+        with self.groups[shard].lock:
+            rep = self.groups[shard].replicas[replica]
+        rep._crash_after = max(0, int(after_batches))
+
+    # ------------------------------------------------------------ serving
+    def _submit(self, query, deadline_s=None, cls="interactive"):
+        if self._closed:
+            raise RouterClosed("fleet router is closed")
+        if cls not in CLASS_PRIORITY:
+            raise ValueError(f"unknown request class {cls!r}; expected "
+                             f"one of {sorted(CLASS_PRIORITY)}")
+        t_enq = time.monotonic()
+        req = _FleetRequest(query, t_enq,
+                            None if deadline_s is None
+                            else t_enq + deadline_s, cls)
+        group = self.groups[self.shard_for(query)]
+        rep = group.pick(self._read_barrier)
+        qsize = rep.queue.qsize()
+        # ---- early deadline drop: the queue's service-time EMA says this
+        # request would expire before being served — drop it *before* it
+        # consumes a queue slot
+        if deadline_s is not None and rep.ema_s > 0.0 and \
+                qsize * rep.ema_s / max(rep.batch_max, 1) > deadline_s:
+            rep.shed_deadline += 1
+            raise DeadlineExceeded(
+                f"queue wait ≈{qsize * rep.ema_s / rep.batch_max:.4f}s "
+                f"exceeds deadline {deadline_s}s; dropped before enqueue")
+        # ---- per-class admission: each class may only fill its share of
+        # the queue, so background traffic sheds before interactive does
+        limit = max(1, int(self.queue_depth
+                           * self.class_fracs.get(cls, 1.0)))
+        prio = CLASS_PRIORITY[cls]
+        if qsize >= limit and (self.admission == "reject" or prio > 0):
+            rep.shed_class[cls] = rep.shed_class.get(cls, 0) + 1
+            rep.rejected += 1
+            raise ShedRejected(
+                f"shard {rep.shard} replica {rep.rid} queue at {qsize} "
+                f">= class {cls!r} limit {limit}", cls)
+        try:
+            if self.admission == "reject":
+                rep.queue.put_nowait(req)
+            else:
+                rep.queue.put(req)
+        except queue_mod.Full:
+            rep.rejected += 1
+            rep.shed_class[cls] = rep.shed_class.get(cls, 0) + 1
+            raise ShedRejected(
+                f"shard {rep.shard} replica {rep.rid} admission queue "
+                f"full (depth {rep.queue.maxsize})", cls) from None
+        if rep.dead:
+            # raced a crash: rescue anything stranded on the dead queue
+            for straggler in rep._drain_rest():
+                if isinstance(straggler, _SwapCmd):
+                    straggler.event.set()
+                else:
+                    self._reroute(group, straggler)
+        if self._closed and not rep.thread.is_alive():
+            for straggler in rep._drain_rest():
+                straggler.error = RouterClosed("fleet closed")
+                straggler.event.set()
+        rep.note_qsize()
+        return req
+
+    @staticmethod
+    def _await(req, timeout):
+        if not req.event.wait(timeout):
+            raise TimeoutError(f"no answer within {timeout}s")
+        if req.error is not None:
+            raise req.error
+        return req.result
+
+    def request(self, query, timeout: float | None = None,
+                deadline_s: float | None = None,
+                cls: str = "interactive") -> ServeResult:
+        return self._await(self._submit(query, deadline_s, cls), timeout)
+
+    def predict(self, query, timeout: float | None = None,
+                deadline_s: float | None = None, cls: str = "interactive"):
+        return self.request(query, timeout, deadline_s, cls).value
+
+    def predict_batch(self, queries, timeout: float | None = None,
+                      deadline_s: float | None = None,
+                      cls: str = "interactive") -> list:
+        reqs = [self._submit(q, deadline_s, cls) for q in queries]
+        return [self._await(r, timeout).value for r in reqs]
+
+    # ----------------------------------------------------- refit / swap
+    def swap(self, new_backend) -> int:
+        """Write-all rolling swap: push the new model to every replica,
+        one at a time, waiting for each ack while the rest of the group
+        keeps serving (zero downtime).  The read barrier advances only
+        after the last ack, so any request admitted after this returns
+        is routed to — and served by — a replica at the new version."""
+        with self._lock:
+            version = getattr(new_backend, "model_version", 0) or 0
+            self._swap_target = (new_backend, version)
+            try:
+                for group in self.groups:
+                    with group.lock:
+                        members = list(group.replicas)
+                    for rep in members:
+                        if rep.dead or rep.retired:
+                            continue
+                        cmd = _SwapCmd(new_backend, version)
+                        rep.queue.put(cmd)
+                        while not cmd.event.wait(0.05):
+                            if rep.dead or not rep.thread.is_alive():
+                                break           # respawn carries the target
+                self._backend = new_backend
+                self._read_barrier = version
+            finally:
+                self._swap_target = None
+            self.swap_log.append((time.monotonic(), version))
+            return version
+
+    def refit(self, new_records) -> bool:
+        """Snapshot → fold off the request path → rolling swap; True iff
+        a new model was swapped in (same contract as ShardRouter)."""
+        with self._lock:
+            snap = self._backend.snapshot()
+            if not fold_records(snap, new_records):
+                return False
+            self.swap(snap)
+            return True
+
+    # ---------------------------------------------------------- scaling
+    def scale_out(self, shard: int) -> Replica | None:
+        """Add one replica to ``shard`` at the current model (read-any
+        picks it up immediately)."""
+        with self._lock:
+            if self._closed:
+                return None
+            backend, version = self._current_target()
+            rep = self._spawn(shard, backend, version)
+            self.groups[shard].add(rep)
+            self.scale_outs += 1
+            return rep
+
+    def scale_in(self, shard: int) -> Replica | None:
+        """Gracefully remove one replica from ``shard``: it stops taking
+        new requests, drains its queue, then exits (counters retired).
+        Never drops below one replica."""
+        with self._lock:
+            group = self.groups[shard]
+            with group.lock:
+                live = [r for r in group.replicas
+                        if not r.dead and not r.draining]
+                if len(live) <= 1:
+                    return None
+                rep = min(live, key=lambda r: r.queue.qsize())
+                rep.draining = True
+            rep.queue.put(_STOP)
+            self.scale_ins += 1
+            return rep
+
+    # -------------------------------------------------- observability
+    def stats(self) -> dict:
+        """Consistent fleet snapshot under the membership lock: per
+        logical shard (live replicas + retired totals, so counters are
+        monotonic across crash respawns and scale-ins), plus the flat
+        per-replica view the load-balance audit reads."""
+        with self._lock:
+            per_shard, per_replica = [], []
+            for group in self.groups:
+                with group.lock:
+                    reps = list(group.replicas)
+                    agg = dict(group.retired)
+                for rep in reps:
+                    if rep.retired:
+                        continue
+                    row = {"shard": rep.shard, "replica": rep.rid,
+                           "served": rep.served,
+                           "abstained": rep.abstained,
+                           "expired": rep.expired,
+                           "rejected": rep.rejected,
+                           "shed": sum(rep.shed_class.values()),
+                           "shed_deadline": rep.shed_deadline,
+                           "batches": rep.batches,
+                           "max_batch": rep.max_batch,
+                           "queue_high_water": rep.queue_high_water,
+                           "hits": rep.counters.get("hits", 0),
+                           "misses": rep.counters.get("misses", 0),
+                           "invalidations":
+                               rep.counters.get("invalidations", 0),
+                           "version": rep.version,
+                           "alive": rep.thread.is_alive()
+                           and not rep.dead}
+                    per_replica.append(row)
+                    for k in _SUM_KEYS:
+                        agg[k] += row.get(k, 0)
+                    for k in _MAX_KEYS:
+                        agg[k] = max(agg[k], row[k])
+                hm = agg["hits"] + agg["misses"]
+                per_shard.append({
+                    "shard": group.shard, "served": agg["served"],
+                    "abstained": agg["abstained"],
+                    "hits": agg["hits"], "misses": agg["misses"],
+                    "hit_rate": agg["hits"] / hm if hm else 0.0,
+                    "invalidations": agg["invalidations"],
+                    "batches": agg["batches"],
+                    "max_batch": agg["max_batch"],
+                    "queue_high_water": agg["queue_high_water"],
+                    "rejected": agg["rejected"],
+                    "shed": agg["shed"],
+                    "shed_deadline": agg["shed_deadline"],
+                    "expired": agg["expired"],
+                    "replicas": len([r for r in reps if not r.retired])})
+            hits = sum(p["hits"] for p in per_shard)
+            misses = sum(p["misses"] for p in per_shard)
+            served = [p["served"] for p in per_replica] or [0]
+            mean = sum(served) / len(served)
+            return {
+                "n_shards": len(self.groups),
+                "n_replicas": sum(p["replicas"] for p in per_shard),
+                "transport": self.transport_kind,
+                "served": sum(p["served"] for p in per_shard),
+                "abstained": sum(p["abstained"] for p in per_shard),
+                "rejected": sum(p["rejected"] for p in per_shard),
+                "shed": sum(p["shed"] for p in per_shard),
+                "shed_deadline": sum(p["shed_deadline"]
+                                     for p in per_shard),
+                "expired": sum(p["expired"] for p in per_shard),
+                "hits": hits, "misses": misses,
+                "hit_rate": hits / (hits + misses)
+                if hits + misses else 0.0,
+                "invalidations": sum(p["invalidations"]
+                                     for p in per_shard),
+                "model_version": getattr(self._backend, "model_version",
+                                         None),
+                "read_barrier": self._read_barrier,
+                "swaps": len(self.swap_log) - 1,
+                "crashes": self.crashes, "respawns": self.respawns,
+                "rerouted": self.rerouted,
+                "scale_outs": self.scale_outs,
+                "scale_ins": self.scale_ins,
+                "served_skew": (max(served) / mean) if mean else 0.0,
+                "per_shard": per_shard,
+                "per_replica": per_replica,
+            }
+
+    @property
+    def pending(self) -> int:
+        return sum(r.queue.qsize()
+                   for g in self.groups for r in g.replicas)
+
+    # ------------------------------------------------------------ shutdown
+    def close(self, drain: bool = True, timeout: float = 10.0) -> None:
+        if self._closed:
+            return
+        if self.autoscaler is not None:
+            self.autoscaler.stop()
+        self._closed = True
+        with self._lock:
+            reps = [r for g in self.groups for r in list(g.replicas)]
+        for rep in reps:
+            if not drain:
+                for item in rep._drain_rest():
+                    if isinstance(item, _SwapCmd):
+                        item.event.set()
+                    else:
+                        item.error = RouterClosed("fleet closed before "
+                                                  "serving")
+                        item.event.set()
+            rep.queue.put(_STOP)
+        for rep in reps:
+            rep.thread.join(timeout)
+        for rep in reps:                      # stragglers that raced close
+            for item in rep._drain_rest():
+                if isinstance(item, _SwapCmd):
+                    item.event.set()
+                else:
+                    item.error = RouterClosed("fleet closed before "
+                                              "serving")
+                    item.event.set()
+            rep.transport.close()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False
+
+
+# -------------------------------------------------------------- autoscaler
+class AutoscalePolicy:
+    """Hysteresis knobs for the autoscaler.  Pressure is a group's
+    per-tick queue high-water over its depth; a group must stay hot
+    (``pressure >= hi``) for ``up_after`` consecutive ticks to gain a
+    replica and idle (``pressure <= lo`` with empty queues) for
+    ``down_after`` ticks to lose one, with ``cooldown`` ticks of
+    quiescence after any action — so noisy load cannot flap replicas."""
+
+    def __init__(self, *, hi: float = 0.5, lo: float = 0.05,
+                 up_after: int = 2, down_after: int = 4,
+                 cooldown: int = 2, min_replicas: int = 1,
+                 max_replicas: int = 4, max_total: int | None = None):
+        self.hi = hi
+        self.lo = lo
+        self.up_after = up_after
+        self.down_after = down_after
+        self.cooldown = cooldown
+        self.min_replicas = min_replicas
+        self.max_replicas = max_replicas
+        self.max_total = max_total
+
+
+class Autoscaler:
+    """Drive replica counts from the stats the fleet already keeps:
+    sustained queue pressure scales a shard out, sustained idleness
+    scales it back in.  ``tick()`` is the whole policy as a plain call
+    (what deterministic tests drive); ``start()`` runs it on a thread."""
+
+    def __init__(self, fleet: FleetRouter, policy: AutoscalePolicy
+                 | None = None, interval_s: float = 0.05):
+        self.fleet = fleet
+        self.policy = policy or AutoscalePolicy()
+        self.interval_s = interval_s
+        self.ticks = 0
+        self.events: list[tuple] = []          # (tick, "out"|"in", shard)
+        self._hot = {}
+        self._cold = {}
+        self._cooldown = {}
+        self._stop = threading.Event()
+        self._thread = None
+
+    def tick(self) -> list[tuple]:
+        """One observe-decide-act cycle; returns the actions taken."""
+        self.ticks += 1
+        pol = self.policy
+        actions = []
+        for group in self.fleet.groups:
+            s = group.shard
+            with group.lock:
+                reps = [r for r in group.replicas
+                        if not r.dead and not r.draining]
+            if not reps:
+                continue
+            depth = self.fleet.queue_depth
+            pressure = max(r.take_window_hw() / depth for r in reps)
+            busy = any(r.queue.qsize() > 0 for r in reps)
+            if self._cooldown.get(s, 0) > 0:
+                self._cooldown[s] -= 1
+                continue
+            if pressure >= pol.hi:
+                self._hot[s] = self._hot.get(s, 0) + 1
+                self._cold[s] = 0
+            elif pressure <= pol.lo and not busy:
+                self._cold[s] = self._cold.get(s, 0) + 1
+                self._hot[s] = 0
+            else:
+                self._hot[s] = self._cold[s] = 0
+            total = self.fleet.n_replicas
+            if (self._hot.get(s, 0) >= pol.up_after
+                    and len(reps) < pol.max_replicas
+                    and (pol.max_total is None or total < pol.max_total)):
+                if self.fleet.scale_out(s) is not None:
+                    actions.append((self.ticks, "out", s))
+                    self._hot[s] = 0
+                    self._cooldown[s] = pol.cooldown
+            elif (self._cold.get(s, 0) >= pol.down_after
+                    and len(reps) > pol.min_replicas):
+                if self.fleet.scale_in(s) is not None:
+                    actions.append((self.ticks, "in", s))
+                    self._cold[s] = 0
+                    self._cooldown[s] = pol.cooldown
+        self.events.extend(actions)
+        return actions
+
+    def _run(self):
+        while not self._stop.is_set():
+            try:
+                self.tick()
+            except Exception:                  # pragma: no cover - defensive
+                pass
+            self._stop.wait(self.interval_s)
+
+    def start(self) -> "Autoscaler":
+        if self._thread is None or not self._thread.is_alive():
+            self._stop.clear()
+            self._thread = threading.Thread(target=self._run,
+                                            name="fleet-autoscaler",
+                                            daemon=True)
+            self._thread.start()
+        return self
+
+    def stop(self, timeout: float = 5.0) -> None:
+        self._stop.set()
+        if self._thread is not None and self._thread.is_alive():
+            self._thread.join(timeout)

@@ -73,13 +73,25 @@ def _hash64(text: str) -> int:
 class HashRing:
     """Consistent-hash ring with virtual nodes.  Stable across processes
     and runs (keyed on blake2b of the key's ``repr``), which is what the
-    affinity tests and the seeded load generator rely on."""
+    affinity tests and the seeded load generator rely on.  ``weights``
+    (per-shard floats, default all-equal) scale each shard's vnode count,
+    so a beefier shard — e.g. a replicated group in the fleet — can own
+    proportionally more of the key space; unweighted rings keep the
+    exact point set prior code observed."""
 
-    def __init__(self, n_shards: int, vnodes: int = 32):
+    def __init__(self, n_shards: int, vnodes: int = 32, weights=None):
         if n_shards < 1:
             raise ValueError("need at least one shard")
+        if weights is None:
+            counts = [vnodes] * n_shards
+        else:
+            weights = list(weights)
+            if len(weights) != n_shards:
+                raise ValueError(f"{len(weights)} weights for "
+                                 f"{n_shards} shards")
+            counts = [max(1, int(round(vnodes * w))) for w in weights]
         pts = sorted((_hash64(f"shard-{s}-vnode-{v}"), s)
-                     for s in range(n_shards) for v in range(vnodes))
+                     for s in range(n_shards) for v in range(counts[s]))
         self._hashes = [h for h, _ in pts]
         self._owners = [s for _, s in pts]
 
@@ -515,8 +527,18 @@ class ShardRouter:
 
     # -------------------------------------------------------- observability
     def stats(self) -> dict:
-        """Structured router counters; per-shard sections read under each
-        shard lock so hit/miss pairs are mutually consistent."""
+        """Structured router counters; the whole snapshot is taken under
+        the swap lock so a concurrent crash respawn (which retires the
+        dead shard's counters into ``_retired`` and installs a fresh
+        replica) can never be observed half-applied — a retired shard
+        and its respawn are counted exactly once, and ``close()`` racing
+        a ``stats()`` poll sees the same invariant.  Per-shard sections
+        are additionally read under each shard lock so hit/miss pairs
+        are mutually consistent."""
+        with self._swap_lock:
+            return self._stats_locked()
+
+    def _stats_locked(self) -> dict:
         per = []
         for sh in self.shards:
             with sh.lock:

@@ -1,0 +1,318 @@
+"""Wire framing and transports for the serving fleet (DESIGN.md §13).
+
+The fleet splits the serving tier into a *management layer*
+(``serve/fleet.py``'s :class:`FleetRouter`: admission, routing, replica
+groups, autoscaling) and *shard workers* (the compute side: one
+``TunerService`` replica each).  This module is the boundary between
+them:
+
+* **Frames** — every message crosses the boundary as a length-prefixed
+  frame: 1 codec tag byte (``J`` = compact JSON for plain requests and
+  replies, ``P`` = pickle for payloads JSON cannot carry, e.g. a model
+  blob in a swap) + 4-byte big-endian payload length + payload.  One
+  codec for both transports, so the loopback CI path exercises the
+  exact bytes the process path ships.
+* :class:`ShardWorker` — the worker-side request handler: predict
+  batches through the replica's ``submit()``/``flush()`` path with the
+  abstain fallback applied *inside* the worker (memo-bypassing, same as
+  ``serve/router.py``'s in-process shard), plus swap/stats/ping/crash
+  ops.
+* :class:`LoopbackTransport` — the worker in a thread of the caller's
+  process, but every message still round-trips through the frame codec.
+  This is what every existing test and the deterministic CI smoke path
+  run; parity with the process transport is asserted in
+  tests/test_fleet.py.
+* :class:`ProcessTransport` — the worker in a real
+  ``multiprocessing.Process``, frames shipped over a duplex pipe.  A
+  dead worker (crash injection, OOM-kill) surfaces as
+  :class:`TransportDead` on the in-flight call, which is what the
+  fleet's crash-respawn path keys on.
+"""
+from __future__ import annotations
+
+import json
+import multiprocessing as mp
+import os
+import pickle
+import threading
+
+from repro.core.estimator import EstimatorService
+from repro.data.executor import Environment
+from repro.eval.autorun import default_partitioning
+
+__all__ = ["TransportDead", "ShardWorker", "LoopbackTransport",
+           "ProcessTransport", "encode_frame", "decode_frame",
+           "default_abstain_fallback"]
+
+_TAG_JSON = b"J"
+_TAG_PICKLE = b"P"
+
+
+class TransportDead(RuntimeError):
+    """The worker behind this transport is gone (killed, crashed, or
+    closed); the in-flight call — if any — was never answered."""
+
+
+# --------------------------------------------------------------- framing
+def encode_frame(obj) -> bytes:
+    """Serialize one message: codec tag + 4-byte length + payload.
+    JSON (compact separators, deterministic for the CI path) whenever the
+    message is pure data; pickle when it carries objects (model blobs,
+    service factories)."""
+    try:
+        payload = json.dumps(obj, separators=(",", ":")).encode()
+        tag = _TAG_JSON
+    except (TypeError, ValueError):
+        payload = pickle.dumps(obj, protocol=pickle.HIGHEST_PROTOCOL)
+        tag = _TAG_PICKLE
+    return tag + len(payload).to_bytes(4, "big") + payload
+
+
+def decode_frame(frame: bytes):
+    """Inverse of :func:`encode_frame`; validates the declared length so
+    a torn frame fails loudly instead of decoding garbage."""
+    if len(frame) < 5:
+        raise ValueError(f"short frame: {len(frame)} bytes")
+    tag, length = frame[:1], int.from_bytes(frame[1:5], "big")
+    payload = frame[5:]
+    if len(payload) != length:
+        raise ValueError(f"frame length mismatch: declared {length}, "
+                         f"got {len(payload)}")
+    if tag == _TAG_JSON:
+        return json.loads(payload.decode())
+    if tag == _TAG_PICKLE:
+        return pickle.loads(payload)
+    raise ValueError(f"unknown frame tag {tag!r}")
+
+
+def default_abstain_fallback(query, s: int = 2):
+    """The ds-array default square heuristic for estimator-style queries
+    ``(n_rows, n_cols, algo, env)`` — module-level so it pickles into
+    worker processes."""
+    n_rows, n_cols, _algo, env = query
+    env_obj = Environment(n_workers=max(int(env.get("n_workers", 1) or 1), 1))
+    return default_partitioning(int(n_rows), int(n_cols), env_obj, s=s)
+
+
+def _algo_of(query) -> str:
+    return query.algo if hasattr(query, "algo") else query[2]
+
+
+# ----------------------------------------------------------- worker side
+class ShardWorker:
+    """Worker-side handler: one ``TunerService`` replica plus the op
+    dispatch.  Both transports drive exactly this object, so loopback
+    and process modes serve byte-identical answers for the same model.
+    """
+
+    def __init__(self, backend, *, service_factory=EstimatorService,
+                 maxsize: int = 4096, abstain_fallback=None):
+        self.service = service_factory(backend, maxsize)
+        self._fallback = abstain_fallback or (
+            lambda q: default_abstain_fallback(
+                q, s=getattr(backend, "s", 2)))
+        self._crashed = False
+
+    # one op per message; unknown ops answer an error instead of dying
+    def handle(self, msg: dict) -> dict:
+        op = msg.get("op")
+        try:
+            if op == "predict":
+                return self._predict(msg["queries"])
+            if op == "swap":
+                self.service.swap_backend(msg["backend"])
+                return {"ok": True, "version": self._version()}
+            if op == "stats":
+                return {"ok": True, **self._counters()}
+            if op == "ping":
+                return {"ok": True, "pid": os.getpid()}
+            if op == "crash":
+                # chaos: die abruptly, leaving the caller's in-flight
+                # batch unanswered (the hard case the fleet must re-route)
+                self._crashed = True
+                return {"ok": True}
+            if op == "stop":
+                return {"ok": True}
+            return {"ok": False, "error": f"unknown op {op!r}"}
+        except Exception as e:               # keep the worker alive
+            self.service.discard_pending()
+            return {"ok": False, "error": repr(e)}
+
+    def _version(self):
+        return getattr(self.service.backend, "model_version", None)
+
+    def _counters(self) -> dict:
+        svc = self.service
+        return {"hits": svc.hits, "misses": svc.misses,
+                "invalidations": svc.invalidations,
+                "hit_rate": svc.hit_rate, "version": self._version()}
+
+    def _predict(self, queries: list) -> dict:
+        """Serve one batch exactly like the in-process shard: abstained
+        queries answer from the fallback without touching the memo, the
+        rest go through one ``submit()``/``flush()`` pass."""
+        backend = self.service.backend
+        queries = [tuple(q) if isinstance(q, list) else q for q in queries]
+        out: list = [None] * len(queries)
+        pending = []
+        for i, q in enumerate(queries):
+            if backend.abstains(_algo_of(q)):
+                out[i] = [self._fallback(q), "default"]
+            else:
+                pending.append((i, self.service.submit(q)))
+        if pending:
+            try:
+                self.service.flush()
+            except Exception as e:
+                self.service.discard_pending()
+                return {"ok": False, "error": repr(e)}
+            for i, handle in pending:
+                out[i] = [handle.result(), "model"]
+        return {"ok": True, "version": self._version(),
+                "results": out, **self._counters()}
+
+
+def _roundtrip(msg: dict) -> dict:
+    return decode_frame(encode_frame(msg))
+
+
+# -------------------------------------------------------------- loopback
+class LoopbackTransport:
+    """The worker in-process: deterministic, thread-scheduled, no pickled
+    process boundary — but every message still round-trips through the
+    frame codec, so the wire format itself is exercised on every CI run.
+    """
+
+    kind = "loopback"
+
+    def __init__(self, backend, *, service_factory=EstimatorService,
+                 maxsize: int = 4096, abstain_fallback=None):
+        self.worker = ShardWorker(backend, service_factory=service_factory,
+                                  maxsize=maxsize,
+                                  abstain_fallback=abstain_fallback)
+        self._lock = threading.Lock()
+        self._dead = False
+
+    @property
+    def alive(self) -> bool:
+        return not self._dead
+
+    def call(self, msg: dict, timeout: float | None = None) -> dict:
+        with self._lock:
+            if self._dead:
+                raise TransportDead("loopback worker is dead")
+            reply = _roundtrip(self.worker.handle(_roundtrip(msg)))
+            if self.worker._crashed:
+                # mimic a process dying mid-call: the caller never sees
+                # a reply for this message
+                self._dead = True
+                raise TransportDead("loopback worker crashed")
+            return reply
+
+    def kill(self) -> None:
+        self._dead = True
+
+    def close(self) -> None:
+        self._dead = True
+
+
+# --------------------------------------------------------------- process
+def _worker_entry(conn, init_frame: bytes) -> None:
+    """Worker process main: build the :class:`ShardWorker` from the init
+    frame, then serve frames until ``stop``/EOF.  A ``crash`` op exits
+    hard without replying — exactly how an OOM-killed worker looks to
+    the parent."""
+    init = decode_frame(init_frame)
+    worker = ShardWorker(init["backend"],
+                         service_factory=init["service_factory"],
+                         maxsize=init["maxsize"],
+                         abstain_fallback=init["abstain_fallback"])
+    while True:
+        try:
+            frame = conn.recv_bytes()
+        except (EOFError, OSError):
+            return
+        msg = decode_frame(frame)
+        if msg.get("op") == "crash":
+            os._exit(17)                       # no reply: caller sees EOF
+        reply = worker.handle(msg)
+        try:
+            conn.send_bytes(encode_frame(reply))
+        except (BrokenPipeError, OSError):
+            return
+        if msg.get("op") == "stop":
+            conn.close()
+            return
+
+
+class ProcessTransport:
+    """The worker in its own OS process, frames over a duplex
+    ``multiprocessing`` pipe.  One outstanding call at a time (the fleet
+    gives each replica a single dispatcher thread; the internal lock
+    covers stats polls racing a predict).  A worker death surfaces as
+    :class:`TransportDead` on the call that hit it."""
+
+    kind = "process"
+
+    def __init__(self, backend, *, service_factory=EstimatorService,
+                 maxsize: int = 4096, abstain_fallback=None,
+                 mp_context: str | None = None):
+        ctx = mp.get_context(mp_context) if mp_context else mp.get_context()
+        self._conn, child = ctx.Pipe(duplex=True)
+        init = encode_frame({"backend": backend,
+                             "service_factory": service_factory,
+                             "maxsize": maxsize,
+                             "abstain_fallback": abstain_fallback})
+        self.proc = ctx.Process(target=_worker_entry, args=(child, init),
+                                daemon=True, name="serve-fleet-worker")
+        self.proc.start()
+        child.close()
+        self._lock = threading.Lock()
+        self._dead = False
+
+    @property
+    def alive(self) -> bool:
+        return not self._dead and self.proc.is_alive()
+
+    def call(self, msg: dict, timeout: float | None = None) -> dict:
+        with self._lock:
+            if self._dead:
+                raise TransportDead("worker process is dead")
+            try:
+                self._conn.send_bytes(encode_frame(msg))
+                if timeout is not None and not self._conn.poll(timeout):
+                    self._dead = True
+                    raise TransportDead(
+                        f"worker pid {self.proc.pid} silent for {timeout}s")
+                reply = decode_frame(self._conn.recv_bytes())
+            except (EOFError, BrokenPipeError, OSError) as e:
+                self._dead = True
+                raise TransportDead(
+                    f"worker pid {self.proc.pid} died mid-call: "
+                    f"{e!r}") from e
+            return reply
+
+    def kill(self) -> None:
+        """Abrupt death (chaos injection / shutdown of a hung worker)."""
+        self._dead = True
+        if self.proc.is_alive():
+            self.proc.kill()
+        self.proc.join(timeout=5)
+
+    def close(self) -> None:
+        """Graceful stop: ask the worker to exit, then reap it."""
+        if self._dead:
+            self.kill()
+            return
+        try:
+            self.call({"op": "stop"}, timeout=5)
+        except TransportDead:
+            pass
+        self._dead = True
+        self.proc.join(timeout=5)
+        if self.proc.is_alive():
+            self.proc.kill()
+            self.proc.join(timeout=5)
+
+
+TRANSPORTS = {"loopback": LoopbackTransport, "process": ProcessTransport}

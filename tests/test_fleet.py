@@ -1,0 +1,428 @@
+"""Serving fleet (src/repro/serve/fleet.py + transport.py, DESIGN.md
+§13): frame codec, loopback/process transport parity, replica groups,
+crash→respawn with zero lost requests, rolling-swap staleness, admission
+classes, deadline shedding, autoscaler hysteresis, and served-skew under
+hot-shard replication."""
+import threading
+import time
+
+import pytest
+
+from repro.core.estimator import BlockSizeEstimator
+from repro.core.features import dataset_features
+from repro.core.log import ExecutionRecord
+from repro.data.executor import Environment
+from repro.serve import (AutoscalePolicy, Autoscaler, DeadlineExceeded,
+                         FleetRouter, HashRing, ShardRouter, ShedRejected,
+                         TransportDead, make_diurnal_trace, run_load)
+from repro.serve.fleet import CLASS_PRIORITY
+from repro.serve.loadgen import (DIURNAL_PATTERNS, _percentile_ms,
+                                 served_skew)
+from repro.serve.transport import (LoopbackTransport, ProcessTransport,
+                                   decode_frame, encode_frame)
+
+ENV = Environment(name="laptop", n_workers=4, n_nodes=1, mem_limit_mb=2048.0,
+                  dispatch_overhead_s=1e-4, ram_gb=16)
+SHAPES = ((256, 16), (512, 16), (128, 32), (64, 8), (1024, 64))
+
+
+def synth_records(algo, shapes, best_pr, *, best_s=0.1, worse_s=2.0):
+    recs = []
+    for n, m in shapes:
+        for p_r in (1, 2, 4, 8):
+            t = best_s if p_r == best_pr else worse_s + p_r
+            recs.append(ExecutionRecord(dataset_features(n, m), algo,
+                                        ENV.features(), p_r, 1, t, {}))
+    return recs
+
+
+@pytest.fixture
+def fitted_est():
+    recs = (synth_records("kmeans", SHAPES, best_pr=4)
+            + synth_records("gmm", SHAPES, best_pr=2))
+    return BlockSizeEstimator("tree").fit(recs)
+
+
+def q(n, m, algo="kmeans"):
+    return (n, m, algo, ENV.features())
+
+
+def universe(algos=("kmeans", "gmm")):
+    return [q(n, m, a) for a in algos for n, m in SHAPES]
+
+
+class SlowEstimator:
+    """Stub backend with a sleeping batched predict — for queue-pressure
+    tests (shedding, autoscaler)."""
+    is_fit = True
+    s = 2
+
+    def __init__(self, delay=0.05):
+        self.delay = delay
+        self.model_version = 1
+        self.calls = 0
+
+    def abstains(self, algo):
+        return False
+
+    def predict_partitions_batch(self, queries):
+        self.calls += 1
+        time.sleep(self.delay)
+        return [(2, 1)] * len(queries)
+
+
+# ------------------------------------------------------------- frame codec
+def test_frame_codec_json_and_pickle_roundtrip(fitted_est):
+    plain = {"op": "predict", "queries": [[256, 16, "kmeans", {"w": 4}]]}
+    frame = encode_frame(plain)
+    assert frame[:1] == b"J"
+    assert decode_frame(frame) == plain
+    rich = {"op": "swap", "backend": fitted_est}
+    frame = encode_frame(rich)
+    assert frame[:1] == b"P"                  # model blob needs pickle
+    back = decode_frame(frame)
+    assert back["backend"].predict_partitions(*q(256, 16)) == \
+        fitted_est.predict_partitions(*q(256, 16))
+
+
+def test_frame_codec_rejects_torn_frames():
+    frame = encode_frame({"op": "ping"})
+    with pytest.raises(ValueError):
+        decode_frame(frame[:-2])              # truncated payload
+    with pytest.raises(ValueError):
+        decode_frame(b"X")                    # short/unknown
+
+
+def test_percentile_of_empty_is_zero():
+    assert _percentile_ms([], 50) == 0.0
+    assert _percentile_ms([], 99) == 0.0
+
+
+def test_weighted_ring_shifts_capacity():
+    plain = HashRing(4, vnodes=32)
+    heavy = HashRing(4, vnodes=32, weights=[1.0, 3.0, 1.0, 1.0])
+    keys = [("k", i) for i in range(2000)]
+    def share(ring, s):
+        return sum(1 for k in keys if ring.shard_for(k) == s) / len(keys)
+    assert share(heavy, 1) > share(plain, 1) * 1.5
+
+
+# ------------------------------------------------------------ basic serving
+def test_fleet_serves_and_matches_backend(fitted_est):
+    with FleetRouter(fitted_est, n_shards=3, replicas=2,
+                     window_s=0.001) as fleet:
+        for query in universe():
+            r = fleet.request(query, timeout=30)
+            assert r.value == fitted_est.predict_partitions(*query)
+            assert r.shard == fleet.shard_for(query)
+        st = fleet.stats()
+        assert st["served"] == len(universe())
+        assert st["n_replicas"] == 6
+        assert sum(p["served"] for p in st["per_replica"]) == st["served"]
+
+
+def test_fleet_diurnal_trace_deterministic():
+    uni = universe()
+    for pattern in DIURNAL_PATTERNS:
+        t1 = make_diurnal_trace(500, uni, seed=11, pattern=pattern)
+        t2 = make_diurnal_trace(500, uni, seed=11, pattern=pattern)
+        assert t1 == t2
+        assert len(t1) == 500
+        assert all(cls in CLASS_PRIORITY for _, _, cls in t1)
+    assert make_diurnal_trace(500, uni, seed=12) != \
+        make_diurnal_trace(500, uni, seed=11)
+
+
+@pytest.mark.timeout(600)          # real worker processes: spawn overhead
+def test_loopback_process_parity(fitted_est):
+    """The same trace answered over both transports must be identical —
+    the loopback CI path is a faithful stand-in for real processes."""
+    trace = make_diurnal_trace(60, universe(), seed=5, pattern="spike")
+    answers = {}
+    for kind in ("loopback", "process"):
+        with FleetRouter(fitted_est, n_shards=2, replicas=1, transport=kind,
+                         window_s=0.001, call_timeout_s=30.0) as fleet:
+            answers[kind] = [fleet.request(query, timeout=60).value
+                             for (_k, query, _c) in trace]
+    assert answers["loopback"] == answers["process"]
+
+
+# --------------------------------------------------------- crash / respawn
+@pytest.mark.timeout(600)
+def test_process_crash_respawn_zero_lost(fitted_est):
+    """A worker process dying mid-batch loses nothing: orphans re-route
+    inside the replica group, a fresh worker respawns, totals stay
+    consistent."""
+    uni = universe(("kmeans",))
+    trace = make_diurnal_trace(240, uni, seed=0, pattern="diurnal")
+    with FleetRouter(fitted_est, n_shards=2, replicas=2,
+                     transport="process", window_s=0.001,
+                     call_timeout_s=30.0) as fleet:
+        fleet.inject_crash(fleet.shard_for(trace[0][1]), after_batches=1)
+        rep = run_load(fleet, trace, n_clients=4, timeout=60)
+        st = fleet.stats()
+        assert rep["errors"] == 0, rep["first_error"]
+        assert rep["served"] == rep["requests"]
+        assert st["crashes"] == 1 and st["respawns"] == 1
+        assert st["rerouted"] >= 1
+        assert st["served"] == rep["requests"]   # retired counters folded
+
+
+def test_loopback_crash_respawn_zero_lost(fitted_est):
+    trace = make_diurnal_trace(240, universe(("kmeans",)), seed=2)
+    with FleetRouter(fitted_est, n_shards=2, replicas=1,
+                     window_s=0.001) as fleet:
+        fleet.inject_crash(fleet.shard_for(trace[0][1]), after_batches=1)
+        rep = run_load(fleet, trace, n_clients=4, timeout=60)
+        assert rep["errors"] == 0, rep["first_error"]
+        assert rep["served"] == rep["requests"]
+        assert fleet.stats()["crashes"] == 1
+
+
+@pytest.mark.timeout(600)
+def test_transport_dead_surfaces_on_kill(fitted_est):
+    tp = ProcessTransport(fitted_est)
+    assert tp.call({"op": "ping"}, timeout=30)["ok"]
+    tp.kill()
+    with pytest.raises(TransportDead):
+        tp.call({"op": "ping"}, timeout=5)
+    lb = LoopbackTransport(fitted_est)
+    lb.kill()
+    with pytest.raises(TransportDead):
+        lb.call({"op": "ping"})
+
+
+# ------------------------------------------------------------ rolling swap
+def test_rolling_swap_under_load_no_staleness(fitted_est):
+    """Swap mid-trace while 4 clients hammer the fleet: zero staleness
+    violations (the read barrier only advances after every replica
+    acked) and requests admitted after swap() returns see the new
+    version."""
+    recs = (synth_records("kmeans", SHAPES, best_pr=4)
+            + synth_records("gmm", SHAPES, best_pr=2)
+            + synth_records("pca", SHAPES, best_pr=8, best_s=0.01))
+    est2 = BlockSizeEstimator("tree").fit(recs)
+    trace = make_diurnal_trace(400, universe(), seed=7, pattern="ramp")
+    with FleetRouter(fitted_est, n_shards=3, replicas=2,
+                     window_s=0.001) as fleet:
+        swapped = threading.Event()
+
+        def swapper():
+            time.sleep(0.02)
+            fleet.swap(est2)
+            swapped.set()
+
+        th = threading.Thread(target=swapper, daemon=True)
+        th.start()
+        rep = run_load(fleet, trace, n_clients=4, timeout=60)
+        th.join(30)
+        assert swapped.is_set()
+        assert rep["errors"] == 0, rep["first_error"]
+        assert rep["staleness_violations"] == 0
+        st = fleet.stats()
+        assert st["read_barrier"] == est2.model_version
+        r = fleet.request(q(256, 16, "pca"), timeout=30)
+        assert r.model_version == est2.model_version
+        assert r.chosen_by == "model"
+
+
+@pytest.mark.timeout(600)
+def test_swap_during_process_crash_respawns_at_target(fitted_est):
+    """A replica crashing while a rolling swap is in flight respawns at
+    the swap target — never at the stale model."""
+    recs = synth_records("kmeans", SHAPES, best_pr=2, best_s=0.01)
+    est2 = BlockSizeEstimator("tree").fit(recs)
+    trace = make_diurnal_trace(200, universe(("kmeans",)), seed=9)
+    with FleetRouter(fitted_est, n_shards=2, replicas=2,
+                     transport="process", window_s=0.001,
+                     call_timeout_s=30.0) as fleet:
+        fleet.inject_crash(fleet.shard_for(trace[0][1]), after_batches=0)
+        th = threading.Thread(
+            target=lambda: (time.sleep(0.01), fleet.swap(est2)),
+            daemon=True)
+        th.start()
+        rep = run_load(fleet, trace, n_clients=4, timeout=60)
+        th.join(30)
+        assert rep["errors"] == 0, rep["first_error"]
+        assert rep["staleness_violations"] == 0
+        for row in fleet.stats()["per_replica"]:
+            if row["alive"]:
+                assert row["version"] == est2.model_version
+
+
+# ------------------------------------------------- admission & shedding
+def test_class_shedding_priority_order():
+    """Background classes shed before interactive: with the queue held
+    at depth, best_effort (50% share) sheds while interactive still
+    blocks its way in."""
+    slow = SlowEstimator(delay=0.2)
+    with FleetRouter(slow, n_shards=1, replicas=1, queue_depth=8,
+                     admission="block", batch_max=1,
+                     window_s=0.0) as fleet:
+        reqs = [fleet._submit(q(256 + i, 16), None, "interactive")
+                for i in range(6)]          # fill past the 50% share
+        with pytest.raises(ShedRejected) as ei:
+            fleet._submit(q(999, 16), None, "best_effort")
+        assert ei.value.cls == "best_effort"
+        with pytest.raises(ShedRejected):
+            fleet._submit(q(998, 16), None, "batch")
+        # interactive may use the whole queue: still admitted
+        reqs.append(fleet._submit(q(997, 16), None, "interactive"))
+        for r in reqs:
+            assert r.event.wait(30)
+        st = fleet.stats()
+        assert st["shed"] == 2
+        assert st["per_replica"][0]["shed"] == 2
+
+
+def test_early_deadline_drop_before_enqueue():
+    """Once the service-time EMA says the queue wait exceeds the
+    deadline, the request is dropped *before* consuming a queue slot."""
+    slow = SlowEstimator(delay=0.1)
+    with FleetRouter(slow, n_shards=1, replicas=1, queue_depth=64,
+                     admission="block", batch_max=1,
+                     window_s=0.0) as fleet:
+        fleet.request(q(256, 16), timeout=30)      # establish the EMA
+        rep = fleet.groups[0].replicas[0]
+        assert rep.ema_s > 0.0
+        backlog = [fleet._submit(q(300 + i, 16), None, "interactive")
+                   for i in range(8)]
+        with pytest.raises(DeadlineExceeded):
+            fleet.request(q(888, 16), timeout=5, deadline_s=0.01)
+        assert fleet.stats()["shed_deadline"] == 1
+        for r in backlog:
+            assert r.event.wait(30)
+
+
+def test_unknown_class_rejected(fitted_est):
+    with FleetRouter(fitted_est, n_shards=1) as fleet:
+        with pytest.raises(ValueError):
+            fleet.request(q(256, 16), cls="bulk")
+
+
+# ------------------------------------------------------------- autoscaler
+def test_autoscaler_scale_out_and_in_hysteresis():
+    """Driven tick-by-tick: sustained pressure adds a replica only after
+    ``up_after`` hot ticks (+cooldown), sustained idleness removes it
+    only after ``down_after`` cold ticks — a single noisy tick never
+    flaps."""
+    slow = SlowEstimator(delay=0.05)
+    pol = AutoscalePolicy(hi=0.5, lo=0.05, up_after=2, down_after=2,
+                          cooldown=0, min_replicas=1, max_replicas=3)
+    with FleetRouter(slow, n_shards=1, replicas=1, queue_depth=8,
+                     admission="block", batch_max=1,
+                     window_s=0.0) as fleet:
+        scaler = Autoscaler(fleet, pol)
+        rep = fleet.groups[0].replicas[0]
+        # synthetic pressure: pretend the queue hit high water this window
+        rep.window_hw = 8
+        assert scaler.tick() == []             # 1 hot tick: not yet
+        rep.window_hw = 8
+        assert scaler.tick() == [(2, "out", 0)]
+        assert fleet.n_replicas == 2
+        assert fleet.stats()["scale_outs"] == 1
+        # idle ticks (queues empty, window untouched) scale back in
+        assert scaler.tick() == []
+        actions = scaler.tick()
+        assert actions == [(4, "in", 0)]
+        deadline = time.monotonic() + 30
+        while fleet.n_replicas > 1 and time.monotonic() < deadline:
+            time.sleep(0.01)
+        assert fleet.n_replicas == 1           # drained, never below min
+        assert fleet.stats()["scale_ins"] == 1
+
+
+def test_autoscaler_respects_max_total():
+    slow = SlowEstimator(delay=0.01)
+    pol = AutoscalePolicy(hi=0.5, up_after=1, cooldown=0,
+                          max_replicas=4, max_total=2)
+    with FleetRouter(slow, n_shards=2, replicas=1, queue_depth=4,
+                     batch_max=1, window_s=0.0) as fleet:
+        scaler = Autoscaler(fleet, pol)
+        for g in fleet.groups:
+            g.replicas[0].window_hw = 4
+        assert scaler.tick() == []             # already at max_total
+        assert fleet.n_replicas == 2
+
+
+# ------------------------------------------------- replication & skew
+def test_replication_fixes_served_skew(fitted_est):
+    """Hot-key traffic concentrates on one shard; replicating that shard
+    spreads its load across replicas, pulling max/mean served across
+    units down toward even."""
+    uni = universe(("kmeans",))
+    trace = make_diurnal_trace(600, uni, seed=3, pattern="diurnal")
+    counts = {}
+    with ShardRouter(fitted_est, n_shards=4, window_s=0.001) as router:
+        for (_k, query, _c) in trace:
+            s = router.shard_for(query)
+            counts[s] = counts.get(s, 0) + 1
+        base = run_load(router, [(k, query) for k, query, _ in trace],
+                        n_clients=4, timeout=60)
+    # replicate proportionally to the measured per-shard demand
+    mean = sum(counts.values()) / 4
+    plan = {s: max(1, round(counts.get(s, 0) / mean)) for s in range(4)}
+    with FleetRouter(fitted_est, n_shards=4, replicas=plan,
+                     window_s=0.001) as fleet:
+        rep = run_load(fleet, trace, n_clients=4, timeout=60)
+    assert rep["errors"] == 0, rep["first_error"]
+    assert rep["served_skew"] < base["served_skew"]
+    assert rep["served_skew"] <= 1.6
+
+
+def test_stats_consistent_during_crash_respawn(fitted_est):
+    """stats() snapshots under the membership lock: totals are monotonic
+    and never double-count a retired replica against its respawn."""
+    trace = make_diurnal_trace(300, universe(("kmeans",)), seed=4)
+    with FleetRouter(fitted_est, n_shards=2, replicas=2,
+                     window_s=0.001) as fleet:
+        fleet.inject_crash(fleet.shard_for(trace[0][1]), after_batches=1)
+        stop = threading.Event()
+        seen = []
+        bad = []
+
+        def poller():
+            while not stop.is_set():
+                st = fleet.stats()
+                if seen and st["served"] < seen[-1]:
+                    bad.append((seen[-1], st["served"]))
+                seen.append(st["served"])
+
+        th = threading.Thread(target=poller, daemon=True)
+        th.start()
+        rep = run_load(fleet, trace, n_clients=4, timeout=60)
+        stop.set()
+        th.join(10)
+        assert not bad, f"served went backwards: {bad[:3]}"
+        assert rep["served"] == rep["requests"]
+        assert fleet.stats()["served"] == rep["requests"]
+
+
+def test_served_skew_helper_counts_new_units():
+    before = {"per_replica": [{"shard": 0, "replica": 1, "served": 10}]}
+    after = {"per_replica": [{"shard": 0, "replica": 1, "served": 30},
+                             {"shard": 0, "replica": 2, "served": 20}]}
+    skew, deltas = served_skew(before, after)
+    assert deltas == {(0, 1): 20, (0, 2): 20}
+    assert skew == 1.0
+
+
+# ------------------------------------------------------------- lifecycle
+def test_close_resolves_everything_queued():
+    slow = SlowEstimator(delay=0.05)
+    fleet = FleetRouter(slow, n_shards=1, replicas=1, queue_depth=64,
+                        batch_max=1, window_s=0.0)
+    reqs = [fleet._submit(q(256 + i, 16), None, "interactive")
+            for i in range(10)]
+    fleet.close(drain=True)
+    for r in reqs:
+        assert r.event.wait(30)
+        assert r.result is not None or r.error is not None
+    st = fleet.stats()
+    assert st["served"] + st["expired"] + st["rejected"] >= 0
+
+
+def test_scale_in_never_drops_last_replica(fitted_est):
+    with FleetRouter(fitted_est, n_shards=1, replicas=1) as fleet:
+        assert fleet.scale_in(0) is None
+        assert fleet.n_replicas == 1
