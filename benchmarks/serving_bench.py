@@ -29,7 +29,13 @@ Three sections:
    with a worker crash injected on the hottest shard *and* a rolling
    model swap mid-trace — zero lost requests, zero staleness, served
    skew ≤ 1.5.  ``--full`` scales this to 5·10⁵ requests over real
-   worker processes.
+   worker processes.  The **socket fleet** section (gated) reruns the
+   same scenario over the TCP socket transport, where the "crash" is a
+   dropped connection racing the rolling swap.  The **migration**
+   section (gated) serves a shifted-hotspot trace: the replica plan is
+   provisioned for the first half, the hot set jumps at half-time, and
+   the autoscaler's global-budget rebalance must move replicas so the
+   final window's served skew lands back ≤ 1.5.
 3. **Process-fleet speedup** (``--full`` only): a memo-defeating
    compute-heavy trace served by the single-process router vs the
    multi-process fleet; on multi-core hosts the fleet must clear 2x.
@@ -58,8 +64,10 @@ from repro.core.gridsearch import grid_search
 from repro.data.datasets import gaussian_blobs
 from repro.data.executor import Environment
 from repro.data.logstore import LogStore
-from repro.serve import (FleetRouter, RefitDaemon, ShardRouter, demand_plan,
-                         make_diurnal_trace, make_trace, run_load)
+from repro.serve import (AutoscalePolicy, Autoscaler, FleetRouter,
+                         RefitDaemon, ShardRouter, demand_plan,
+                         make_diurnal_trace, make_trace, proportional_plan,
+                         run_load, trace_histogram)
 
 from benchmarks.common import csv_row
 
@@ -208,7 +216,7 @@ def _refit_scenario(store, *, rounds, requests_per_round, n_clients,
 
 # -------------------------------------------------- 2. diurnal fleet load
 def _diurnal_fleet(store, *, requests, n_clients, n_shards, seed,
-                   transport):
+                   transport, sweep_shape=(96, 24, 31)):
     """Fleet-scale diurnal trace with a worker crash on the hottest shard
     AND a rolling model swap mid-trace: zero lost requests, zero
     staleness, skew held down by demand-proportional replication."""
@@ -221,7 +229,7 @@ def _diurnal_fleet(store, *, requests, n_clients, n_shards, seed,
     # the swap target: an incremental refit on one more swept algorithm,
     # so its model_version genuinely advances past the serving model's
     cursor = len(store)
-    _sweep(store, "csvm", 96, 24, seed=31)
+    _sweep(store, "csvm", *sweep_shape)
     new_records = [r for r, _src in store.follow(cursor)[0]]
     est_v2 = est.snapshot()
     assert est_v2.refit(new_records), "swap target did not retrain"
@@ -278,6 +286,91 @@ def _diurnal_fleet(store, *, requests, n_clients, n_shards, seed,
         "p50_ms": rep["p50_ms"],
         "p99_ms": rep["p99_ms"],
         "wall_s": rep["wall_s"],
+    }
+
+
+# ------------------------------------- 2b. replica migration under shift
+def _migration_fleet(store, *, requests, n_clients, n_shards, seed):
+    """Shifted-hotspot trace against the global-budget rebalancer: the
+    replica plan is provisioned for the *first half* of the trace, then
+    the hot set jumps at half-time and the autoscaler's ``rebalance()``
+    must *move* replicas (drain cold shard → attach hot shard) so the
+    final window's served skew comes back under the 1.5 gate with the
+    total replica budget conserved."""
+    est = BlockSizeEstimator("tree").fit(store.load())
+    # hot_size=2: the hot mass rides two keys, so the half-time jump
+    # cleanly relocates it to a different shard (wider hot sets straddle
+    # shards and dilute the shift); budget 12 over 4 shards gives the
+    # apportionment enough granularity to track an ~80% hot shard
+    trace = make_diurnal_trace(requests, _universe(("kmeans", "gmm")),
+                               seed=seed, pattern="shifted_hotspot",
+                               hot_size=2)
+    half = len(trace) // 2
+    budget = n_shards + 8
+    plan = proportional_plan(
+        trace_histogram(est, trace[:half], n_shards), budget)
+
+    fleet = FleetRouter(est, n_shards=n_shards, replicas=plan,
+                        transport="loopback", queue_depth=256,
+                        admission="block", window_s=0.001)
+    pol = AutoscalePolicy(budget=budget, moves_per_rebalance=budget,
+                          rebalance_min_window=64, min_replicas=1,
+                          max_replicas=budget)
+    scaler = Autoscaler(fleet, pol)
+
+    def settle(deadline_s=30.0):
+        # migrations are transiently budget+1 while the donor drains
+        t_end = time.time() + deadline_s
+        while fleet.n_replicas > budget and time.time() < t_end:
+            time.sleep(0.02)
+
+    try:
+        rep_first = run_load(fleet, trace[:half], n_clients=n_clients,
+                             timeout=300)
+        scaler.rebalance()        # provisioned-for window: a no-op move set
+        settle()
+        rest = trace[half:]
+        detect, measure = rest[:len(rest) // 4], rest[len(rest) // 4:]
+        # the hot set has just jumped; this window's histogram is the
+        # evidence the rebalancer moves on
+        rep_shift = run_load(fleet, detect, n_clients=n_clients,
+                             timeout=300)
+        scaler.rebalance()
+        settle()
+        rep_final = run_load(fleet, measure, n_clients=n_clients,
+                             timeout=300)
+        stats = fleet.stats()
+    finally:
+        fleet.close()
+
+    reports = [rep_shift, rep_final]
+    for r in (rep_first, *reports):
+        assert r["errors"] == 0, f"serving errors: {r['first_error']}"
+        assert r["served"] == r["requests"], (r["served"], r["requests"])
+    assert stats["migrations"] >= 1, \
+        f"rebalancer never moved a replica: {stats}"
+    assert stats["n_replicas"] == budget, \
+        f"budget not conserved: {stats['n_replicas']} != {budget}"
+    assert rep_final["served_skew"] <= 1.5, \
+        (f"served skew {rep_final['served_skew']:.2f} > 1.5 after "
+         f"{stats['migrations']} migrations")
+    assert rep_final["served_skew"] < rep_shift["served_skew"], \
+        (f"migration did not reduce skew: {rep_shift['served_skew']:.2f} "
+         f"-> {rep_final['served_skew']:.2f}")
+
+    return {
+        "requests": requests,
+        "served": rep_first["served"] + sum(r["served"] for r in reports),
+        "errors": sum(r["errors"] for r in (rep_first, *reports)),
+        "budget": budget,
+        "n_replicas_final": stats["n_replicas"],
+        "migrations": stats["migrations"],
+        "replica_plan": {str(s): n for s, n in sorted(plan.items())},
+        "skew_provisioned": rep_first["served_skew"],
+        "skew_after_shift": rep_shift["served_skew"],
+        "skew_final": rep_final["served_skew"],
+        "throughput_rps": rep_final["throughput_rps"],
+        "wall_s": rep_first["wall_s"] + sum(r["wall_s"] for r in reports),
     }
 
 
@@ -371,6 +464,34 @@ def run(verbose=True, *, rounds=2, requests_per_round=240, n_clients=4,
                 f"skew={diurnal['served_skew']:.2f};"
                 f"lost={diurnal['lost']};crashes={diurnal['crashes']};"
                 f"stale={diurnal['staleness_violations']}")
+
+        # socket fleet: same crash-racing-a-rolling-swap scenario, but
+        # the frames cross real TCP connections and the "crash" is a
+        # dropped connection (indistinguishable from a dead host)
+        socket_requests = diurnal_requests if full else diurnal_requests // 5
+        sock = _diurnal_fleet(
+            store, requests=socket_requests,
+            n_clients=diurnal_clients, n_shards=n_shards, seed=seed + 1,
+            transport="socket", sweep_shape=(160, 24, 32))
+        results["fleet_socket"] = sock
+        csv_row("serving/fleet_socket",
+                1.0 / max(sock["throughput_rps"], 1e-9) * 1e6,
+                f"n={sock['requests']};"
+                f"rps={sock['throughput_rps']:.0f};"
+                f"skew={sock['served_skew']:.2f};"
+                f"lost={sock['lost']};crashes={sock['crashes']};"
+                f"stale={sock['staleness_violations']}")
+
+        migration = _migration_fleet(
+            store, requests=socket_requests, n_clients=diurnal_clients,
+            n_shards=n_shards, seed=seed + 3)
+        results["fleet_migration"] = migration
+        csv_row("serving/fleet_migration",
+                1.0 / max(migration["throughput_rps"], 1e-9) * 1e6,
+                f"n={migration['requests']};"
+                f"moves={migration['migrations']};"
+                f"skew={migration['skew_after_shift']:.2f}"
+                f"->{migration['skew_final']:.2f}")
 
         if full:
             speedup = _fleet_speedup(store, requests=60_000,

@@ -15,12 +15,18 @@ first, so the command works on a fresh checkout.  An empty/unfitted
 store still serves: every query abstains to the default square
 heuristic until records arrive and the daemon's first refit lands.
 
-Fleet mode (any of ``--processes`` / ``--replicas`` / ``--autoscale``)
-swaps the in-process ShardRouter for the multi-process
+Fleet mode (any of ``--processes`` / ``--transport`` / ``--replicas`` /
+``--autoscale``) swaps the in-process ShardRouter for the multi-process
 :class:`~repro.serve.fleet.FleetRouter`: ``--processes`` runs each
 shard replica as a real worker process, ``--replicas`` replicates
 shards (``2`` everywhere, or ``0:2,3:4`` / ``1:3`` per shard), and
 ``--autoscale`` turns on the queue-pressure autoscaler.
+
+Multi-node: ``--transport socket --workers hostA:7071,hostB:7071``
+attaches replicas to standalone workers started with ``python -m
+repro.launch.serve_worker --listen ...`` (see docs/serving.md); with
+``--transport socket`` and no ``--workers`` the workers are spawned
+locally over real TCP sockets.
 """
 from __future__ import annotations
 
@@ -111,6 +117,15 @@ def main(argv=None):
     ap.add_argument("--processes", action="store_true",
                     help="fleet mode: run each shard replica as a real "
                          "worker process (default: in-process threads)")
+    ap.add_argument("--transport", default=None,
+                    choices=("loopback", "process", "socket"),
+                    help="fleet mode: worker transport (overrides "
+                         "--processes; 'socket' talks length-prefixed "
+                         "frames over TCP)")
+    ap.add_argument("--workers", default=None, metavar="H:P,H:P,...",
+                    help="fleet mode with --transport socket: attach to "
+                         "these pre-started serve_worker addresses "
+                         "instead of spawning local workers")
     ap.add_argument("--replicas", default=None,
                     help="fleet mode: replicas per shard — '2' everywhere "
                          "or '0:2,3:4' per shard (default 1)")
@@ -159,12 +174,18 @@ def main(argv=None):
     n0, m0, _a, env0 = universe[0]
     cold = [(n0, m0, cold_algo, env0)] if cold_algo else []
 
-    fleet_mode = args.processes or args.autoscale or args.replicas is not None
+    if args.workers is not None and args.transport != "socket":
+        ap.error("--workers requires --transport socket")
+    fleet_mode = (args.processes or args.autoscale
+                  or args.replicas is not None or args.transport is not None)
     if fleet_mode:
+        transport = args.transport or ("process" if args.processes
+                                       else "loopback")
+        worker_addrs = (args.workers.split(",") if args.workers else None)
         router = FleetRouter(
             est, n_shards=args.shards,
             replicas=parse_replicas(args.replicas or "1"),
-            transport="process" if args.processes else "loopback",
+            transport=transport, worker_addrs=worker_addrs,
             queue_depth=args.queue_depth, admission=args.admission,
             batch_max=args.batch_max, window_s=args.window_ms / 1e3,
             autoscale=args.autoscale)

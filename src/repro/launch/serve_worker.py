@@ -1,0 +1,64 @@
+"""Standalone socket shard worker for the serving fleet (DESIGN.md §14).
+
+    python -m repro.launch.serve_worker --listen 0.0.0.0:7071
+
+Run one of these per core on every serving host, then point a
+:class:`~repro.serve.fleet.FleetRouter` at them::
+
+    FleetRouter(est, transport="socket",
+                worker_addrs=["hostA:7071", "hostA:7072", "hostB:7071"])
+
+or from the CLI::
+
+    python -m repro.launch.serve_estimator --demo --transport socket \\
+        --workers hostA:7071,hostB:7071
+
+The worker is *inert* until a fleet attaches: it holds no model of its
+own — the first frame on every connection is an ``init`` op shipping the
+backend, so the management layer always decides what gets served.  When
+the connection drops (fleet detached, crashed, or the network
+partitioned) the worker returns to ``accept``, so a recovering fleet can
+reattach and keep the same capacity; ``--once`` serves a single
+attachment and exits (the mode locally spawned workers use).  A ``stop``
+op from the peer shuts the worker down.
+
+Port ``0`` binds an ephemeral port; the bound address is printed on
+stdout either way (``serve_worker listening on H:P``), which is what
+scripts parse.
+"""
+from __future__ import annotations
+
+import argparse
+import socket
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(
+        description="socket shard worker: listen for a serving fleet to "
+                    "attach, serve predict/swap/stats frames until told "
+                    "to stop")
+    ap.add_argument("--listen", required=True, metavar="HOST:PORT",
+                    help="bind address; port 0 picks an ephemeral port "
+                         "(the bound address is printed)")
+    ap.add_argument("--once", action="store_true",
+                    help="serve one fleet attachment then exit instead "
+                         "of re-accepting (what locally spawned workers "
+                         "do)")
+    args = ap.parse_args(argv)
+
+    from repro.serve.transport import serve_socket_worker
+
+    host, _, port = args.listen.rpartition(":")
+    srv = socket.create_server((host or "127.0.0.1", int(port)))
+    bound = "%s:%d" % srv.getsockname()[:2]
+    print(f"serve_worker listening on {bound}", flush=True)
+    try:
+        serve_socket_worker(srv, once=args.once)
+    except KeyboardInterrupt:
+        pass
+    print("serve_worker exiting", flush=True)
+    return bound
+
+
+if __name__ == "__main__":
+    main()

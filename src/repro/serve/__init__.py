@@ -17,11 +17,20 @@ Fleet (multi-process workers, replicated hot shards, autoscaling)::
                      transport="process", autoscale=True) as fleet:
         fleet.request(query, deadline_s=0.05, cls="interactive")
 
+Multi-node (workers on other hosts run ``python -m
+repro.launch.serve_worker --listen host:port``; see docs/serving.md)::
+
+    with FleetRouter(est, n_shards=4, transport="socket",
+                     worker_addrs=["hostA:7071", "hostB:7071"]) as fleet:
+        fleet.request(query, deadline_s=0.05, cls="interactive")
+
 ``python -m repro.launch.serve_estimator`` fronts the whole tier from a
 persistent LogStore; ``benchmarks/serving_bench.py`` load-tests it.
 """
 from repro.serve.fleet import (AutoscalePolicy, Autoscaler, FleetRouter,
-                               ShedRejected, demand_plan)
+                               ShedRejected, demand_plan,
+                               live_demand_plan, proportional_plan,
+                               trace_histogram)
 from repro.serve.loadgen import (make_diurnal_trace, make_trace,
                                  make_universe, run_load, served_skew,
                                  staleness_violations)
@@ -30,12 +39,16 @@ from repro.serve.router import (DeadlineExceeded, HashRing, RouterClosed,
                                 RouterRejected, ServeResult, Shard,
                                 ShardRouter)
 from repro.serve.transport import (LoopbackTransport, ProcessTransport,
-                                   ShardWorker, TransportDead)
+                                   ShardWorker, SocketTransport,
+                                   TransportDead, serve_socket_worker)
 
 __all__ = ["AutoscalePolicy", "Autoscaler", "DeadlineExceeded",
            "FleetRouter", "HashRing", "LoopbackTransport",
            "ProcessTransport", "RefitDaemon", "RouterClosed",
            "RouterRejected", "ServeResult", "Shard", "ShardRouter",
-           "ShardWorker", "ShedRejected", "TransportDead", "demand_plan",
+           "ShardWorker", "ShedRejected", "SocketTransport",
+           "TransportDead", "demand_plan", "live_demand_plan",
            "make_diurnal_trace", "make_trace", "make_universe",
-           "run_load", "served_skew", "staleness_violations"]
+           "proportional_plan", "run_load", "served_skew",
+           "serve_socket_worker", "staleness_violations",
+           "trace_histogram"]

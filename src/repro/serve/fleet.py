@@ -1,9 +1,21 @@
-"""Multi-process serving fleet: management layer over shard worker
-replicas (DESIGN.md §13).
+"""Multi-process / multi-node serving fleet: management layer over shard
+worker replicas (DESIGN.md §13–§14).
+
+**Contract (read-your-writes across refit swaps).**  Any request
+admitted after ``swap(model_v2)`` returns is served by a replica that
+acknowledged v2 — never by an older model.  The barrier holds across
+every failure mode this module knows: rolling swaps (the read barrier
+only advances after the last replica acks), worker crashes racing a
+swap (the respawn carries the in-flight swap target, never the stale
+model), dropped socket connections (treated exactly as crashes), and
+replica migration (a moved replica attaches at the current target).
+The load generator audits it (``staleness_violations``) and CI gates it
+at exactly zero.
 
 ``serve/router.py``'s ShardRouter proved the serving contracts —
 consistent-hash affinity, zero-staleness refit swaps, crash respawn —
-inside one process.  This module scales the same contracts out:
+inside one process.  This module scales the same contracts out, across
+processes and across hosts:
 
 * :class:`FleetRouter` — the management layer.  It owns admission
   (per-class priorities + early deadline drop *before* enqueue), the
@@ -25,7 +37,18 @@ inside one process.  This module scales the same contracts out:
   refit swaps, the same staleness contract the loadgen audits.
 * :class:`Autoscaler` — scale-out on sustained queue pressure,
   scale-in on sustained idle, with hysteresis (consecutive-tick
-  streaks + cooldown) so a noisy load can't flap replicas.
+  streaks + cooldown) so a noisy load can't flap replicas.  With a
+  **global replica budget** it also *rebalances*: every
+  ``rebalance_every`` ticks it re-plans from the live served histogram
+  (:func:`live_demand_plan` — the online replacement for the static
+  trace walk) and **migrates** replicas from cold shards to hot ones
+  (drain → detach → attach elsewhere) instead of only growing groups.
+* **Cross-host transport** — ``transport="socket"`` runs each replica
+  behind a TCP connection: spawned locally on ephemeral ports, or
+  attached to ``repro.launch.serve_worker`` processes on other nodes
+  via ``worker_addrs``.  A dropped connection is a worker loss; crash
+  recovery reattaches to the same address (the remote worker re-enters
+  accept) or spawns a local replacement.
 * **Overload shedding** — beyond block/reject: request classes
   (``interactive`` > ``batch`` > ``best_effort``) admit against
   per-class queue fractions, so background traffic sheds first, and a
@@ -45,7 +68,20 @@ from repro.serve.router import (DeadlineExceeded, HashRing, RouterClosed,
 from repro.serve.transport import TRANSPORTS, TransportDead
 
 __all__ = ["AutoscalePolicy", "Autoscaler", "FleetRouter", "Replica",
-           "ShardGroup", "ShedRejected", "CLASS_PRIORITY", "demand_plan"]
+           "ShardGroup", "ShedRejected", "CLASS_PRIORITY", "demand_plan",
+           "trace_histogram", "proportional_plan", "live_demand_plan"]
+
+
+def trace_histogram(backend, trace, n_shards: int, *, vnodes: int = 32,
+                    service_factory=EstimatorService) -> list[int]:
+    """Per-shard request counts of ``trace`` walked through the same
+    ring/keyer the fleet will use — the offline demand histogram."""
+    ring = HashRing(n_shards, vnodes)
+    keyer = service_factory(backend, 2)
+    counts = [0] * n_shards
+    for entry in trace:
+        counts[ring.shard_for(keyer._key(entry[1]))] += 1
+    return counts
 
 
 def demand_plan(backend, trace, n_shards: int, *, target_units: int = 8,
@@ -56,15 +92,48 @@ def demand_plan(backend, trace, n_shards: int, *, target_units: int = 8,
     ``target_units`` replicas proportional to its traffic (minimum one).
     This is the capacity-planning step that fixes hot-shard served skew:
     consistent hashing pins hot keys to one shard, so the only lever is
-    replicating that shard's serving capacity."""
-    ring = HashRing(n_shards, vnodes)
-    keyer = service_factory(backend, 2)
-    counts = [0] * n_shards
-    for entry in trace:
-        counts[ring.shard_for(keyer._key(entry[1]))] += 1
+    replicating that shard's serving capacity.  (Static/offline variant;
+    :func:`live_demand_plan` re-plans from the live served histogram.)"""
+    counts = trace_histogram(backend, trace, n_shards, vnodes=vnodes,
+                             service_factory=service_factory)
     total = sum(counts) or 1
     return {s: max(1, round(c / total * target_units))
             for s, c in enumerate(counts)}
+
+
+def proportional_plan(counts, budget: int) -> dict:
+    """Largest-remainder apportionment of exactly ``budget`` replicas
+    over shards, proportional to ``counts`` with a floor of one replica
+    each — the exact-sum planner the global-budget rebalancer needs
+    (``demand_plan``'s rounding may over- or under-shoot its target)."""
+    n = len(counts)
+    budget = max(int(budget), n)
+    total = float(sum(counts)) or 1.0
+    free = budget - n                       # replicas beyond the floor
+    quotas = [c / total * free for c in counts]
+    plan = [1 + int(q) for q in quotas]
+    leftover = budget - sum(plan)
+    by_remainder = sorted(range(n),
+                          key=lambda s: (-(quotas[s] - int(quotas[s])), s))
+    for s in by_remainder[:leftover]:
+        plan[s] += 1
+    return {s: plan[s] for s in range(n)}
+
+
+def live_demand_plan(stats: dict, budget: int, *,
+                     prior: dict | None = None) -> dict:
+    """Online demand plan from the fleet's own serving histogram: the
+    per-shard ``served`` counters out of :meth:`FleetRouter.stats`
+    (minus ``prior``, an earlier snapshot, to plan on a recent window
+    instead of all-time traffic), apportioned over ``budget`` replicas.
+    This replaces the static trace walk once the fleet is live — traffic
+    is whatever actually arrived, not what a trace predicted."""
+    def hist(st):
+        return {p["shard"]: p["served"] for p in st.get("per_shard", [])}
+    now = hist(stats)
+    base = hist(prior) if prior else {}
+    counts = [max(now[s] - base.get(s, 0), 0) for s in sorted(now)]
+    return proportional_plan(counts, budget)
 
 _STOP = object()
 
@@ -367,8 +436,11 @@ class ShardGroup:
             if eligible:
                 live = eligible
             self._rr += 1
-            qmin = min(r.queue.qsize() for r in live)
-            cands = [r for r in live if r.queue.qsize() == qmin]
+            # snapshot sizes once: dispatchers drain queues without this
+            # lock, so a second qsize() pass could match no replica
+            sizes = [(r.queue.qsize(), r) for r in live]
+            qmin = min(s for s, _ in sizes)
+            cands = [r for s, r in sizes if s == qmin]
             return cands[self._rr % len(cands)]
 
     def retire(self, replica: Replica) -> None:
@@ -397,10 +469,13 @@ class FleetRouter:
     Drop-in for :class:`~repro.serve.router.ShardRouter` on the serving
     API (``request`` / ``predict`` / ``predict_batch`` / ``swap`` /
     ``refit`` / ``stats`` / ``swap_log`` / ``close``), plus the fleet
-    knobs: ``transport`` (``"loopback"`` threads or ``"process"``
-    workers), ``replicas`` (int, or ``{shard: n}`` to replicate hot
-    shards), ``weights`` (ring capacity weighting), request classes and
-    deadline shedding, and an optional autoscaler.
+    knobs: ``transport`` (``"loopback"`` threads, ``"process"``
+    workers, or ``"socket"`` TCP workers — local or cross-host),
+    ``worker_addrs`` (socket mode: ``"host:port"`` workers to attach to
+    before spawning locally), ``replicas`` (int, or ``{shard: n}`` to
+    replicate hot shards), ``weights`` (ring capacity weighting),
+    request classes and deadline shedding, and an optional autoscaler
+    (with global-budget rebalancing, see :class:`AutoscalePolicy`).
     """
 
     supports_classes = True
@@ -412,14 +487,19 @@ class FleetRouter:
                  batch_max: int = 32, window_s: float = 0.002,
                  vnodes: int = 32, weights=None, abstain_fallback=None,
                  class_fracs=None, call_timeout_s: float | None = 60.0,
-                 autoscale: "AutoscalePolicy | bool | None" = None):
+                 autoscale: "AutoscalePolicy | bool | None" = None,
+                 worker_addrs=None, transport_kw=None):
         if admission not in ("block", "reject"):
             raise ValueError(f"admission must be block|reject, "
                              f"got {admission!r}")
         if transport not in TRANSPORTS:
             raise ValueError(f"transport must be one of "
                              f"{sorted(TRANSPORTS)}, got {transport!r}")
+        if worker_addrs and transport != "socket":
+            raise ValueError("worker_addrs requires transport='socket'")
         self._backend = backend
+        self._addr_pool = list(worker_addrs or [])
+        self._transport_kw = dict(transport_kw or {})
         self.admission = admission
         self.transport_kind = transport
         self.queue_depth = queue_depth
@@ -445,6 +525,7 @@ class FleetRouter:
         self.rerouted = 0
         self.scale_outs = 0
         self.scale_ins = 0
+        self.migrations = 0
         self.swap_log: list[tuple[float, int]] = [(time.monotonic(),
                                                    version)]
         if isinstance(replicas, int):
@@ -482,15 +563,23 @@ class FleetRouter:
         return self._ring.shard_for(self._keyer._key(query))
 
     # ---------------------------------------------------------- replicas
-    def _spawn(self, shard: int, backend, version) -> Replica:
+    def _spawn(self, shard: int, backend, version,
+               addr: str | None = None) -> Replica:
+        kw = dict(self._transport_kw)
+        if self.transport_kind == "socket":
+            if addr is None and self._addr_pool:
+                addr = self._addr_pool.pop(0)
+            if addr is not None:
+                kw["address"] = addr
         transport = TRANSPORTS[self.transport_kind](
             backend, service_factory=self._service_factory,
             maxsize=self._maxsize,
-            abstain_fallback=self._abstain_fallback)
+            abstain_fallback=self._abstain_fallback, **kw)
         self._next_rid += 1
         rep = Replica(shard, self._next_rid, transport, version=version,
                       on_crash=self._handle_crash,
                       on_exit=self._handle_exit, **self._replica_kw)
+        rep.addr = addr                     # reattach target on respawn
         rep.thread.start()
         return rep
 
@@ -507,7 +596,11 @@ class FleetRouter:
         """Runs on the dying replica's dispatcher thread: retire its
         counters, respawn a fresh replica at the current (or in-flight)
         model, and re-route every orphaned request inside the group —
-        zero lost requests."""
+        zero lost requests.  An attached socket replica respawns against
+        the *same* address first (the remote worker re-enters accept
+        after a dropped connection, so reattach restores its capacity);
+        if the remote host is truly gone the respawn falls back to a
+        locally spawned worker."""
         group = self.groups[replica.shard]
         with self._lock:
             self.crashes += 1
@@ -515,13 +608,22 @@ class FleetRouter:
             group.remove(replica)
             if not self._closed:
                 backend, version = self._current_target()
+                addr = getattr(replica, "addr", None)
                 try:
-                    group.add(self._spawn(replica.shard, backend, version))
+                    group.add(self._spawn(replica.shard, backend, version,
+                                          addr=addr))
                     self.respawns += 1
                 except Exception:
-                    # respawn itself failed (e.g. worker init): survivors
-                    # absorb the orphans below, or they fail loudly
-                    pass
+                    try:
+                        if addr is not None:   # reattach failed: go local
+                            group.add(self._spawn(replica.shard, backend,
+                                                  version))
+                            self.respawns += 1
+                    except Exception:
+                        # respawn itself failed (e.g. worker init):
+                        # survivors absorb the orphans below, or they
+                        # fail loudly
+                        pass
             orphans = orphans + replica._drain_rest()
         for item in orphans:
             if isinstance(item, _SwapCmd):
@@ -540,11 +642,17 @@ class FleetRouter:
 
     def _handle_exit(self, replica: Replica, leftovers: list) -> None:
         """Graceful dispatcher exit (scale-in or close): retire counters
-        and resolve anything that raced into the queue after the stop."""
+        and resolve anything that raced into the queue after the stop.
+        A drained *attached* replica's worker address returns to the
+        pool — the remote worker re-enters accept, so the next scale-out
+        (e.g. a migration's attach side) can reuse that capacity."""
         with self._lock:
             group = self.groups[replica.shard]
             group.retire(replica)
             group.remove(replica)
+            addr = getattr(replica, "addr", None)
+            if addr is not None and not self._closed:
+                self._addr_pool.append(addr)
         for item in leftovers:
             if isinstance(item, _SwapCmd):
                 item.event.set()
@@ -726,6 +834,29 @@ class FleetRouter:
             self.scale_ins += 1
             return rep
 
+    def migrate(self, from_shard: int, to_shard: int):
+        """Move one unit of serving capacity between shards under a
+        fixed global budget: drain a replica out of ``from_shard``
+        (graceful scale-in — it finishes its queue, then detaches) and
+        attach a fresh one to ``to_shard``.  The attach side spawns at
+        :meth:`_current_target`, so a migration racing a rolling swap
+        can never seat a replica behind the version barrier.  Total
+        replica count is conserved (momentarily +1 while the drained
+        replica empties its queue).  Returns ``(drained, added)`` or
+        ``None`` when nothing moved (same shard, donor at its one-replica
+        floor, or the fleet is closing)."""
+        with self._lock:
+            if self._closed or from_shard == to_shard:
+                return None
+            drained = self.scale_in(from_shard)
+            if drained is None:
+                return None
+            added = self.scale_out(to_shard)
+            if added is None:
+                return None
+            self.migrations += 1
+            return drained, added
+
     # -------------------------------------------------- observability
     def stats(self) -> dict:
         """Consistent fleet snapshot under the membership lock: per
@@ -806,6 +937,7 @@ class FleetRouter:
                 "rerouted": self.rerouted,
                 "scale_outs": self.scale_outs,
                 "scale_ins": self.scale_ins,
+                "migrations": self.migrations,
                 "served_skew": (max(served) / mean) if mean else 0.0,
                 "per_shard": per_shard,
                 "per_replica": per_replica,
@@ -862,12 +994,26 @@ class AutoscalePolicy:
     (``pressure >= hi``) for ``up_after`` consecutive ticks to gain a
     replica and idle (``pressure <= lo`` with empty queues) for
     ``down_after`` ticks to lose one, with ``cooldown`` ticks of
-    quiescence after any action — so noisy load cannot flap replicas."""
+    quiescence after any action — so noisy load cannot flap replicas.
+
+    The rebalancing knobs turn on global-budget migration: every
+    ``rebalance_every`` ticks the autoscaler re-plans replica counts
+    from the *live* served histogram (:func:`live_demand_plan` over the
+    window since the last re-plan, ignored below
+    ``rebalance_min_window`` requests) and moves up to
+    ``moves_per_rebalance`` replicas from over-provisioned shards to
+    under-provisioned ones — so when the hot spot shifts, capacity
+    follows it instead of only growing.  ``budget`` is the global
+    replica count the plan apportions (default: the fleet's current
+    total, i.e. pure rebalancing, no growth)."""
 
     def __init__(self, *, hi: float = 0.5, lo: float = 0.05,
                  up_after: int = 2, down_after: int = 4,
                  cooldown: int = 2, min_replicas: int = 1,
-                 max_replicas: int = 4, max_total: int | None = None):
+                 max_replicas: int = 4, max_total: int | None = None,
+                 budget: int | None = None, rebalance_every: int = 0,
+                 moves_per_rebalance: int = 1,
+                 rebalance_min_window: int = 32):
         self.hi = hi
         self.lo = lo
         self.up_after = up_after
@@ -876,6 +1022,10 @@ class AutoscalePolicy:
         self.min_replicas = min_replicas
         self.max_replicas = max_replicas
         self.max_total = max_total
+        self.budget = budget
+        self.rebalance_every = rebalance_every
+        self.moves_per_rebalance = moves_per_rebalance
+        self.rebalance_min_window = rebalance_min_window
 
 
 class Autoscaler:
@@ -890,10 +1040,11 @@ class Autoscaler:
         self.policy = policy or AutoscalePolicy()
         self.interval_s = interval_s
         self.ticks = 0
-        self.events: list[tuple] = []          # (tick, "out"|"in", shard)
+        self.events: list[tuple] = []   # (tick, "out"|"in"|"move", ...)
         self._hot = {}
         self._cold = {}
         self._cooldown = {}
+        self._last_hist: dict[int, int] = {}
         self._stop = threading.Event()
         self._thread = None
 
@@ -937,7 +1088,52 @@ class Autoscaler:
                     actions.append((self.ticks, "in", s))
                     self._cold[s] = 0
                     self._cooldown[s] = pol.cooldown
+        if pol.rebalance_every and self.ticks % pol.rebalance_every == 0:
+            actions.extend(self.rebalance())
         self.events.extend(actions)
+        return actions
+
+    def rebalance(self) -> list[tuple]:
+        """Move replicas from over- to under-provisioned shards.
+
+        Re-plans replica counts from the served histogram accumulated
+        since the previous rebalance (:func:`live_demand_plan`) against
+        the global ``policy.budget`` (default: the fleet's current
+        total, i.e. capacity is conserved), then performs up to
+        ``policy.moves_per_rebalance`` :meth:`FleetRouter.migrate`
+        calls, always from the shard with the largest surplus to the
+        shard with the largest deficit.  Windows smaller than
+        ``policy.rebalance_min_window`` requests are skipped — no
+        evidence, no moves."""
+        pol = self.policy
+        stats = self.fleet.stats()
+        hist = {p["shard"]: p["served"] for p in stats["per_shard"]}
+        window = sum(hist.values()) - sum(self._last_hist.values())
+        if window < pol.rebalance_min_window:
+            return []
+        budget = pol.budget if pol.budget is not None else self.fleet.n_replicas
+        plan = live_demand_plan(
+            stats, budget,
+            prior={"per_shard": [{"shard": s, "served": c}
+                                 for s, c in self._last_hist.items()]})
+        self._last_hist = hist
+        have = {p["shard"]: p["replicas"] for p in stats["per_shard"]}
+        actions = []
+        for _ in range(max(pol.moves_per_rebalance, 0)):
+            surplus = {s: have[s] - plan.get(s, 1) for s in have}
+            donors = [s for s, d in surplus.items()
+                      if d > 0 and have[s] > pol.min_replicas]
+            takers = [s for s, d in surplus.items()
+                      if d < 0 and have[s] < pol.max_replicas]
+            if not donors or not takers:
+                break
+            donor = max(donors, key=lambda s: (surplus[s], -s))
+            taker = min(takers, key=lambda s: (surplus[s], s))
+            if self.fleet.migrate(donor, taker) is None:
+                break
+            have[donor] -= 1
+            have[taker] += 1
+            actions.append((self.ticks, "move", donor, taker))
         return actions
 
     def _run(self):

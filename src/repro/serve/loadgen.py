@@ -14,8 +14,11 @@ realistic mix of query kinds:
 ``make_diurnal_trace`` scales that to fleet-sized workloads: the trace
 is split into phases whose mix evolves like a day of traffic —
 ``diurnal`` (sinusoidal hot share), ``ramp``, ``spike``, ``cold_storm``
-(a cold-start stampede at trace start), and ``hot_migration`` (the hot
-key set moves between shards mid-trace).  Every entry carries a request
+(a cold-start stampede at trace start), ``hot_migration`` (the hot
+key set moves between shards mid-trace), and ``shifted_hotspot`` (a
+heavily skewed hot set that jumps once at half-time — the workload that
+exercises the autoscaler's cross-shard replica *migration* rather than
+in-place growth).  Every entry carries a request
 class (``interactive``/``batch``/``best_effort``) for the fleet's
 admission control; same seed → byte-identical trace at any size
 (10⁵–10⁶ requests is the intended range).
@@ -46,7 +49,7 @@ CLASSES = ("interactive", "batch", "best_effort")
 DEFAULT_CLASS_WEIGHTS = (0.6, 0.3, 0.1)
 
 DIURNAL_PATTERNS = ("diurnal", "ramp", "spike", "cold_storm",
-                    "hot_migration")
+                    "hot_migration", "shifted_hotspot")
 
 
 def make_universe(shapes, algos, envs) -> list:
@@ -118,6 +121,12 @@ def _phase_plan(pattern: str, n_phases: int, has_cold: bool) -> list[dict]:
             cold = 0.7 if p == 0 else 0.05      # cold-start stampede
         elif pattern == "hot_migration":
             hot, offset = 0.6, p                # hot set moves each phase
+        elif pattern == "shifted_hotspot":
+            # heavily skewed, then the hot set jumps once at half-time:
+            # the workload that makes replica *migration* (not growth)
+            # the right autoscaler move.
+            hot = 0.75
+            offset = 0 if frac < 0.5 else max(n_phases, 2)
         else:
             raise ValueError(f"unknown pattern {pattern!r}; expected one "
                              f"of {DIURNAL_PATTERNS}")

@@ -27,6 +27,19 @@ them:
   dead worker (crash injection, OOM-kill) surfaces as
   :class:`TransportDead` on the in-flight call, which is what the
   fleet's crash-respawn path keys on.
+* :class:`SocketTransport` — the worker behind a TCP connection, the
+  same frames length-prefix-streamed over the socket.  With no
+  ``address`` it spawns a local worker process on an ephemeral
+  loopback port (a drop-in for ProcessTransport); with
+  ``address="host:port"`` it *attaches* to a worker someone else
+  started — ``python -m repro.launch.serve_worker --listen host:port``
+  on another node.  The first frame on every connection is an ``init``
+  op carrying the model, so the management layer always decides what
+  an attached worker serves.  Connect failures, read timeouts, torn
+  frames, and peer resets all surface as :class:`TransportDead` —
+  to the fleet a dropped connection *is* a worker loss, and its crash
+  recovery (retire → respawn/reattach → re-route orphans) applies
+  unchanged.
 """
 from __future__ import annotations
 
@@ -34,6 +47,7 @@ import json
 import multiprocessing as mp
 import os
 import pickle
+import socket
 import threading
 
 from repro.core.estimator import EstimatorService
@@ -41,8 +55,9 @@ from repro.data.executor import Environment
 from repro.eval.autorun import default_partitioning
 
 __all__ = ["TransportDead", "ShardWorker", "LoopbackTransport",
-           "ProcessTransport", "encode_frame", "decode_frame",
-           "default_abstain_fallback"]
+           "ProcessTransport", "SocketTransport", "encode_frame",
+           "decode_frame", "read_frame", "write_frame",
+           "serve_socket_worker", "default_abstain_fallback"]
 
 _TAG_JSON = b"J"
 _TAG_PICKLE = b"P"
@@ -83,6 +98,32 @@ def decode_frame(frame: bytes):
     if tag == _TAG_PICKLE:
         return pickle.loads(payload)
     raise ValueError(f"unknown frame tag {tag!r}")
+
+
+def _recv_exact(sock: socket.socket, n: int) -> bytes:
+    """Read exactly ``n`` bytes from a stream socket; EOFError on a peer
+    that closed mid-frame (the torn-frame failure mode)."""
+    buf = bytearray()
+    while len(buf) < n:
+        chunk = sock.recv(n - len(buf))
+        if not chunk:
+            raise EOFError(f"peer closed mid-frame ({len(buf)}/{n} bytes)")
+        buf += chunk
+    return bytes(buf)
+
+
+def write_frame(sock: socket.socket, obj) -> None:
+    """Stream one encoded frame over a socket."""
+    sock.sendall(encode_frame(obj))
+
+
+def read_frame(sock: socket.socket):
+    """Read one frame off a stream socket: 5-byte header (tag + declared
+    length), then exactly that many payload bytes, decoded through the
+    same :func:`decode_frame` the pipe transport uses."""
+    head = _recv_exact(sock, 5)
+    length = int.from_bytes(head[1:5], "big")
+    return decode_frame(head + _recv_exact(sock, length))
 
 
 def default_abstain_fallback(query, s: int = 2):
@@ -315,4 +356,221 @@ class ProcessTransport:
             self.proc.join(timeout=5)
 
 
-TRANSPORTS = {"loopback": LoopbackTransport, "process": ProcessTransport}
+# ---------------------------------------------------------------- socket
+def _serve_socket_conn(conn: socket.socket) -> bool:
+    """Serve one attached fleet connection until it drops; True iff the
+    peer asked the whole worker process to stop.
+
+    The connection protocol: the first frame must be an ``init`` op
+    carrying the backend (the management layer ships the model, so an
+    attached worker always serves exactly what the fleet decided); every
+    later frame is a normal :class:`ShardWorker` op.  A ``crash`` op
+    drops the connection without replying — to the caller it is
+    indistinguishable from the worker host dying mid-call."""
+    worker = None
+    with conn:
+        conn.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        while True:
+            try:
+                msg = read_frame(conn)
+            except (EOFError, OSError, ValueError):
+                return False              # peer detached: back to accept
+            op = msg.get("op")
+            if op == "init":
+                worker = ShardWorker(
+                    msg["backend"],
+                    service_factory=msg.get("service_factory")
+                    or EstimatorService,
+                    maxsize=msg.get("maxsize", 4096),
+                    abstain_fallback=msg.get("abstain_fallback"))
+                reply = {"ok": True, "pid": os.getpid()}
+            elif op == "crash":
+                return False              # no reply: caller sees EOF
+            elif worker is None:
+                reply = {"ok": op == "stop",
+                         "error": "no init frame yet"}
+            else:
+                reply = worker.handle(msg)
+            try:
+                write_frame(conn, reply)
+            except OSError:
+                return False
+            if op == "stop":
+                return True
+
+
+def serve_socket_worker(srv: socket.socket, *, once: bool = False) -> None:
+    """Accept loop of a socket shard worker: serve one fleet attachment
+    at a time; when the connection drops (fleet detached, crash op, or a
+    network partition) go back to ``accept`` so a respawning fleet can
+    *reattach* — unless ``once``, the mode locally spawned workers use
+    so a crashed worker's process actually exits.  A ``stop`` op ends
+    the loop (and the hosting process)."""
+    with srv:
+        while True:
+            try:
+                conn, _addr = srv.accept()
+            except OSError:
+                return
+            stopped = _serve_socket_conn(conn)
+            if once or stopped:
+                return
+
+
+def _socket_worker_entry(pipe, host: str, port: int) -> None:
+    """Local-spawn worker main: bind an ephemeral port, report it back
+    through ``pipe``, then serve exactly one attachment (the parent)."""
+    srv = socket.create_server((host, port))
+    pipe.send(srv.getsockname()[:2])
+    pipe.close()
+    serve_socket_worker(srv, once=True)
+
+
+class SocketTransport:
+    """The worker across a TCP connection — the fleet's cross-host
+    transport.  Without ``address`` a local worker process is spawned on
+    an ephemeral loopback port (process-transport semantics, socket
+    wire); with ``address`` the transport attaches to a running
+    ``repro.launch.serve_worker`` anywhere, ships the model in the init
+    frame, and serves through it.  Every failure on the wire — connect
+    refused/timeout, read timeout, torn frame, peer reset — marks the
+    transport dead and raises :class:`TransportDead`, so the fleet's
+    crash-recovery path treats a dropped connection exactly like a
+    worker loss."""
+
+    kind = "socket"
+
+    def __init__(self, backend, *, service_factory=EstimatorService,
+                 maxsize: int = 4096, abstain_fallback=None,
+                 address: str | None = None,
+                 connect_timeout_s: float = 10.0,
+                 mp_context: str | None = None):
+        self.proc = None
+        self.attached = address is not None
+        self._lock = threading.Lock()
+        self._dead = False
+        self._sock = None
+        if address is None:
+            ctx = mp.get_context(mp_context) if mp_context \
+                else mp.get_context()
+            parent, child = ctx.Pipe()
+            self.proc = ctx.Process(target=_socket_worker_entry,
+                                    args=(child, "127.0.0.1", 0),
+                                    daemon=True,
+                                    name="serve-fleet-socket-worker")
+            self.proc.start()
+            child.close()
+            try:
+                if not parent.poll(connect_timeout_s):
+                    raise TransportDead(
+                        f"spawned socket worker never reported its port "
+                        f"within {connect_timeout_s}s")
+                host, port = parent.recv()
+                address = f"{host}:{port}"
+            except (EOFError, OSError) as e:
+                self._dead = True
+                self._reap()
+                raise TransportDead(
+                    f"socket worker died during bootstrap: {e!r}") from e
+            except TransportDead:
+                self._dead = True
+                self._reap()
+                raise
+            finally:
+                parent.close()
+        self.address = address
+        host, _, port = address.rpartition(":")
+        try:
+            self._sock = socket.create_connection(
+                (host or "127.0.0.1", int(port)),
+                timeout=connect_timeout_s)
+        except OSError as e:
+            self._dead = True
+            self._reap()
+            raise TransportDead(
+                f"connect to worker at {address} failed ({e!r}) — is "
+                f"`python -m repro.launch.serve_worker --listen "
+                f"{address}` running?") from e
+        self._sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        # handshake: the management layer decides the model this worker
+        # serves, whether it was spawned here or attached across hosts
+        reply = self.call({"op": "init", "backend": backend,
+                           "service_factory": service_factory,
+                           "maxsize": maxsize,
+                           "abstain_fallback": abstain_fallback},
+                          timeout=connect_timeout_s)
+        if not reply.get("ok"):
+            self.kill()
+            raise TransportDead(
+                f"worker at {address} rejected init: {reply}")
+        self.worker_pid = reply.get("pid")
+
+    @property
+    def alive(self) -> bool:
+        return not self._dead and (self.proc is None
+                                   or self.proc.is_alive())
+
+    def call(self, msg: dict, timeout: float | None = None) -> dict:
+        with self._lock:
+            if self._dead:
+                raise TransportDead(
+                    f"socket worker at {self.address} is gone")
+            try:
+                self._sock.settimeout(timeout)
+                write_frame(self._sock, msg)
+                return read_frame(self._sock)
+            except TimeoutError as e:          # socket.timeout alias
+                self._mark_dead()
+                raise TransportDead(
+                    f"worker at {self.address} silent for "
+                    f"{timeout}s") from e
+            except (EOFError, OSError, ValueError) as e:
+                # EOF/reset: the peer dropped mid-call; ValueError: a
+                # torn or garbled frame — the stream is desynced and the
+                # connection unusable either way
+                self._mark_dead()
+                raise TransportDead(
+                    f"connection to worker at {self.address} dropped "
+                    f"mid-call: {e!r}") from e
+
+    def _mark_dead(self) -> None:
+        self._dead = True
+        if self._sock is not None:
+            try:
+                self._sock.close()
+            except OSError:
+                pass
+
+    def _reap(self) -> None:
+        if self.proc is None:
+            return
+        if self.proc.is_alive():
+            self.proc.kill()
+        self.proc.join(timeout=5)
+
+    def kill(self) -> None:
+        """Abrupt death: drop the connection (an attached remote worker
+        survives and re-enters accept — reattachable), kill a locally
+        spawned worker process outright."""
+        self._mark_dead()
+        self._reap()
+
+    def close(self) -> None:
+        """Graceful stop.  A locally spawned worker is asked to exit and
+        reaped; an attached worker is only *detached* — the remote
+        process goes back to accepting, because the operator who started
+        it owns its lifetime."""
+        if self._dead:
+            self.kill()
+            return
+        if self.proc is not None:
+            try:
+                self.call({"op": "stop"}, timeout=5)
+            except TransportDead:
+                pass
+        self._mark_dead()
+        self._reap()
+
+
+TRANSPORTS = {"loopback": LoopbackTransport, "process": ProcessTransport,
+              "socket": SocketTransport}

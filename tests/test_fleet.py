@@ -3,6 +3,7 @@
 crash→respawn with zero lost requests, rolling-swap staleness, admission
 classes, deadline shedding, autoscaler hysteresis, and served-skew under
 hot-shard replication."""
+import socket as socketlib
 import threading
 import time
 
@@ -14,12 +15,15 @@ from repro.core.log import ExecutionRecord
 from repro.data.executor import Environment
 from repro.serve import (AutoscalePolicy, Autoscaler, DeadlineExceeded,
                          FleetRouter, HashRing, ShardRouter, ShedRejected,
-                         TransportDead, make_diurnal_trace, run_load)
+                         SocketTransport, TransportDead, live_demand_plan,
+                         make_diurnal_trace, proportional_plan, run_load,
+                         serve_socket_worker)
 from repro.serve.fleet import CLASS_PRIORITY
 from repro.serve.loadgen import (DIURNAL_PATTERNS, _percentile_ms,
                                  served_skew)
 from repro.serve.transport import (LoopbackTransport, ProcessTransport,
-                                   decode_frame, encode_frame)
+                                   decode_frame, encode_frame, read_frame,
+                                   write_frame)
 
 ENV = Environment(name="laptop", n_workers=4, n_nodes=1, mem_limit_mb=2048.0,
                   dispatch_overhead_s=1e-4, ram_gb=16)
@@ -426,3 +430,287 @@ def test_scale_in_never_drops_last_replica(fitted_est):
     with FleetRouter(fitted_est, n_shards=1, replicas=1) as fleet:
         assert fleet.scale_in(0) is None
         assert fleet.n_replicas == 1
+
+
+# --------------------------------------------------------- socket transport
+def _attached_worker():
+    """A serve_socket_worker on an ephemeral port in a daemon thread —
+    the in-test stand-in for `python -m repro.launch.serve_worker`."""
+    srv = socketlib.create_server(("127.0.0.1", 0))
+    addr = "%s:%d" % srv.getsockname()[:2]
+    th = threading.Thread(target=serve_socket_worker, args=(srv,),
+                          daemon=True)
+    th.start()
+    return srv, addr
+
+
+@pytest.mark.timeout(600)
+def test_socket_transport_local_spawn_roundtrip(fitted_est):
+    tp = SocketTransport(fitted_est)
+    try:
+        assert tp.alive and tp.worker_pid
+        r = tp.call({"op": "predict",
+                     "queries": [list(q(256, 16))]}, timeout=30)
+        assert r["ok"]
+        assert tuple(r["results"][0][0]) == \
+            fitted_est.predict_partitions(*q(256, 16))
+    finally:
+        tp.close()
+    assert not tp.alive
+
+
+@pytest.mark.timeout(600)
+def test_loopback_socket_parity(fitted_est):
+    """Mirror of the loopback/process parity test: answers over real TCP
+    sockets must be byte-identical to the in-process path."""
+    trace = make_diurnal_trace(60, universe(), seed=5, pattern="spike")
+    answers = {}
+    for kind in ("loopback", "socket"):
+        with FleetRouter(fitted_est, n_shards=2, replicas=1, transport=kind,
+                         window_s=0.001, call_timeout_s=30.0) as fleet:
+            answers[kind] = [fleet.request(query, timeout=60).value
+                             for (_k, query, _c) in trace]
+    assert answers["loopback"] == answers["socket"]
+
+
+def test_socket_connect_refused_is_transport_dead(fitted_est):
+    srv = socketlib.create_server(("127.0.0.1", 0))
+    addr = "%s:%d" % srv.getsockname()[:2]
+    srv.close()                              # nobody listening anymore
+    with pytest.raises(TransportDead, match="serve_worker"):
+        SocketTransport(fitted_est, address=addr, connect_timeout_s=2.0)
+
+
+def test_socket_torn_frame_marks_transport_dead(fitted_est):
+    """A peer that dies mid-frame (header promises more bytes than ever
+    arrive) poisons the stream: the call raises TransportDead and the
+    transport stays dead."""
+    srv = socketlib.create_server(("127.0.0.1", 0))
+    addr = "%s:%d" % srv.getsockname()[:2]
+
+    def misbehave():
+        conn, _ = srv.accept()
+        with conn:
+            read_frame(conn)                 # the init frame
+            write_frame(conn, {"ok": True, "pid": 0})
+            read_frame(conn)                 # the predict...
+            conn.sendall(b"J\x00\x00\x00\x10par")   # ...torn mid-payload
+
+    th = threading.Thread(target=misbehave, daemon=True)
+    th.start()
+    tp = SocketTransport(fitted_est, address=addr)
+    with pytest.raises(TransportDead, match="dropped mid-call"):
+        tp.call({"op": "predict", "queries": [list(q(256, 16))]},
+                timeout=10)
+    assert not tp.alive
+    with pytest.raises(TransportDead):
+        tp.call({"op": "ping"})              # dead stays dead
+    th.join(10)
+    srv.close()
+
+
+def test_socket_read_timeout_is_transport_dead(fitted_est):
+    """A silent worker (connection up, no reply) is a dead worker once
+    the call timeout lapses."""
+    srv = socketlib.create_server(("127.0.0.1", 0))
+    addr = "%s:%d" % srv.getsockname()[:2]
+    release = threading.Event()
+
+    def silent():
+        conn, _ = srv.accept()
+        with conn:
+            read_frame(conn)
+            write_frame(conn, {"ok": True, "pid": 0})
+            read_frame(conn)                 # swallow the ping, say nothing
+            release.wait(30)
+
+    th = threading.Thread(target=silent, daemon=True)
+    th.start()
+    tp = SocketTransport(fitted_est, address=addr)
+    with pytest.raises(TransportDead, match="silent"):
+        tp.call({"op": "ping"}, timeout=0.2)
+    release.set()
+    th.join(10)
+    srv.close()
+
+
+@pytest.mark.timeout(600)
+def test_socket_crash_respawn_zero_lost(fitted_est):
+    """Peer disconnect during an in-flight batch behaves exactly like a
+    worker loss: orphans re-route, a fresh worker respawns, nothing is
+    lost."""
+    trace = make_diurnal_trace(240, universe(("kmeans",)), seed=3)
+    with FleetRouter(fitted_est, n_shards=2, replicas=2,
+                     transport="socket", window_s=0.001,
+                     call_timeout_s=30.0) as fleet:
+        fleet.inject_crash(fleet.shard_for(trace[0][1]), after_batches=1)
+        rep = run_load(fleet, trace, n_clients=4, timeout=60)
+        st = fleet.stats()
+        assert rep["errors"] == 0, rep["first_error"]
+        assert rep["served"] == rep["requests"]
+        assert st["crashes"] == 1 and st["respawns"] == 1
+        assert st["served"] == rep["requests"]
+
+
+@pytest.mark.timeout(600)
+def test_swap_during_socket_crash_respawns_at_target(fitted_est):
+    """A connection dropping while a rolling swap is in flight respawns
+    at the swap target and the staleness audit stays clean."""
+    recs = synth_records("kmeans", SHAPES, best_pr=2, best_s=0.01)
+    est2 = BlockSizeEstimator("tree").fit(recs)
+    trace = make_diurnal_trace(200, universe(("kmeans",)), seed=9)
+    with FleetRouter(fitted_est, n_shards=2, replicas=2,
+                     transport="socket", window_s=0.001,
+                     call_timeout_s=30.0) as fleet:
+        fleet.inject_crash(fleet.shard_for(trace[0][1]), after_batches=0)
+        th = threading.Thread(
+            target=lambda: (time.sleep(0.01), fleet.swap(est2)),
+            daemon=True)
+        th.start()
+        rep = run_load(fleet, trace, n_clients=4, timeout=60)
+        th.join(30)
+        assert rep["errors"] == 0, rep["first_error"]
+        assert rep["staleness_violations"] == 0
+        for row in fleet.stats()["per_replica"]:
+            if row["alive"]:
+                assert row["version"] == est2.model_version
+
+
+@pytest.mark.timeout(600)
+def test_socket_attach_and_reattach_on_crash(fitted_est):
+    """Attach mode: replicas bind to operator-run workers; a dropped
+    connection reattaches to the *same* address (the remote worker went
+    back to accept), so remote capacity survives fleet-side crashes."""
+    workers = [_attached_worker() for _ in range(2)]
+    addrs = [a for _, a in workers]
+    trace = make_diurnal_trace(120, universe(("kmeans",)), seed=4)
+    try:
+        with FleetRouter(fitted_est, n_shards=2, replicas=1,
+                         transport="socket", worker_addrs=list(addrs),
+                         window_s=0.001, call_timeout_s=30.0) as fleet:
+            crash_shard = fleet.shard_for(trace[0][1])
+            fleet.inject_crash(crash_shard, after_batches=0)
+            rep = run_load(fleet, trace, n_clients=4, timeout=60)
+            st = fleet.stats()
+            assert rep["errors"] == 0, rep["first_error"]
+            assert rep["served"] == rep["requests"]
+            assert st["crashes"] == 1 and st["respawns"] == 1
+            with fleet.groups[crash_shard].lock:
+                live = [r for r in fleet.groups[crash_shard].replicas
+                        if not r.dead]
+            assert live and live[0].addr in addrs   # reattached, not local
+            assert live[0].transport.proc is None
+    finally:
+        for srv, _ in workers:
+            srv.close()
+
+
+def test_serve_worker_cli_once(fitted_est):
+    """The `python -m repro.launch.serve_worker` entrypoint: binds the
+    requested port, serves one attachment, exits on --once."""
+    from repro.launch.serve_worker import main as worker_main
+    srv = socketlib.create_server(("127.0.0.1", 0))
+    port = srv.getsockname()[1]
+    srv.close()                              # hand the port to the CLI
+    th = threading.Thread(
+        target=lambda: worker_main(["--listen", f"127.0.0.1:{port}",
+                                    "--once"]), daemon=True)
+    th.start()
+    deadline = time.time() + 10
+    tp = None
+    while time.time() < deadline:
+        try:
+            tp = SocketTransport(fitted_est,
+                                 address=f"127.0.0.1:{port}",
+                                 connect_timeout_s=1.0)
+            break
+        except TransportDead:
+            time.sleep(0.05)
+    assert tp is not None, "never connected to the CLI worker"
+    assert tp.call({"op": "ping"}, timeout=10)["ok"]
+    tp.close()
+    th.join(10)
+    assert not th.is_alive()                 # --once: exits after detach
+
+
+# ------------------------------------------- demand planning & migration
+def test_proportional_plan_apportions_budget_exactly():
+    plan = proportional_plan([90, 5, 5], 6)
+    assert sum(plan.values()) == 6
+    assert plan[0] > plan[1] and plan[0] > plan[2]
+    assert min(plan.values()) >= 1           # every shard stays servable
+    # zero-traffic shards keep exactly the floor
+    plan = proportional_plan([0, 100, 0, 0], 8)
+    assert plan[1] == 5 and plan[0] == plan[2] == plan[3] == 1
+    # budget below one-per-shard is raised to the floor
+    plan = proportional_plan([1, 1, 1], 1)
+    assert sum(plan.values()) == 3
+    # deterministic on ties
+    assert proportional_plan([10, 10], 5) == proportional_plan([10, 10], 5)
+
+
+def test_live_demand_plan_uses_window_deltas():
+    prior = {"per_shard": [{"shard": 0, "served": 1000},
+                           {"shard": 1, "served": 1000}]}
+    now = {"per_shard": [{"shard": 0, "served": 1010},
+                         {"shard": 1, "served": 1900}]}
+    plan = live_demand_plan(now, 4, prior=prior)
+    assert sum(plan.values()) == 4
+    assert plan[1] > plan[0]                 # window demand, not lifetime
+    # without a prior the lifetime histogram decides
+    plan = live_demand_plan(now, 4)
+    assert sum(plan.values()) == 4
+
+
+def test_migrate_moves_a_replica_and_conserves_total(fitted_est):
+    with FleetRouter(fitted_est, n_shards=2, replicas={0: 2, 1: 1},
+                     window_s=0.001) as fleet:
+        moved = fleet.migrate(0, 1)
+        assert moved is not None
+        deadline = time.time() + 10
+        while fleet.n_replicas > 3 and time.time() < deadline:
+            time.sleep(0.02)
+        st = fleet.stats()
+        assert st["n_replicas"] == 3         # drain finished: conserved
+        assert st["migrations"] == 1
+        reps = {p["shard"]: p["replicas"] for p in st["per_shard"]}
+        assert reps == {0: 1, 1: 2}
+        assert fleet.migrate(0, 1) is None   # donor at the floor
+        assert fleet.migrate(1, 1) is None   # self-move is a no-op
+
+
+def test_autoscaler_rebalance_follows_demand(fitted_est):
+    """Traffic concentrated on one shard pulls replicas toward it under
+    a fixed global budget; an idle window below rebalance_min_window
+    never moves anything."""
+    with FleetRouter(fitted_est, n_shards=2, replicas={0: 3, 1: 1},
+                     window_s=0.001) as fleet:
+        pol = AutoscalePolicy(rebalance_every=1, rebalance_min_window=8,
+                              moves_per_rebalance=4, max_replicas=8)
+        scaler = Autoscaler(fleet, pol)
+        hot = [query for query in universe(("kmeans",))
+               if fleet.shard_for(query) == 1] or universe(("kmeans",))[:1]
+        for _ in range(40):
+            fleet.request(hot[0], timeout=30)
+        actions = scaler.rebalance()
+        assert actions and all(a[1] == "move" for a in actions)
+        assert all(a[2] == 0 and a[3] == 1 for a in actions)
+        deadline = time.time() + 10
+        while fleet.n_replicas > 4 and time.time() < deadline:
+            time.sleep(0.02)
+        st = fleet.stats()
+        assert st["migrations"] >= 1
+        assert st["n_replicas"] == 4         # budget defaulted to total
+        assert scaler.rebalance() == []      # no new traffic: no evidence
+
+
+def test_shifted_hotspot_trace_moves_the_hot_set():
+    uni = universe()
+    trace = make_diurnal_trace(2000, uni, seed=0,
+                               pattern="shifted_hotspot", hot_size=2)
+    half = len(trace) // 2
+    first = {repr(query) for kind, query, _ in trace[:half]
+             if kind == "hot"}
+    second = {repr(query) for kind, query, _ in trace[half:]
+              if kind == "hot"}
+    assert first and second and not (first & second)

@@ -1,0 +1,191 @@
+"""Docs gate: markdown link/anchor checker + runnable-quickstart smoke.
+
+    python tools/check_docs.py            # link check + execute blocks
+    python tools/check_docs.py --no-run   # link check only
+
+Stdlib only (CI runs it before any dependency install finishes being
+interesting).  Two passes over README.md, DESIGN.md, ROADMAP.md, and
+docs/**/*.md:
+
+1. **Links.**  Every inline ``[text](target)`` outside fenced code must
+   resolve: relative paths must exist on disk, and ``#fragment``s must
+   match a heading anchor in the target file (GitHub's slug rules —
+   lowercase, punctuation stripped, spaces to hyphens, ``-N`` suffixes
+   on duplicates).  ``http(s)``/``mailto`` targets are skipped — CI must
+   not depend on the network.
+
+2. **Runnable blocks.**  A fenced ``bash`` block immediately preceded
+   by ``<!-- docs-check: run -->`` is executed with ``bash -e`` from the
+   repo root with ``PYTHONPATH=src``, in its own process group so
+   backgrounded workers (the multi-node quickstart starts two) are
+   reaped even if the block leaks them.  Nonzero exit or timeout fails
+   the gate — quickstarts in the docs must actually work.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import re
+import signal
+import subprocess
+import sys
+import time
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+DOC_FILES = ("README.md", "DESIGN.md", "ROADMAP.md")
+RUN_MARKER = "<!-- docs-check: run -->"
+BLOCK_TIMEOUT_S = 300
+
+_LINK = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+_HEADING = re.compile(r"^(#{1,6})\s+(.*?)\s*#*\s*$")
+_FENCE = re.compile(r"^(```|~~~)")
+
+
+def doc_paths() -> list[Path]:
+    paths = [REPO / name for name in DOC_FILES if (REPO / name).exists()]
+    paths += sorted((REPO / "docs").glob("**/*.md"))
+    return paths
+
+
+def _strip_fenced(text: str) -> str:
+    """Blank out fenced code blocks so links/headings inside them are
+    neither checked nor collected."""
+    out, fenced = [], False
+    for line in text.splitlines():
+        if _FENCE.match(line.strip()):
+            fenced = not fenced
+            out.append("")
+        else:
+            out.append("" if fenced else line)
+    return "\n".join(out)
+
+
+def _slug(heading: str) -> str:
+    """GitHub-style anchor slug for one heading."""
+    # drop inline markup: `code` -> code, [text](url) -> text
+    heading = heading.replace("`", "")
+    heading = re.sub(r"\[([^\]]*)\]\([^)]*\)", r"\1", heading)
+    heading = heading.strip().lower()
+    heading = re.sub(r"[^\w\- ]", "", heading)
+    return heading.replace(" ", "-")
+
+
+def anchors(path: Path) -> set[str]:
+    """All heading anchors of one markdown file, with GitHub's ``-N``
+    deduplication for repeated headings."""
+    seen: dict[str, int] = {}
+    result = set()
+    for line in _strip_fenced(path.read_text()).splitlines():
+        m = _HEADING.match(line)
+        if not m:
+            continue
+        slug = _slug(m.group(2))
+        n = seen.get(slug, 0)
+        seen[slug] = n + 1
+        result.add(slug if n == 0 else f"{slug}-{n}")
+    return result
+
+
+def check_links(paths: list[Path]) -> list[str]:
+    problems = []
+    anchor_cache: dict[Path, set[str]] = {}
+    for path in paths:
+        for target in _LINK.findall(_strip_fenced(path.read_text())):
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue
+            raw, _, fragment = target.partition("#")
+            dest = (path if not raw
+                    else (path.parent / raw).resolve())
+            if not dest.exists():
+                problems.append(f"{path.relative_to(REPO)}: broken link "
+                                f"-> {target} (no such file)")
+                continue
+            if fragment:
+                if dest.suffix != ".md":
+                    continue              # anchors into non-markdown: skip
+                if dest not in anchor_cache:
+                    anchor_cache[dest] = anchors(dest)
+                if fragment.lower() not in anchor_cache[dest]:
+                    problems.append(f"{path.relative_to(REPO)}: broken "
+                                    f"anchor -> {target}")
+    return problems
+
+
+def runnable_blocks(path: Path) -> list[tuple[int, str]]:
+    """``(first_line_number, script)`` for every marked bash block."""
+    lines = path.read_text().splitlines()
+    blocks, i = [], 0
+    while i < len(lines):
+        if lines[i].strip() == RUN_MARKER:
+            j = i + 1
+            while j < len(lines) and not lines[j].strip():
+                j += 1
+            if j < len(lines) and lines[j].strip().startswith("```bash"):
+                body, j = [], j + 1
+                while j < len(lines) and not lines[j].startswith("```"):
+                    body.append(lines[j])
+                    j += 1
+                blocks.append((i + 1, "\n".join(body)))
+            i = j
+        i += 1
+    return blocks
+
+
+def run_block(lineno: int, script: str, source: Path) -> str | None:
+    """Execute one block; return a problem string or None.  The block
+    runs in its own process group so `&`-backgrounded processes die with
+    it."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = f"src{os.pathsep}" + env.get("PYTHONPATH", "")
+    proc = subprocess.Popen(
+        ["bash", "-ec", script], cwd=REPO, env=env,
+        stdout=subprocess.PIPE, stderr=subprocess.STDOUT, text=True,
+        start_new_session=True)
+    try:
+        out, _ = proc.communicate(timeout=BLOCK_TIMEOUT_S)
+    except subprocess.TimeoutExpired:
+        out = f"<timed out after {BLOCK_TIMEOUT_S}s>"
+    finally:
+        try:                              # reap the whole group, always
+            os.killpg(proc.pid, signal.SIGKILL)
+        except (ProcessLookupError, PermissionError):
+            pass
+        proc.wait()
+    if proc.returncode != 0:
+        tail = "\n".join(str(out).splitlines()[-15:])
+        return (f"{source.relative_to(REPO)}:{lineno}: runnable block "
+                f"failed (exit {proc.returncode}):\n{tail}")
+    return None
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--no-run", action="store_true",
+                    help="check links only; skip executing marked blocks")
+    args = ap.parse_args(argv)
+
+    paths = doc_paths()
+    problems = check_links(paths)
+    n_blocks = 0
+    if not args.no_run:
+        for path in paths:
+            for lineno, script in runnable_blocks(path):
+                n_blocks += 1
+                t0 = time.time()
+                problem = run_block(lineno, script, path)
+                status = "FAIL" if problem else "ok"
+                print(f"ran {path.relative_to(REPO)}:{lineno} "
+                      f"[{status}, {time.time() - t0:.1f}s]", flush=True)
+                if problem:
+                    problems.append(problem)
+
+    for p in problems:
+        print(f"docs-check: {p}", file=sys.stderr)
+    print(f"docs-check: {len(paths)} files, {n_blocks} runnable blocks, "
+          f"{len(problems)} problems")
+    return 1 if problems else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
