@@ -36,6 +36,16 @@ Three sections:
    provisioned for the first half, the hot set jumps at half-time, and
    the autoscaler's global-budget rebalance must move replicas so the
    final window's served skew lands back ≤ 1.5.
+   The **control-plane** section (gated) runs the fleet from the
+   lease registry instead of a hand-typed address list: workers are
+   *discovered* through a :class:`TransportSpec`, a silently-dead
+   worker is replaced by the heartbeat prober before any caller
+   observes an error, a late-joining registered worker is adopted by
+   one ``poll_registry()``, forged/unauthenticated frames bounce with a
+   typed :class:`FrameAuthError`, and a checkpoint→restore hands the
+   live fleet to a replacement router mid-trace with zero lost
+   requests and the staleness contract intact (a stale backend is
+   refused at restore).
 3. **Process-fleet speedup** (``--full`` only): a memo-defeating
    compute-heavy trace served by the single-process router vs the
    multi-process fleet; on multi-core hosts the fleet must clear 2x.
@@ -65,9 +75,11 @@ from repro.data.datasets import gaussian_blobs
 from repro.data.executor import Environment
 from repro.data.logstore import LogStore
 from repro.serve import (AutoscalePolicy, Autoscaler, FleetRouter,
-                         RefitDaemon, ShardRouter, demand_plan,
-                         make_diurnal_trace, make_trace, proportional_plan,
-                         run_load, trace_histogram)
+                         FrameAuthError, HeartbeatPolicy, RefitDaemon,
+                         ShardRouter, TransportSpec, WorkerRegistry,
+                         demand_plan, make_diurnal_trace, make_trace,
+                         make_transport, proportional_plan, run_load,
+                         trace_histogram)
 
 from benchmarks.common import csv_row
 
@@ -374,6 +386,164 @@ def _migration_fleet(store, *, requests, n_clients, n_shards, seed):
     }
 
 
+# ------------------------------------------- 2c. fleet control plane
+def _fleet_control(store, *, requests, n_clients, seed, workdir):
+    """Registry-discovered socket fleet under the full control plane:
+    heartbeat replacement of a silently-dead worker (no caller ever sees
+    the crash), late-join adoption, authenticated-frame rejection, and a
+    mid-trace checkpoint→restore onto a replacement router."""
+    import socket as socketlib
+
+    from repro.serve.transport import serve_socket_worker
+
+    est = BlockSizeEstimator("tree").fit(store.load())
+    trace = make_diurnal_trace(requests, _universe(("kmeans", "gmm")),
+                               seed=seed, pattern="diurnal")
+    third = len(trace) // 3
+
+    # the swap target, so the checkpointed read barrier genuinely moves
+    cursor = len(store)
+    _sweep(store, "csvm", 224, 16, 34)
+    new_records = [r for r, _src in store.follow(cursor)[0]]
+    est_v2 = est.snapshot()
+    assert est_v2.refit(new_records), "swap target did not retrain"
+
+    key = "bench-fleet-secret"
+    regpath = workdir / "fleet_registry.jsonl"
+    reg = WorkerRegistry(regpath)
+    servers = []
+
+    def start_worker():
+        srv = socketlib.create_server(("127.0.0.1", 0))
+        addr = "%s:%d" % srv.getsockname()[:2]
+        threading.Thread(target=serve_socket_worker, args=(srv,),
+                         kwargs={"auth_key": key}, daemon=True).start()
+        reg.announce(addr, ttl_s=600.0)
+        servers.append(srv)
+        return addr
+
+    for _ in range(2):
+        start_worker()
+
+    spec = TransportSpec(kind="socket", registry=regpath, auth_key=key)
+    fleet = FleetRouter(est, n_shards=2, transport=spec, queue_depth=256,
+                        admission="block", window_s=0.001,
+                        call_timeout_s=120.0,
+                        heartbeat=HeartbeatPolicy(interval_s=0.1,
+                                                  timeout_s=5.0,
+                                                  miss_after=2))
+    reports = []
+    try:
+        adopted = fleet.poll_registry()
+        assert len(adopted) == 2, \
+            f"registry discovery adopted {adopted}, wanted both workers"
+
+        reports.append(run_load(fleet, trace[:third],
+                                n_clients=n_clients, timeout=300))
+
+        # ---- a worker dies silently; the prober replaces it before any
+        # caller can eat a TransportDead
+        fleet.silent_kill(0, replica=0)
+        for _ in range(100):
+            fleet.prober.probe_once()
+            if fleet.stats()["heartbeat_replacements"] >= 1:
+                break
+            time.sleep(0.05)
+        st_mid = fleet.stats()
+        assert st_mid["heartbeat_replacements"] >= 1, \
+            f"prober never replaced the silently-dead worker: {st_mid}"
+        reports.append(run_load(fleet, trace[third:2 * third],
+                                n_clients=n_clients, timeout=300))
+
+        # ---- a new worker registers mid-flight; one poll adopts it
+        start_worker()
+        late = fleet.poll_registry()
+        assert len(late) == 1, f"late joiner not adopted: {late}"
+
+        # ---- roll the model, then checkpoint the management layer
+        fleet.swap(est_v2)
+        ckpt = workdir / "fleet_router.ckpt"
+        fleet.checkpoint(ckpt)
+        stats = fleet.stats()
+    finally:
+        fleet.close()
+
+    # a replacement router must refuse a backend older than the
+    # checkpointed read barrier (the staleness contract survives the
+    # router, not just the process)
+    try:
+        FleetRouter.restore(ckpt, est, transport_kw={"auth_key": key})
+        raise AssertionError("restore accepted a stale backend")
+    except ValueError:
+        stale_refused = True
+
+    fleet2 = FleetRouter.restore(ckpt, est_v2,
+                                 transport_kw={"auth_key": key})
+    try:
+        reports.append(run_load(fleet2, trace[2 * third:],
+                                n_clients=n_clients, timeout=300))
+        stats2 = fleet2.stats()
+    finally:
+        fleet2.close()
+
+    # ---- forged / unauthenticated frames bounce with the typed error
+    forged = {}
+    target = start_worker()
+    for label, bad in (("wrong_key", "not-" + key), ("no_key", "")):
+        try:
+            t = make_transport(
+                TransportSpec(kind="socket", auth_key=bad), est,
+                address=target)
+            t.close()
+        except FrameAuthError:
+            forged[label] = "FrameAuthError"
+    for srv in servers:
+        srv.close()
+
+    requests_total = sum(r["requests"] for r in reports)
+    served = sum(r["served"] for r in reports)
+    lost = sum(r["requests"] - r["served"] - r["rejected"] - r["expired"]
+               for r in reports)
+    errors = sum(r["errors"] for r in reports)
+    stale = sum(r["staleness_violations"] for r in reports)
+    wall = sum(r["wall_s"] for r in reports)
+    rerouted = stats["rerouted"] + stats2["rerouted"]
+
+    assert errors == 0, \
+        f"errors through the control plane: {reports}"
+    assert lost == 0, f"{lost} requests lost across replace + restore"
+    assert stale == 0, f"{stale} staleness violations"
+    assert rerouted == 0, \
+        f"{rerouted} callers observed the silent crash (want heartbeat " \
+        f"to win the race)"
+    assert forged == {"wrong_key": "FrameAuthError",
+                      "no_key": "FrameAuthError"}, \
+        f"forged frames not rejected with the typed error: {forged}"
+    assert stats2["read_barrier"] == est_v2.model_version, \
+        f"restored read barrier regressed: {stats2['read_barrier']}"
+
+    return {
+        "requests": requests_total,
+        "served": served,
+        "lost": lost,
+        "errors": errors,
+        "staleness_violations": stale,
+        "discovered": len(adopted),
+        "late_adopted": len(late),
+        "adoptions": stats["adoptions"],
+        "crashes": stats["crashes"],
+        "heartbeats": stats["heartbeats"],
+        "heartbeat_replacements": stats["heartbeat_replacements"],
+        "rerouted": rerouted,
+        "forged_rejections": forged,
+        "stale_restore_refused": stale_refused,
+        "read_barrier": stats2["read_barrier"],
+        "restored_served": reports[-1]["served"],
+        "throughput_rps": served / wall,
+        "wall_s": wall,
+    }
+
+
 # --------------------------------------------- 3. process-fleet speedup
 def _fleet_speedup(store, *, requests, n_clients, n_shards, seed):
     """Single-process router vs multi-process fleet on the same
@@ -492,6 +662,19 @@ def run(verbose=True, *, rounds=2, requests_per_round=240, n_clients=4,
                 f"moves={migration['migrations']};"
                 f"skew={migration['skew_after_shift']:.2f}"
                 f"->{migration['skew_final']:.2f}")
+
+        control = _fleet_control(
+            store, requests=max(socket_requests // 4, 3000),
+            n_clients=diurnal_clients, seed=seed + 4, workdir=Path(tmp))
+        results["fleet_control"] = control
+        csv_row("serving/fleet_control",
+                1.0 / max(control["throughput_rps"], 1e-9) * 1e6,
+                f"n={control['requests']};"
+                f"discovered={control['discovered']};"
+                f"hb_replace={control['heartbeat_replacements']};"
+                f"rerouted={control['rerouted']};"
+                f"lost={control['lost']};"
+                f"stale={control['staleness_violations']}")
 
         if full:
             speedup = _fleet_speedup(store, requests=60_000,

@@ -1,9 +1,13 @@
 """Fleet quickstart: the serving tier end to end in under a minute.
 
 1. grid-sweep a tiny corpus into a LogStore and warm the estimator;
-2. **multi-node**: start two standalone ``serve_worker`` processes on
-   ephemeral ports (stand-ins for workers on other hosts), attach a
-   socket-transport FleetRouter to them, and replay a seeded trace;
+2. **multi-node with a control plane**: start standalone
+   ``serve-worker`` processes that *register* themselves in a shared
+   lease file, let a socket-transport FleetRouter discover them through
+   a :class:`TransportSpec` (HMAC-authenticated frames, no hand-typed
+   address list), replay a seeded trace, adopt a late-joining worker,
+   then checkpoint the router and restore a replacement onto the same
+   fleet;
 3. **capacity following**: provision a loopback fleet for the first
    half of a shifted-hotspot trace, let the hot set jump at half-time,
    and watch the autoscaler's global-budget rebalance migrate replicas
@@ -23,8 +27,10 @@ from repro.data.datasets import gaussian_blobs
 from repro.data.executor import Environment
 from repro.data.logstore import LogStore
 from repro.serve import (AutoscalePolicy, Autoscaler, FleetRouter,
-                         make_diurnal_trace, make_trace, proportional_plan,
-                         run_load, trace_histogram)
+                         TransportSpec, make_diurnal_trace, make_trace,
+                         proportional_plan, run_load, trace_histogram)
+
+AUTH_KEY = "quickstart-secret"
 
 ENV = Environment(name="laptop", n_workers=4, n_nodes=1,
                   mem_limit_mb=2048.0, dispatch_overhead_s=1e-4, ram_gb=16)
@@ -46,34 +52,60 @@ def universe(algos=("kmeans", "gmm")):
     return [(n, m, a, feats) for a in algos for n, m in SHAPES]
 
 
-def start_worker():
-    """One standalone socket worker on an ephemeral port — on a real
-    deployment this is ``python -m repro.launch.serve_worker --listen
-    0.0.0.0:7071`` on another host."""
+def start_worker(registry):
+    """One standalone socket worker on an ephemeral port, announcing
+    itself into the shared lease registry — on a real deployment this is
+    ``python -m repro serve-worker --listen 0.0.0.0:7071 --register
+    /shared/registry.jsonl`` on another host."""
     proc = subprocess.Popen(
-        [sys.executable, "-m", "repro.launch.serve_worker",
-         "--listen", "127.0.0.1:0"],
+        [sys.executable, "-m", "repro", "serve-worker",
+         "--listen", "127.0.0.1:0", "--register", str(registry),
+         "--auth-key", AUTH_KEY],
         stdout=subprocess.PIPE, text=True)
     line = proc.stdout.readline()          # "serve_worker listening on H:P"
     return proc, line.rsplit(" ", 1)[-1].strip()
 
 
-def multi_node_demo(est):
-    print("== multi-node: attach a socket fleet to standalone workers ==")
-    workers = [start_worker() for _ in range(2)]
-    addrs = [addr for _, addr in workers]
-    print(f"  workers up at {addrs}")
+def multi_node_demo(est, tmp):
+    print("== multi-node: discover registered workers, serve, fail over ==")
+    registry = Path(tmp) / "registry.jsonl"
+    spec = TransportSpec(kind="socket", registry=registry,
+                         auth_key=AUTH_KEY)
+    workers = [start_worker(registry) for _ in range(2)]
     try:
-        with FleetRouter(est, n_shards=2, transport="socket",
-                         worker_addrs=addrs, window_s=0.001) as fleet:
+        with FleetRouter(est, n_shards=2, transport=spec,
+                         window_s=0.001) as fleet:
+            print(f"  discovered {fleet.poll_registry()} from the lease "
+                  f"registry (no --workers list)")
             trace = make_trace(2000, universe(), seed=0)
             report = run_load(fleet, trace, n_clients=4)
+            # a third worker joins mid-flight: one poll adopts it
+            workers.append(start_worker(registry))
+            late = fleet.poll_registry()
+            print(f"  late joiner adopted: {late} "
+                  f"(replicas now {fleet.n_replicas})")
+            assert len(late) == 1
             st = fleet.stats()
+            # hand the live fleet to a replacement router: checkpoint,
+            # close the old management layer, restore the new one
+            ckpt = Path(tmp) / "router.ckpt"
+            fleet.checkpoint(ckpt)
+        fleet2 = FleetRouter.restore(ckpt, est, transport_kw={
+            "auth_key": AUTH_KEY})
+        try:
+            report2 = run_load(fleet2, make_trace(500, universe(), seed=1),
+                               n_clients=4)
+        finally:
+            fleet2.close()
         print(f"  served {report['served']}/{report['requests']} over TCP "
               f"({report['throughput_rps']:.0f} req/s, "
               f"p95 {report['p95_ms']:.2f} ms, "
               f"errors {report['errors']}, crashes {st['crashes']})")
+        print(f"  restored router served {report2['served']}"
+              f"/{report2['requests']} (errors {report2['errors']}) "
+              f"from the checkpoint")
         assert report["errors"] == 0 and report["served"] == len(trace)
+        assert report2["errors"] == 0 and report2["served"] == 500
     finally:
         for proc, _ in workers:
             proc.terminate()
@@ -124,7 +156,7 @@ def main():
     print("== warming the estimator from a tiny grid-swept store ==")
     with tempfile.TemporaryDirectory() as tmp:
         est = warm_estimator(tmp)
-    multi_node_demo(est)
+        multi_node_demo(est, tmp)
     migration_demo(est)
 
 

@@ -1,0 +1,6 @@
+"""``python -m repro`` — the unified CLI; dispatch lives in
+``repro/launch/__main__.py``."""
+from repro.launch.__main__ import main
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -244,5 +244,8 @@ def main():
     print("dry-run complete: all cells compiled.")
 
 
-if __name__ == "__main__":
+if __name__ == "__main__":   # deprecated spelling; kept as a shim
+    import sys as _sys
+    print("note: `python -m repro.launch.dryrun` is now "
+          "`python -m repro dryrun`", file=_sys.stderr)
     main()

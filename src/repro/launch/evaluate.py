@@ -84,5 +84,8 @@ def main(argv=None):
     return report
 
 
-if __name__ == "__main__":
+if __name__ == "__main__":   # deprecated spelling; kept as a shim
+    import sys as _sys
+    print("note: `python -m repro.launch.evaluate` is now "
+          "`python -m repro evaluate`", file=_sys.stderr)
     main()

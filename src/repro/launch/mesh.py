@@ -26,3 +26,43 @@ def make_host_mesh():
             model = cand
             break
     return jax.make_mesh((n // model, model), ("data", "model"))
+
+
+def main(argv=None):
+    """``python -m repro mesh``: build a mesh and describe it — the
+    quickest way to check what geometry this host (or ``--shape``)
+    yields before committing a dry-run or training launch to it."""
+    import argparse
+
+    ap = argparse.ArgumentParser(
+        description="construct and describe a device mesh")
+    ap.add_argument("--shape", default=None, metavar="N,M[,K]",
+                    help="explicit mesh shape (default: host devices)")
+    ap.add_argument("--axes", default=None, metavar="A,B[,C]",
+                    help="axis names for --shape (default data,model[,pod])")
+    ap.add_argument("--production", action="store_true",
+                    help="the 16x16 production pod mesh (needs 256 chips)")
+    ap.add_argument("--multi-pod", action="store_true",
+                    help="with --production: 2 pods (adds a 'pod' axis)")
+    args = ap.parse_args(argv)
+
+    if args.production:
+        mesh = make_production_mesh(multi_pod=args.multi_pod)
+    elif args.shape:
+        shape = tuple(int(x) for x in args.shape.split(","))
+        axes = (tuple(args.axes.split(",")) if args.axes
+                else ("pod", "data", "model")[-len(shape):])
+        mesh = make_mesh(shape, axes)
+    else:
+        mesh = make_host_mesh()
+    print(f"mesh shape={dict(zip(mesh.axis_names, mesh.devices.shape))} "
+          f"devices={mesh.devices.size} "
+          f"platform={mesh.devices.flat[0].platform}")
+    return mesh
+
+
+if __name__ == "__main__":   # deprecated spelling; kept as a shim
+    import sys as _sys
+    print("note: `python -m repro.launch.mesh` is now "
+          "`python -m repro mesh`", file=_sys.stderr)
+    main()

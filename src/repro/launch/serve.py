@@ -98,5 +98,8 @@ def main(argv=None):
     return out
 
 
-if __name__ == "__main__":
+if __name__ == "__main__":   # deprecated spelling; kept as a shim
+    import sys as _sys
+    print("note: `python -m repro.launch.serve` is now "
+          "`python -m repro serve`", file=_sys.stderr)
     main()

@@ -24,9 +24,18 @@ shards (``2`` everywhere, or ``0:2,3:4`` / ``1:3`` per shard), and
 
 Multi-node: ``--transport socket --workers hostA:7071,hostB:7071``
 attaches replicas to standalone workers started with ``python -m
-repro.launch.serve_worker --listen ...`` (see docs/serving.md); with
+repro serve-worker --listen ...`` (see docs/serving.md); with
 ``--transport socket`` and no ``--workers`` the workers are spawned
 locally over real TCP sockets.
+
+Control plane (DESIGN.md §15): ``--registry PATH`` discovers workers
+that registered with ``serve-worker --register PATH`` instead of (or in
+addition to) a hand-typed ``--workers`` list — ``--wait-workers N``
+blocks until N leases are live; ``--auth-key`` (or ``$REPRO_AUTH_KEY``)
+arms HMAC frame authentication; ``--heartbeat`` runs the health prober
+so silently-dead workers are replaced before a caller notices.  All of
+it flows through one validated
+:class:`~repro.serve.transport.TransportSpec`.
 """
 from __future__ import annotations
 
@@ -132,6 +141,19 @@ def main(argv=None):
     ap.add_argument("--autoscale", action="store_true",
                     help="fleet mode: scale replicas out/in from queue "
                          "pressure")
+    ap.add_argument("--registry", default=None, metavar="PATH",
+                    help="fleet mode with --transport socket: discover "
+                         "and adopt workers registered in this file "
+                         "(serve-worker --register PATH)")
+    ap.add_argument("--wait-workers", type=int, default=0, metavar="N",
+                    help="with --registry: wait up to 30s for N live "
+                         "worker leases before serving")
+    ap.add_argument("--auth-key", default=None,
+                    help="shared frame-HMAC secret for socket workers "
+                         "(default: $REPRO_AUTH_KEY; unset disables)")
+    ap.add_argument("--heartbeat", action="store_true",
+                    help="fleet mode: probe worker liveness and replace "
+                         "silently-dead replicas")
     ap.add_argument("--json", default=None,
                     help="also write the full serving report to this path")
     args = ap.parse_args(argv)
@@ -176,21 +198,49 @@ def main(argv=None):
 
     if args.workers is not None and args.transport != "socket":
         ap.error("--workers requires --transport socket")
-    fleet_mode = (args.processes or args.autoscale
+    if args.registry is not None and args.transport != "socket":
+        ap.error("--registry requires --transport socket")
+    fleet_mode = (args.processes or args.autoscale or args.heartbeat
                   or args.replicas is not None or args.transport is not None)
     if fleet_mode:
-        transport = args.transport or ("process" if args.processes
-                                       else "loopback")
-        worker_addrs = (args.workers.split(",") if args.workers else None)
+        from repro.serve import TransportSpec
+        kind = args.transport or ("process" if args.processes
+                                  else "loopback")
+        try:
+            spec = TransportSpec(kind=kind,
+                                 worker_addrs=args.workers or (),
+                                 auth_key=args.auth_key,
+                                 registry=args.registry)
+        except ValueError as e:
+            ap.error(str(e))
+        if args.wait_workers > 0 and spec.registry is not None:
+            reg = spec.open_registry()
+            deadline = time.time() + 30.0
+            while len(reg.workers()) < args.wait_workers \
+                    and time.time() < deadline:
+                time.sleep(0.2)
+            live = len(reg.workers())
+            print(f"== registry {spec.registry}: {live} live worker "
+                  f"lease(s)", flush=True)
+            if live < args.wait_workers:
+                ap.error(f"only {live}/{args.wait_workers} workers "
+                         f"registered within 30s")
         router = FleetRouter(
             est, n_shards=args.shards,
             replicas=parse_replicas(args.replicas or "1"),
-            transport=transport, worker_addrs=worker_addrs,
+            transport=spec,
             queue_depth=args.queue_depth, admission=args.admission,
             batch_max=args.batch_max, window_s=args.window_ms / 1e3,
-            autoscale=args.autoscale)
+            autoscale=args.autoscale, heartbeat=args.heartbeat)
+        if router.registry is not None:
+            adopted = router.poll_registry()
+            if adopted:
+                print(f"== adopted {len(adopted)} registered worker(s): "
+                      f"{', '.join(adopted)}", flush=True)
         if router.autoscaler is not None:
             router.autoscaler.start()
+        if router.prober is not None:
+            router.prober.start()
     else:
         router = ShardRouter(est, n_shards=args.shards,
                              queue_depth=args.queue_depth,
@@ -242,5 +292,8 @@ def main(argv=None):
     return report
 
 
-if __name__ == "__main__":
+if __name__ == "__main__":   # deprecated spelling; kept as a shim
+    import sys as _sys
+    print("note: `python -m repro.launch.serve_estimator` is now "
+          "`python -m repro serve-estimator`", file=_sys.stderr)
     main()

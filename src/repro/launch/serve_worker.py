@@ -1,16 +1,22 @@
-"""Standalone socket shard worker for the serving fleet (DESIGN.md §14).
+"""Standalone socket shard worker for the serving fleet (DESIGN.md
+§14–§15).
 
-    python -m repro.launch.serve_worker --listen 0.0.0.0:7071
+    python -m repro serve-worker --listen 0.0.0.0:7071
+    python -m repro serve-worker --listen 0.0.0.0:0 \\
+        --register /shared/registry.jsonl --auth-key s3cret
 
-Run one of these per core on every serving host, then point a
-:class:`~repro.serve.fleet.FleetRouter` at them::
+Run one of these per core on every serving host.  With ``--register``
+the worker announces its bound address into a shared
+:class:`~repro.serve.registry.WorkerRegistry` file and keeps the lease
+alive — any :class:`~repro.serve.fleet.FleetRouter` pointed at the same
+registry discovers and attaches it, no ``--workers`` flag needed::
 
-    FleetRouter(est, transport="socket",
-                worker_addrs=["hostA:7071", "hostA:7072", "hostB:7071"])
+    spec = TransportSpec(kind="socket", registry="/shared/registry.jsonl")
+    FleetRouter(est, transport=spec).poll_registry()
 
-or from the CLI::
+Hand-typed attachment still works::
 
-    python -m repro.launch.serve_estimator --demo --transport socket \\
+    python -m repro serve-estimator --demo --transport socket \\
         --workers hostA:7071,hostB:7071
 
 The worker is *inert* until a fleet attaches: it holds no model of its
@@ -20,7 +26,11 @@ the connection drops (fleet detached, crashed, or the network
 partitioned) the worker returns to ``accept``, so a recovering fleet can
 reattach and keep the same capacity; ``--once`` serves a single
 attachment and exits (the mode locally spawned workers use).  A ``stop``
-op from the peer shuts the worker down.
+op from the peer shuts the worker down, withdrawing the lease.
+
+``--auth-key`` (or ``$REPRO_AUTH_KEY``) arms HMAC frame verification:
+unauthenticated or tampered frames are rejected before the op dispatch,
+so an untrusted peer can never reach the model.
 
 Port ``0`` binds an ephemeral port; the bound address is printed on
 stdout either way (``serve_worker listening on H:P``), which is what
@@ -44,21 +54,51 @@ def main(argv=None):
                     help="serve one fleet attachment then exit instead "
                          "of re-accepting (what locally spawned workers "
                          "do)")
+    ap.add_argument("--register", default=None, metavar="PATH",
+                    help="announce into this worker-registry file and "
+                         "keep the lease alive (fleets with the same "
+                         "registry discover this worker)")
+    ap.add_argument("--ttl", type=float, default=10.0,
+                    help="registry lease seconds; a killed worker lapses "
+                         "after this (default 10)")
+    ap.add_argument("--advertise", default=None, metavar="HOST:PORT",
+                    help="address to register instead of the bound one "
+                         "(NAT / container port mappings)")
+    ap.add_argument("--auth-key", default=None,
+                    help="shared frame-HMAC secret (default: "
+                         "$REPRO_AUTH_KEY; unset disables auth)")
     args = ap.parse_args(argv)
 
-    from repro.serve.transport import serve_socket_worker
+    from repro.serve.registry import (LeaseKeeper, WorkerRegistry,
+                                      default_caps)
+    from repro.serve.transport import auth_key_from_env, serve_socket_worker
 
     host, _, port = args.listen.rpartition(":")
     srv = socket.create_server((host or "127.0.0.1", int(port)))
     bound = "%s:%d" % srv.getsockname()[:2]
     print(f"serve_worker listening on {bound}", flush=True)
+    auth_key = args.auth_key if args.auth_key is not None \
+        else auth_key_from_env()
+    keeper = None
+    if args.register:
+        addr = args.advertise or bound
+        keeper = LeaseKeeper(WorkerRegistry(args.register), addr,
+                             ttl_s=args.ttl, caps=default_caps()).start()
+        print(f"serve_worker registered {addr} in {args.register} "
+              f"(ttl {args.ttl:g}s)", flush=True)
     try:
-        serve_socket_worker(srv, once=args.once)
+        serve_socket_worker(srv, once=args.once, auth_key=auth_key)
     except KeyboardInterrupt:
         pass
+    finally:
+        if keeper is not None:
+            keeper.stop()
     print("serve_worker exiting", flush=True)
     return bound
 
 
-if __name__ == "__main__":
+if __name__ == "__main__":   # deprecated spelling; kept as a shim
+    import sys as _sys
+    print("note: `python -m repro.launch.serve_worker` is now "
+          "`python -m repro serve-worker`", file=_sys.stderr)
     main()

@@ -187,5 +187,8 @@ def main(argv=None):
     return losses
 
 
-if __name__ == "__main__":
+if __name__ == "__main__":   # deprecated spelling; kept as a shim
+    import sys as _sys
+    print("note: `python -m repro.launch.train` is now "
+          "`python -m repro train`", file=_sys.stderr)
     main()

@@ -156,5 +156,8 @@ def main(argv=None):
             f"{store.sources()}")
 
 
-if __name__ == "__main__":
+if __name__ == "__main__":   # deprecated spelling; kept as a shim
+    import sys as _sys
+    print("note: `python -m repro.launch.tune` is now "
+          "`python -m repro tune`", file=_sys.stderr)
     main()

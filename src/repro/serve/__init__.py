@@ -1,6 +1,7 @@
-"""Online serving subsystem (DESIGN.md §10, §13): sharded estimation
-service, multi-process serving fleet, background refit daemon, and the
-closed-loop load generator.
+"""Online serving subsystem (DESIGN.md §10, §13–§15): sharded estimation
+service, multi-process serving fleet, control plane (discovery,
+heartbeats, authenticated frames, router failover), background refit
+daemon, and the closed-loop load generator.
 
 Quickstart (single process)::
 
@@ -17,17 +18,22 @@ Fleet (multi-process workers, replicated hot shards, autoscaling)::
                      transport="process", autoscale=True) as fleet:
         fleet.request(query, deadline_s=0.05, cls="interactive")
 
-Multi-node (workers on other hosts run ``python -m
-repro.launch.serve_worker --listen host:port``; see docs/serving.md)::
+Multi-node (workers on other hosts run ``python -m repro serve-worker
+--listen host:port --register /shared/registry.jsonl``; see
+docs/serving.md)::
 
-    with FleetRouter(est, n_shards=4, transport="socket",
-                     worker_addrs=["hostA:7071", "hostB:7071"]) as fleet:
+    spec = TransportSpec(kind="socket", registry="/shared/registry.jsonl",
+                         auth_key="s3cret")
+    with FleetRouter(est, n_shards=4, transport=spec,
+                     heartbeat=True) as fleet:
+        fleet.prober.start()
         fleet.request(query, deadline_s=0.05, cls="interactive")
 
-``python -m repro.launch.serve_estimator`` fronts the whole tier from a
+``python -m repro serve-estimator`` fronts the whole tier from a
 persistent LogStore; ``benchmarks/serving_bench.py`` load-tests it.
 """
 from repro.serve.fleet import (AutoscalePolicy, Autoscaler, FleetRouter,
+                               HealthProber, HeartbeatPolicy,
                                ShedRejected, demand_plan,
                                live_demand_plan, proportional_plan,
                                trace_histogram)
@@ -35,20 +41,27 @@ from repro.serve.loadgen import (make_diurnal_trace, make_trace,
                                  make_universe, run_load, served_skew,
                                  staleness_violations)
 from repro.serve.refit import RefitDaemon
+from repro.serve.registry import LeaseKeeper, WorkerRegistry
 from repro.serve.router import (DeadlineExceeded, HashRing, RouterClosed,
                                 RouterRejected, ServeResult, Shard,
                                 ShardRouter)
-from repro.serve.transport import (LoopbackTransport, ProcessTransport,
-                                   ShardWorker, SocketTransport,
-                                   TransportDead, serve_socket_worker)
+from repro.serve.stats import STATS_SCHEMA, StatsView, normalize_stats
+from repro.serve.transport import (FrameAuthError, LoopbackTransport,
+                                   ProcessTransport, ShardWorker,
+                                   SocketTransport, TransportDead,
+                                   TransportSpec, make_transport,
+                                   serve_socket_worker)
 
 __all__ = ["AutoscalePolicy", "Autoscaler", "DeadlineExceeded",
-           "FleetRouter", "HashRing", "LoopbackTransport",
+           "FleetRouter", "FrameAuthError", "HashRing", "HealthProber",
+           "HeartbeatPolicy", "LeaseKeeper", "LoopbackTransport",
            "ProcessTransport", "RefitDaemon", "RouterClosed",
-           "RouterRejected", "ServeResult", "Shard", "ShardRouter",
-           "ShardWorker", "ShedRejected", "SocketTransport",
-           "TransportDead", "demand_plan", "live_demand_plan",
-           "make_diurnal_trace", "make_trace", "make_universe",
+           "RouterRejected", "STATS_SCHEMA", "ServeResult", "Shard",
+           "ShardRouter", "ShardWorker", "ShedRejected",
+           "SocketTransport", "StatsView", "TransportDead",
+           "TransportSpec", "WorkerRegistry", "demand_plan",
+           "live_demand_plan", "make_diurnal_trace", "make_trace",
+           "make_transport", "make_universe", "normalize_stats",
            "proportional_plan", "run_load", "served_skew",
            "serve_socket_worker", "staleness_violations",
            "trace_histogram"]

@@ -57,17 +57,23 @@ processes and across hosts:
 """
 from __future__ import annotations
 
+import json
+import os
 import threading
 import time
 import queue as queue_mod
+from pathlib import Path
 
 from repro.core.estimator import EstimatorService
 from repro.core.tuner import fold_records
+from repro.serve.registry import WorkerRegistry
 from repro.serve.router import (DeadlineExceeded, HashRing, RouterClosed,
                                 RouterRejected, ServeResult, _Request)
-from repro.serve.transport import TRANSPORTS, TransportDead
+from repro.serve.stats import normalize_stats
+from repro.serve.transport import TRANSPORTS, TransportDead, TransportSpec
 
-__all__ = ["AutoscalePolicy", "Autoscaler", "FleetRouter", "Replica",
+__all__ = ["AutoscalePolicy", "Autoscaler", "FleetRouter",
+           "HealthProber", "HeartbeatPolicy", "Replica",
            "ShardGroup", "ShedRejected", "CLASS_PRIORITY", "demand_plan",
            "trace_histogram", "proportional_plan", "live_demand_plan"]
 
@@ -476,19 +482,43 @@ class FleetRouter:
     replicate hot shards), ``weights`` (ring capacity weighting),
     request classes and deadline shedding, and an optional autoscaler
     (with global-budget rebalancing, see :class:`AutoscalePolicy`).
+
+    Control plane (DESIGN.md §15): ``transport`` may be a
+    :class:`~repro.serve.transport.TransportSpec` (kind, addresses, auth
+    key, timeouts, registry in one validated object); ``registry`` turns
+    on worker discovery (:meth:`poll_registry` adopts newly announced
+    workers, no flag changes); ``heartbeat`` arms the
+    :class:`HealthProber` so silently-dead workers are replaced before a
+    caller notices; :meth:`checkpoint`/:meth:`restore` snapshot and
+    resume the management layer over a live fleet.
     """
 
     supports_classes = True
 
     def __init__(self, backend, *, n_shards: int = 4, replicas=1,
-                 transport: str = "loopback",
+                 transport: "str | TransportSpec" = "loopback",
                  service_factory=EstimatorService, maxsize: int = 4096,
                  queue_depth: int = 256, admission: str = "block",
                  batch_max: int = 32, window_s: float = 0.002,
                  vnodes: int = 32, weights=None, abstain_fallback=None,
                  class_fracs=None, call_timeout_s: float | None = 60.0,
                  autoscale: "AutoscalePolicy | bool | None" = None,
-                 worker_addrs=None, transport_kw=None):
+                 worker_addrs=None, transport_kw=None, registry=None,
+                 heartbeat: "HeartbeatPolicy | bool | None" = None):
+        if isinstance(transport, TransportSpec):
+            # the validated spec is the one source of truth: kind,
+            # addresses, auth key, timeouts, and discovery path
+            spec = transport
+            transport = spec.kind
+            if worker_addrs is None:
+                worker_addrs = list(spec.worker_addrs)
+            kw = spec.transport_kw()
+            kw.update(transport_kw or {})
+            transport_kw = kw
+            if call_timeout_s == 60.0:
+                call_timeout_s = spec.call_timeout_s
+            if registry is None:
+                registry = spec.registry
         if admission not in ("block", "reject"):
             raise ValueError(f"admission must be block|reject, "
                              f"got {admission!r}")
@@ -497,9 +527,17 @@ class FleetRouter:
                              f"{sorted(TRANSPORTS)}, got {transport!r}")
         if worker_addrs and transport != "socket":
             raise ValueError("worker_addrs requires transport='socket'")
+        if registry is not None and transport != "socket":
+            raise ValueError("registry discovery requires "
+                             "transport='socket'")
         self._backend = backend
         self._addr_pool = list(worker_addrs or [])
+        self._adopted = set(self._addr_pool)
         self._transport_kw = dict(transport_kw or {})
+        if registry is not None and not isinstance(registry,
+                                                   WorkerRegistry):
+            registry = WorkerRegistry(registry)
+        self.registry = registry
         self.admission = admission
         self.transport_kind = transport
         self.queue_depth = queue_depth
@@ -511,6 +549,8 @@ class FleetRouter:
         self._replica_kw = dict(queue_depth=queue_depth,
                                 batch_max=batch_max, window_s=window_s,
                                 call_timeout_s=call_timeout_s)
+        self._vnodes = vnodes
+        self._weights = list(weights) if weights is not None else None
         self._ring = HashRing(n_shards, vnodes, weights=weights)
         # local keyer: canonical memo keys for routing, never predictions
         self._keyer = service_factory(backend, 2)
@@ -526,6 +566,9 @@ class FleetRouter:
         self.scale_outs = 0
         self.scale_ins = 0
         self.migrations = 0
+        self.heartbeats = 0
+        self.heartbeat_replacements = 0
+        self.adoptions = 0
         self.swap_log: list[tuple[float, int]] = [(time.monotonic(),
                                                    version)]
         if isinstance(replicas, int):
@@ -541,6 +584,11 @@ class FleetRouter:
             policy = autoscale if isinstance(autoscale, AutoscalePolicy) \
                 else AutoscalePolicy()
             self.autoscaler = Autoscaler(self, policy)
+        self.prober = None
+        if heartbeat:
+            hb = heartbeat if isinstance(heartbeat, HeartbeatPolicy) \
+                else HeartbeatPolicy()
+            self.prober = HealthProber(self, hb)
 
     # ----------------------------------------------------------- identity
     @property
@@ -603,10 +651,15 @@ class FleetRouter:
         locally spawned worker."""
         group = self.groups[replica.shard]
         with self._lock:
-            self.crashes += 1
+            # idempotent: the heartbeat prober and the dispatcher can both
+            # reach this for the same replica — count and respawn once,
+            # but always resolve whichever orphans each caller brought
+            first = not replica.retired
+            if first:
+                self.crashes += 1
             group.retire(replica)
             group.remove(replica)
-            if not self._closed:
+            if first and not self._closed:
                 backend, version = self._current_target()
                 addr = getattr(replica, "addr", None)
                 try:
@@ -616,6 +669,9 @@ class FleetRouter:
                 except Exception:
                     try:
                         if addr is not None:   # reattach failed: go local
+                            # the address is dead capacity; un-adopt it so
+                            # a worker re-announcing there is re-attached
+                            self._adopted.discard(addr)
                             group.add(self._spawn(replica.shard, backend,
                                                   version))
                             self.respawns += 1
@@ -682,6 +738,84 @@ class FleetRouter:
         with self.groups[shard].lock:
             rep = self.groups[shard].replicas[replica]
         rep._crash_after = max(0, int(after_batches))
+
+    def silent_kill(self, shard: int, replica: int = 0) -> None:
+        """Chaos for the heartbeat path: the worker behind one replica
+        dies with *nothing* in flight — no call errors, no EOF, the
+        transport still believes it is alive.  Only a health probe (or
+        the next unlucky caller) can notice."""
+        with self.groups[shard].lock:
+            rep = self.groups[shard].replicas[replica]
+        rep.transport.silent_kill()
+
+    def _replace_suspect(self, replica: Replica) -> bool:
+        """Heartbeat verdict: ``replica``'s worker stopped answering
+        pings — retire and respawn it through the ordinary crash path
+        *now*, before any caller's request lands on the corpse and eats
+        a :class:`TransportDead`.  Idempotent against the dispatcher
+        discovering the same death mid-call."""
+        with self._lock:
+            if self._closed or replica.retired or replica.dead:
+                return False
+            replica.dead = True
+        try:
+            replica.transport.kill()
+        except Exception:
+            pass
+        self._handle_crash(replica, replica._drain_rest())
+        # the respawn (reattach or local) is seated; this replica's addr
+        # must not go back to the pool when its dispatcher unparks below
+        replica.addr = None
+        replica.queue.put(_STOP)
+        self.heartbeat_replacements += 1
+        return True
+
+    # --------------------------------------------------------- discovery
+    def poll_registry(self, *, prior: dict | None = None,
+                      now: float | None = None) -> list[str]:
+        """Discover and adopt newly registered workers: every live lease
+        whose address this fleet has not yet attached becomes one new
+        replica (seated by :meth:`adopt_worker`).  Safe to call from a
+        timer, the autoscaler, or a test — adoption is deduplicated, so
+        a flapping worker that re-announces rejoins exactly once.
+        Returns the addresses adopted this poll."""
+        if self.registry is None:
+            return []
+        adopted = []
+        for addr in self.registry.addresses(now):
+            if addr in self._adopted:
+                continue
+            if self.adopt_worker(addr, prior=prior) is not None:
+                adopted.append(addr)
+        return adopted
+
+    def adopt_worker(self, addr: str, *,
+                     prior: dict | None = None) -> Replica | None:
+        """Attach one registered worker at ``addr`` as a new replica on
+        the shard the live demand plan says needs capacity most
+        (:func:`live_demand_plan` over the served histogram, against a
+        budget of one more replica than the fleet currently runs).
+        ``prior`` — an earlier :meth:`stats` snapshot — windows the
+        histogram.  No flag changes, no restart: discovery is the
+        scale-out path."""
+        with self._lock:
+            if self._closed or addr in self._adopted:
+                return None
+            stats = self.stats()
+            have = {p["shard"]: p["replicas"] for p in stats["per_shard"]}
+            plan = live_demand_plan(stats, self.n_replicas + 1,
+                                    prior=prior)
+            shard = max(have, key=lambda s: (plan.get(s, 1) - have[s], -s))
+            backend, version = self._current_target()
+            try:
+                rep = self._spawn(shard, backend, version, addr=addr)
+            except Exception:
+                return None          # not reachable (yet): retry next poll
+            self.groups[shard].add(rep)
+            self._adopted.add(addr)
+            self.adoptions += 1
+            self.scale_outs += 1
+            return rep
 
     # ------------------------------------------------------------ serving
     def _submit(self, query, deadline_s=None, cls="interactive"):
@@ -857,6 +991,132 @@ class FleetRouter:
             self.migrations += 1
             return drained, added
 
+    # ------------------------------------------------ failover snapshot
+    def checkpoint(self, path) -> dict:
+        """Atomically snapshot the control-plane state — ring geometry,
+        live replica plan, attached worker addresses, swap-barrier
+        version and swap log, counters, autoscaler hysteresis — to
+        ``path`` (tmp + ``os.replace``, the RefitDaemon cursor
+        discipline, so a crash mid-write leaves the previous checkpoint
+        intact).  Workers are *not* in the snapshot: they live behind
+        the registry, which is exactly why a replacement router can
+        :meth:`restore` onto the same fleet."""
+        with self._lock:
+            state = {
+                "schema": 1, "kind": "fleet-checkpoint",
+                "n_shards": self.n_shards,
+                "vnodes": self._vnodes,
+                "weights": self._weights,
+                "transport": self.transport_kind,
+                "admission": self.admission,
+                "queue_depth": self.queue_depth,
+                "batch_max": self._replica_kw["batch_max"],
+                "window_s": self._replica_kw["window_s"],
+                "call_timeout_s": self._replica_kw["call_timeout_s"],
+                "class_fracs": self.class_fracs,
+                "read_barrier": self._read_barrier,
+                "swap_log": [[t, v] for t, v in self.swap_log],
+                "replica_plan": {
+                    str(g.shard): max(1, len([r for r in g.replicas
+                                              if not r.retired]))
+                    for g in self.groups},
+                "replica_addrs": {
+                    str(g.shard): [r.addr for r in g.replicas
+                                   if not r.retired
+                                   and getattr(r, "addr", None)]
+                    for g in self.groups},
+                "addr_pool": list(self._addr_pool),
+                "registry": str(self.registry.path)
+                if self.registry is not None else None,
+                "counters": {k: getattr(self, k) for k in (
+                    "crashes", "respawns", "rerouted", "scale_outs",
+                    "scale_ins", "migrations", "heartbeats",
+                    "heartbeat_replacements", "adoptions")},
+                "autoscaler": None if self.autoscaler is None else {
+                    "ticks": self.autoscaler.ticks,
+                    "hot": {str(k): v for k, v
+                            in self.autoscaler._hot.items()},
+                    "cold": {str(k): v for k, v
+                             in self.autoscaler._cold.items()},
+                    "cooldown": {str(k): v for k, v
+                                 in self.autoscaler._cooldown.items()},
+                    "last_hist": {str(k): v for k, v
+                                  in self.autoscaler._last_hist.items()},
+                },
+            }
+        path = Path(path)
+        tmp = path.with_name(path.name + ".tmp")
+        tmp.write_text(json.dumps(state, indent=1))
+        os.replace(tmp, path)
+        return state
+
+    @classmethod
+    def restore(cls, path, backend, *, service_factory=EstimatorService,
+                maxsize: int = 4096, abstain_fallback=None,
+                transport_kw=None, registry=None, autoscale=None,
+                heartbeat=None) -> "FleetRouter":
+        """Stand up a replacement router from a :meth:`checkpoint`: same
+        ring geometry and replica plan, reattached to the checkpointed
+        worker addresses (and any live registry leases — pass
+        ``registry`` to override the checkpointed path), counters and
+        swap log carried over.  ``backend`` must be at or beyond the
+        checkpointed read barrier — restoring an older model would break
+        the staleness contract every admitted request relies on, so that
+        is a ``ValueError``, not a silent downgrade."""
+        state = json.loads(Path(path).read_text())
+        if state.get("kind") != "fleet-checkpoint":
+            raise ValueError(f"{path} is not a fleet checkpoint")
+        barrier = state["read_barrier"]
+        have_v = getattr(backend, "model_version", 0) or 0
+        if barrier is not None and have_v < barrier:
+            raise ValueError(
+                f"backend model_version {have_v} is behind the "
+                f"checkpointed read barrier {barrier}: restoring would "
+                "serve answers older than requests already admitted "
+                "were promised")
+        plan = {int(s): n for s, n in state["replica_plan"].items()}
+        addrs = [a for s in sorted(state["replica_addrs"],
+                                   key=int)
+                 for a in state["replica_addrs"][s]]
+        addrs += [a for a in state.get("addr_pool", [])
+                  if a not in addrs]
+        if registry is None and state.get("registry"):
+            registry = state["registry"]
+        fleet = cls(backend, n_shards=state["n_shards"],
+                    replicas=plan, transport=state["transport"],
+                    service_factory=service_factory, maxsize=maxsize,
+                    queue_depth=state["queue_depth"],
+                    admission=state["admission"],
+                    batch_max=state["batch_max"],
+                    window_s=state["window_s"],
+                    vnodes=state["vnodes"], weights=state["weights"],
+                    abstain_fallback=abstain_fallback,
+                    class_fracs=state["class_fracs"],
+                    call_timeout_s=state["call_timeout_s"],
+                    autoscale=autoscale,
+                    worker_addrs=addrs or None,
+                    transport_kw=transport_kw, registry=registry,
+                    heartbeat=heartbeat)
+        with fleet._lock:
+            # counters and swap history continue, so observability (and
+            # the regression gate) sees one fleet, not two
+            for k, v in state.get("counters", {}).items():
+                if hasattr(fleet, k):
+                    setattr(fleet, k, v)
+            fleet.swap_log = [tuple(e) for e in state["swap_log"]]
+            fleet.swap_log.append((time.monotonic(),
+                                   fleet._read_barrier))
+            auto = state.get("autoscaler")
+            if fleet.autoscaler is not None and auto:
+                fleet.autoscaler.ticks = auto.get("ticks", 0)
+                for name in ("hot", "cold", "cooldown", "last_hist"):
+                    setattr(fleet.autoscaler, "_" + name,
+                            {int(k): v
+                             for k, v in auto.get(name, {}).items()})
+        if fleet.registry is not None:
+            fleet.poll_registry()     # leases announced since checkpoint
+        return fleet
+
     # -------------------------------------------------- observability
     def stats(self) -> dict:
         """Consistent fleet snapshot under the membership lock: per
@@ -913,7 +1173,7 @@ class FleetRouter:
             misses = sum(p["misses"] for p in per_shard)
             served = [p["served"] for p in per_replica] or [0]
             mean = sum(served) / len(served)
-            return {
+            return normalize_stats({
                 "n_shards": len(self.groups),
                 "n_replicas": sum(p["replicas"] for p in per_shard),
                 "transport": self.transport_kind,
@@ -938,10 +1198,15 @@ class FleetRouter:
                 "scale_outs": self.scale_outs,
                 "scale_ins": self.scale_ins,
                 "migrations": self.migrations,
+                "heartbeats": self.heartbeats,
+                "heartbeat_replacements": self.heartbeat_replacements,
+                "adoptions": self.adoptions,
+                "queued": sum(r.queue.qsize() for g in self.groups
+                              for r in g.replicas),
                 "served_skew": (max(served) / mean) if mean else 0.0,
                 "per_shard": per_shard,
                 "per_replica": per_replica,
-            }
+            })
 
     @property
     def pending(self) -> int:
@@ -954,6 +1219,8 @@ class FleetRouter:
             return
         if self.autoscaler is not None:
             self.autoscaler.stop()
+        if self.prober is not None:
+            self.prober.stop()
         self._closed = True
         with self._lock:
             reps = [r for g in self.groups for r in list(g.replicas)]
@@ -985,6 +1252,101 @@ class FleetRouter:
     def __exit__(self, *exc):
         self.close()
         return False
+
+
+# --------------------------------------------------------------- heartbeat
+class HeartbeatPolicy:
+    """Knobs for the router-side health prober.  A replica is *suspect*
+    after ``miss_after`` consecutive failed pings (each bounded by
+    ``timeout_s``) and is then replaced through the crash path.  Probes
+    share the transport's call lock with real traffic, so a ping can
+    only run *between* calls — a ping timeout means the worker is
+    genuinely hung or dead, not merely busy with our own batch."""
+
+    def __init__(self, *, interval_s: float = 0.25,
+                 timeout_s: float = 1.0, miss_after: int = 2):
+        if miss_after < 1:
+            raise ValueError("miss_after must be >= 1")
+        self.interval_s = interval_s
+        self.timeout_s = timeout_s
+        self.miss_after = miss_after
+
+
+class HealthProber:
+    """Active liveness for the fleet: ping every replica's worker on a
+    cadence and replace the ones that stop answering *before* a caller's
+    request lands on them and eats a :class:`TransportDead`.  Passive
+    detection (PR 8/9) only notices a death on the next unlucky call;
+    this closes the window for silently-dead workers — OOM-killed
+    processes, severed connections, partitioned hosts — that are idle at
+    the time they die.
+
+    :meth:`probe_once` is the whole policy as a plain call (what
+    deterministic tests and the bench drive); :meth:`start` runs it on a
+    thread, mirroring :class:`Autoscaler`."""
+
+    def __init__(self, fleet: FleetRouter,
+                 policy: HeartbeatPolicy | None = None):
+        self.fleet = fleet
+        self.policy = policy or HeartbeatPolicy()
+        self.probes = 0
+        self.replaced = 0
+        self.misses: dict[int, int] = {}     # rid -> consecutive misses
+        self._stop = threading.Event()
+        self._thread = None
+
+    def probe_once(self) -> list[tuple[int, int]]:
+        """One probe pass over every live replica; returns the
+        ``(shard, rid)`` pairs replaced this pass."""
+        pol = self.policy
+        replaced = []
+        for group in self.fleet.groups:
+            with group.lock:
+                reps = [r for r in group.replicas
+                        if not r.retired and not r.draining and not r.dead]
+            for rep in reps:
+                ok = False
+                try:
+                    reply = rep.transport.call({"op": "ping"},
+                                               timeout=pol.timeout_s)
+                    ok = bool(reply.get("ok"))
+                except Exception:        # TransportDead, auth, timeout…
+                    ok = False
+                self.probes += 1
+                self.fleet.heartbeats += 1
+                if ok:
+                    self.misses.pop(rep.rid, None)
+                    continue
+                n = self.misses.get(rep.rid, 0) + 1
+                self.misses[rep.rid] = n
+                if n >= pol.miss_after:
+                    self.misses.pop(rep.rid, None)
+                    if self.fleet._replace_suspect(rep):
+                        self.replaced += 1
+                        replaced.append((rep.shard, rep.rid))
+        return replaced
+
+    def _run(self):
+        while not self._stop.is_set():
+            try:
+                self.probe_once()
+            except Exception:                # pragma: no cover - defensive
+                pass
+            self._stop.wait(self.policy.interval_s)
+
+    def start(self) -> "HealthProber":
+        if self._thread is None or not self._thread.is_alive():
+            self._stop.clear()
+            self._thread = threading.Thread(target=self._run,
+                                            name="fleet-heartbeat",
+                                            daemon=True)
+            self._thread.start()
+        return self
+
+    def stop(self, timeout: float = 5.0) -> None:
+        self._stop.set()
+        if self._thread is not None and self._thread.is_alive():
+            self._thread.join(timeout)
 
 
 # -------------------------------------------------------------- autoscaler

@@ -44,6 +44,7 @@ from repro.core.estimator import EstimatorService
 from repro.core.tuner import fold_records
 from repro.data.executor import Environment
 from repro.eval.autorun import default_partitioning
+from repro.serve.stats import normalize_stats
 
 __all__ = ["DeadlineExceeded", "HashRing", "RouterClosed", "RouterRejected",
            "ServeResult", "Shard", "ShardRouter"]
@@ -554,7 +555,7 @@ class ShardRouter:
         ret = self._retired
         hits = sum(p["hits"] for p in per) + ret["hits"]
         misses = sum(p["misses"] for p in per) + ret["misses"]
-        return {"n_shards": len(self.shards),
+        return normalize_stats({"n_shards": len(self.shards),
                 "served": sum(p["served"] for p in per) + ret["served"],
                 "abstained": (sum(p["abstained"] for p in per)
                               + ret["abstained"]),
@@ -570,7 +571,8 @@ class ShardRouter:
                 "swaps": len(self.swap_log) - 1,
                 "crashes": self.crashes, "respawns": self.respawns,
                 "rerouted": self.rerouted,
-                "per_shard": per}
+                "queued": sum(sh.queue.qsize() for sh in self.shards),
+                "per_shard": per})
 
     @property
     def pending(self) -> int:

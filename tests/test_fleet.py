@@ -13,10 +13,13 @@ from repro.core.estimator import BlockSizeEstimator
 from repro.core.features import dataset_features
 from repro.core.log import ExecutionRecord
 from repro.data.executor import Environment
-from repro.serve import (AutoscalePolicy, Autoscaler, DeadlineExceeded,
-                         FleetRouter, HashRing, ShardRouter, ShedRejected,
-                         SocketTransport, TransportDead, live_demand_plan,
-                         make_diurnal_trace, proportional_plan, run_load,
+from repro.serve import (STATS_SCHEMA, AutoscalePolicy, Autoscaler,
+                         DeadlineExceeded, FleetRouter, FrameAuthError,
+                         HashRing, HeartbeatPolicy, LeaseKeeper, ShardRouter,
+                         ShedRejected, SocketTransport, StatsView,
+                         TransportDead, TransportSpec, WorkerRegistry,
+                         live_demand_plan, make_diurnal_trace, make_transport,
+                         normalize_stats, proportional_plan, run_load,
                          serve_socket_worker)
 from repro.serve.fleet import CLASS_PRIORITY
 from repro.serve.loadgen import (DIURNAL_PATTERNS, _percentile_ms,
@@ -714,3 +717,305 @@ def test_shifted_hotspot_trace_moves_the_hot_set():
     second = {repr(query) for kind, query, _ in trace[half:]
               if kind == "hot"}
     assert first and second and not (first & second)
+
+
+# -------------------------------------------------- control plane: registry
+def test_registry_lease_lifecycle(tmp_path):
+    reg = WorkerRegistry(tmp_path / "reg.jsonl")
+    reg.announce("h:1", ttl_s=10.0, now=100.0, caps={"cores": 8})
+    reg.announce("h:2", ttl_s=10.0, now=101.0)
+    assert reg.addresses(now=105.0) == ["h:1", "h:2"]
+    assert reg.lease("h:1")["caps"] == {"cores": 8}
+    # h:1 lapses at 110; a heartbeat extends it
+    reg.heartbeat("h:1", now=108.0)
+    assert reg.addresses(now=112.0) == ["h:1"]         # h:2 expired
+    assert [s["addr"] for s in reg.stale(now=112.0)] == ["h:2"]
+    reg.withdraw("h:1")
+    assert reg.addresses(now=112.0) == []
+
+
+def test_registry_stale_lease_expires_for_second_reader(tmp_path):
+    """Leases are a property of the *file*, not the instance: a second
+    reader folds the same announce/refresh events and applies the same
+    expiry clock."""
+    path = tmp_path / "reg.jsonl"
+    WorkerRegistry(path).announce("w:7", ttl_s=5.0, now=50.0)
+    reader = WorkerRegistry(path)
+    assert reader.addresses(now=54.0) == ["w:7"]
+    assert reader.addresses(now=55.0) == []            # ts + ttl <= now
+    # a refresh written by yet another instance revives it for everyone
+    WorkerRegistry(path).heartbeat("w:7", now=54.0)
+    assert reader.addresses(now=58.0) == ["w:7"]
+
+
+def test_lease_keeper_heartbeats_and_withdraws(tmp_path):
+    reg = WorkerRegistry(tmp_path / "reg.jsonl")
+    keeper = LeaseKeeper(reg, "k:1", ttl_s=0.5).start()
+    try:
+        deadline = time.time() + 10
+        first = reg.lease("k:1")["ts"]
+        while reg.lease("k:1")["ts"] == first and time.time() < deadline:
+            time.sleep(0.02)
+        assert reg.lease("k:1")["ts"] > first          # beat at least once
+    finally:
+        keeper.stop()
+    assert reg.addresses() == []                       # withdrawn on stop
+
+
+# --------------------------------------------- control plane: frame auth
+def test_frame_auth_roundtrip_tamper_and_missing_key():
+    msg = {"op": "predict", "queries": [[256, 16, "kmeans", {"w": 4}]]}
+    frame = encode_frame(msg, auth_key="s3cret")
+    assert frame[:1] == b"j"                           # signed json tag
+    assert decode_frame(frame, auth_key="s3cret") == msg
+    # tampered payload byte -> typed rejection, not a codec ValueError
+    bad = frame[:-1] + bytes([frame[-1] ^ 0xFF])
+    with pytest.raises(FrameAuthError, match="mismatch|tampered"):
+        decode_frame(bad, auth_key="s3cret")
+    with pytest.raises(FrameAuthError, match="wrong shared key|mismatch"):
+        decode_frame(frame, auth_key="other")
+    # keyless receiver cannot accept a signed frame
+    with pytest.raises(FrameAuthError, match="no auth key"):
+        decode_frame(frame)
+    # keyed receiver rejects plaintext frames
+    with pytest.raises(FrameAuthError, match="unauthenticated"):
+        decode_frame(encode_frame(msg), auth_key="s3cret")
+    # auth errors must never look like codec or transport failures
+    assert not issubclass(FrameAuthError, (ValueError, TransportDead))
+
+
+def test_frame_auth_covers_pickle_frames(fitted_est):
+    frame = encode_frame({"backend": fitted_est}, auth_key="k")
+    assert frame[:1] == b"p"
+    back = decode_frame(frame, auth_key="k")
+    assert back["backend"].predict_partitions(*q(256, 16)) == \
+        fitted_est.predict_partitions(*q(256, 16))
+    with pytest.raises(FrameAuthError):
+        decode_frame(frame, auth_key="wrong")
+
+
+def _keyed_worker(key):
+    srv = socketlib.create_server(("127.0.0.1", 0))
+    addr = "%s:%d" % srv.getsockname()[:2]
+    th = threading.Thread(target=serve_socket_worker, args=(srv,),
+                          kwargs={"auth_key": key}, daemon=True)
+    th.start()
+    return srv, addr
+
+
+@pytest.mark.timeout(600)
+def test_socket_rejects_forged_and_unauthenticated_peers(fitted_est):
+    srv, addr = _keyed_worker("fleet-secret")
+    try:
+        for bad_key in ("wrong-secret", None):
+            with pytest.raises(FrameAuthError):
+                SocketTransport(fitted_est, address=addr,
+                                auth_key=bad_key, connect_timeout_s=10.0)
+        # the right key serves normally on the same worker afterwards
+        tp = SocketTransport(fitted_est, address=addr,
+                             auth_key="fleet-secret", connect_timeout_s=10.0)
+        try:
+            r = tp.call({"op": "predict",
+                         "queries": [list(q(256, 16))]}, timeout=30)
+            assert r["ok"]
+        finally:
+            tp.close()
+    finally:
+        srv.close()
+
+
+# ---------------------------------------------- control plane: heartbeats
+def test_prober_replaces_silent_worker_before_callers_notice(fitted_est):
+    """silent_kill leaves the replica looking attached: no caller has
+    raced it yet.  The prober's pings must detect and replace it so the
+    next request is served by a fresh replica — rerouted stays 0."""
+    fleet = FleetRouter(fitted_est, n_shards=1, replicas=2,
+                        transport="loopback", window_s=0.001,
+                        heartbeat=HeartbeatPolicy(interval_s=0.05,
+                                                  timeout_s=2.0,
+                                                  miss_after=2))
+    try:
+        assert fleet.request(q(256, 16), timeout=30).value
+        fleet.silent_kill(0, replica=0)
+        deadline = time.time() + 30
+        while (fleet.stats()["heartbeat_replacements"] < 1
+               and time.time() < deadline):
+            fleet.prober.probe_once()
+            time.sleep(0.01)
+        st = fleet.stats()
+        assert st["heartbeat_replacements"] == 1
+        assert st["crashes"] == 1 and st["respawns"] == 1
+        assert fleet.request(q(256, 16), timeout=30).value
+        assert fleet.stats()["rerouted"] == 0          # nobody saw it die
+        assert fleet.stats()["heartbeats"] >= 2
+    finally:
+        fleet.close()
+
+
+@pytest.mark.timeout(600)
+def test_registry_adoption_and_flapping_rejoin(fitted_est, tmp_path):
+    """A registered worker is adopted without any --workers flag; when it
+    dies and later re-announces, one poll re-adopts it — and a poll with
+    nothing new never double-attaches."""
+    regpath = tmp_path / "reg.jsonl"
+    reg = WorkerRegistry(regpath)
+    srv, addr = _attached_worker()
+    reg.announce(addr, ttl_s=600.0)
+    spec = TransportSpec(kind="socket", registry=regpath)
+    fleet = FleetRouter(fitted_est, n_shards=1, transport=spec,
+                        window_s=0.001, call_timeout_s=30.0,
+                        heartbeat=HeartbeatPolicy(interval_s=0.05,
+                                                  timeout_s=5.0,
+                                                  miss_after=2))
+    try:
+        assert fleet.poll_registry() == [addr]
+        assert fleet.n_replicas == 2                   # local + adopted
+        assert fleet.poll_registry() == []             # no double-attach
+        # the worker flaps: server gone, established conn torn silently
+        srv.close()
+        fleet.silent_kill(0, replica=1)
+        deadline = time.time() + 60
+        while (fleet.stats()["heartbeat_replacements"] < 1
+               and time.time() < deadline):
+            fleet.prober.probe_once()
+            time.sleep(0.01)
+        assert fleet.stats()["heartbeat_replacements"] == 1
+        assert fleet.request(q(256, 16), timeout=60).value
+        # it comes back (new bind, new announce; the dead lease lingers
+        # un-servable) and one poll re-adopts exactly once
+        srv2, addr2 = _attached_worker()
+        try:
+            reg.announce(addr2, ttl_s=600.0)
+            assert fleet.poll_registry() == [addr2]
+            assert fleet.poll_registry() == []
+            assert fleet.stats()["adoptions"] == 2
+            assert fleet.request(q(512, 16), timeout=60).value
+        finally:
+            srv2.close()
+    finally:
+        fleet.close()
+
+
+# ------------------------------------- control plane: checkpoint/restore
+def test_checkpoint_restore_mid_trace_zero_lost(fitted_est, tmp_path):
+    est_v2 = fitted_est.snapshot()
+    assert est_v2.refit(synth_records("pca", SHAPES, best_pr=8))
+    assert est_v2.model_version > fitted_est.model_version
+
+    trace = make_diurnal_trace(400, universe(), seed=2)
+    half = len(trace) // 2
+    ckpt = tmp_path / "router.ckpt"
+    fleet = FleetRouter(fitted_est, n_shards=2, replicas={0: 2, 1: 1},
+                        transport="loopback", window_s=0.001)
+    try:
+        rep1 = run_load(fleet, trace[:half], n_clients=4)
+        fleet.swap(est_v2)                             # barrier advances
+        fleet.checkpoint(ckpt)
+        st1 = fleet.stats()
+    finally:
+        fleet.close()
+    assert rep1["errors"] == 0 and rep1["served"] == half
+
+    # the staleness contract survives the router: a backend older than
+    # the checkpointed read barrier is refused at restore
+    with pytest.raises(ValueError, match="read barrier"):
+        FleetRouter.restore(ckpt, fitted_est)
+
+    fleet2 = FleetRouter.restore(ckpt, est_v2)
+    try:
+        st2 = fleet2.stats()
+        assert st2["n_shards"] == 2
+        assert st2["n_replicas"] == st1["n_replicas"]
+        assert st2["read_barrier"] == est_v2.model_version
+        rep2 = run_load(fleet2, trace[half:], n_clients=4)
+    finally:
+        fleet2.close()
+    assert rep2["errors"] == 0 and rep2["served"] == len(trace) - half
+    assert rep2["staleness_violations"] == 0
+    lost = sum(r["requests"] - r["served"] - r["rejected"] - r["expired"]
+               for r in (rep1, rep2))
+    assert lost == 0
+
+
+# -------------------------------------- control plane: spec, stats, CLI
+def test_transport_spec_validation_and_factory(fitted_est, monkeypatch):
+    with pytest.raises(ValueError, match="unknown transport"):
+        TransportSpec(kind="bogus")
+    with pytest.raises(ValueError):
+        TransportSpec(kind="loopback", worker_addrs=("h:1",))
+    with pytest.raises(ValueError):
+        TransportSpec(kind="process", registry="reg.jsonl")
+    with pytest.raises(ValueError):
+        TransportSpec(kind="socket", worker_addrs=("no-port",))
+    spec = TransportSpec(kind="socket", worker_addrs="a:1, b:2")
+    assert spec.worker_addrs == ("a:1", "b:2")
+
+    monkeypatch.setenv("REPRO_AUTH_KEY", "env-key")
+    assert TransportSpec(kind="socket").resolved_auth_key() == b"env-key"
+    assert TransportSpec(kind="socket",
+                         auth_key="").resolved_auth_key() is None
+    assert TransportSpec(kind="socket",
+                         auth_key="mine").resolved_auth_key() == b"mine"
+
+    tp = make_transport(TransportSpec(kind="loopback"), fitted_est)
+    try:
+        r = tp.call({"op": "predict", "queries": [list(q(256, 16))]},
+                    timeout=30)
+        assert r["ok"]
+    finally:
+        tp.close()
+
+
+def test_fleet_accepts_transport_spec(fitted_est):
+    spec = TransportSpec(kind="loopback")
+    with FleetRouter(fitted_est, n_shards=2, transport=spec,
+                     window_s=0.001) as fleet:
+        assert fleet.request(q(256, 16), timeout=30).value
+        assert fleet.stats()["transport"] == "loopback"
+
+
+def test_stats_schema_normalization_and_compat_view(fitted_est):
+    norm = normalize_stats({"served": 5, "model_version": 3, "n_shards": 2})
+    assert norm["served"] == 5 and norm["crashes"] == 0
+    assert norm["read_barrier"] == 3                   # derived
+    assert norm["n_replicas"] == 2                     # derived
+    view = StatsView(norm)
+    assert view["version"] == 3                        # legacy spelling
+    assert view["n_workers"] == 2
+    assert view["pending"] == norm["queued"]
+    assert "served" in view and dict(view.to_dict())["served"] == 5
+
+    # every serving layer answers the full canonical schema
+    with ShardRouter(fitted_est, n_shards=2, window_s=0.001) as router:
+        router.request(q(256, 16), timeout=30)
+        st = router.stats()
+    missing = [k for k in STATS_SCHEMA if k not in st]
+    assert not missing, f"router stats missing canonical keys: {missing}"
+    with FleetRouter(fitted_est, n_shards=2, transport="loopback",
+                     window_s=0.001) as fleet:
+        fst = fleet.stats()
+    missing = [k for k in STATS_SCHEMA if k not in fst]
+    assert not missing, f"fleet stats missing canonical keys: {missing}"
+
+
+def test_unified_cli_dispatch():
+    from repro.launch.__main__ import _ALIASES, COMMANDS, main
+    assert {"tune", "evaluate", "serve-estimator", "serve-worker",
+            "dryrun", "mesh"} <= set(COMMANDS)
+    assert _ALIASES["serve_worker"] == "serve-worker"
+    assert main([]) == 0                               # usage, not a crash
+    assert main(["definitely-not-a-command"]) == 2
+
+
+@pytest.mark.timeout(600)
+def test_unified_cli_entrypoint_subprocess():
+    import subprocess
+    import sys as _sys
+    out = subprocess.run([_sys.executable, "-m", "repro", "--help"],
+                         capture_output=True, text=True, timeout=120)
+    assert out.returncode == 0
+    assert "serve-worker" in out.stdout
+    bad = subprocess.run([_sys.executable, "-m", "repro", "nope"],
+                         capture_output=True, text=True, timeout=120)
+    assert bad.returncode == 2
+    assert "unknown subcommand" in bad.stderr
